@@ -1,0 +1,81 @@
+"""alltoallv microbenchmarks — the TPU analogue of the paper's Fig 6.
+
+The paper's Fig 6 compares RDMA-put vs two-sided MPI transport.  On TPU the
+transport is fixed (compiler-scheduled ICI), so the degrees of freedom are
+(a) the pack/unpack machinery around the padded exchange and (b) the padding
+waste raggedness costs on a static-shape fabric:
+
+  6a analogue: pack_ragged wall time + wire-byte efficiency across message
+               sizes (1 row .. 64k rows per destination).
+  6b analogue: per-call overhead of the BLS ring machinery across call
+               counts (the paper's repetition sweep), bound 0 vs 4.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.alltoallv import dispatch_stats, pack_ragged
+from repro.core.bls import bls_pipeline, reference_loop
+
+
+def _timeit(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_pack_sizes(csv=True):
+    """Fig 6a analogue: message-size sweep of the ragged pack."""
+    rows = []
+    n_dest, d = 8, 64
+    for rows_per_dest in (1, 16, 256, 4096, 65536 // 8):
+        n = n_dest * rows_per_dest
+        key = jax.random.PRNGKey(0)
+        data = jax.random.normal(key, (n, d))
+        dest = jnp.asarray(np.random.default_rng(0).integers(0, n_dest, n))
+        cap = int(rows_per_dest * 1.5)
+        packed = jax.jit(lambda x, de: pack_ragged(x, de, n_dest, cap))
+        us = _timeit(packed, data, dest)
+        buf, counts = packed(data, dest)
+        st = dispatch_stats(counts, cap, d * 4)
+        rows.append((rows_per_dest, us, st.padding_fraction))
+        if csv:
+            print(f"alltoallv/pack_rows{rows_per_dest},{us:.1f},"
+                  f"pad_frac={st.padding_fraction:.3f}")
+    return rows
+
+
+def bench_bls_overhead(csv=True):
+    """Fig 6b analogue: per-call overhead of the ring machinery vs call
+    count, bound 0 (sync semantics) vs 4."""
+    rows = []
+    payload = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+    a = lambda x: (x * 2.0, x.sum(-1))
+    c = lambda p: jnp.roll(p, 1, 0)
+    b = lambda r, s: r.sum(-1) + s
+    for n_calls in (8, 64, 512):
+        xs = jnp.broadcast_to(payload, (n_calls, *payload.shape))
+        for k in (0, 4):
+            f = jax.jit(lambda xs, k=k: bls_pipeline(a, c, b, xs, k)[0])
+            us = _timeit(f, xs) / n_calls
+            rows.append((n_calls, k, us))
+            if csv:
+                print(f"alltoallv/bls_calls{n_calls}_k{k},{us:.2f},"
+                      f"per_call_overhead")
+    return rows
+
+
+def main():
+    bench_pack_sizes()
+    bench_bls_overhead()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Kernel-level benchmarks: the XLA chunked implementations vs their exact
+recurrent oracles on this host (wall time), plus the VMEM accounting that
+motivates the Pallas versions on TPU."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _timeit(fn, *args, reps=5):
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_wkv(csv=True):
+    from repro.models.rwkv6 import wkv_chunked, wkv_recurrent
+    b, s, h, K = 2, 512, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    r = jax.random.normal(ks[0], (b, s, h, K))
+    k = jax.random.normal(ks[1], (b, s, h, K))
+    v = jax.random.normal(ks[2], (b, s, h, K))
+    lw = -jnp.exp(jax.random.normal(ks[3], (b, s, h, K)))
+    u = jax.random.normal(ks[4], (h, K)) * 0.5
+    s0 = jnp.zeros((b, h, K, K))
+    t_rec = _timeit(jax.jit(lambda *a: wkv_recurrent(*a)[0]),
+                    r, k, v, lw, u, s0)
+    rows = [("recurrent", t_rec)]
+    if csv:
+        print(f"kernels/wkv_recurrent_s{s},{t_rec:.0f},exact_scan")
+    for chunk in (16, 32, 64):
+        t = _timeit(jax.jit(lambda *a, c=chunk: wkv_chunked(*a, chunk=c)[0]),
+                    r, k, v, lw, u, s0)
+        rows.append((f"chunk{chunk}", t))
+        if csv:
+            # decay-tensor bytes the Pallas kernel keeps in VMEM instead
+            hbm = b * h * (s // chunk) * chunk * chunk * K * 4
+            print(f"kernels/wkv_chunk{chunk}_s{s},{t:.0f},"
+                  f"xla_decay_tensor_bytes={hbm}")
+    return rows
+
+
+def bench_ssd(csv=True):
+    from repro.models.mamba2 import ssd_chunked, ssd_recurrent
+    b, s, nh, p, n = 2, 512, 8, 64, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    x = jax.random.normal(ks[0], (b, s, nh, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, nh)))
+    B = jax.random.normal(ks[2], (b, s, n))
+    C = jax.random.normal(ks[3], (b, s, n))
+    A_log = jax.random.normal(ks[4], (nh,)) * 0.5
+    D = jnp.ones((nh,))
+    st = jnp.zeros((b, nh, p, n))
+    t_rec = _timeit(jax.jit(lambda *a: ssd_recurrent(*a)[0]),
+                    x, dt, A_log, B, C, D, st)
+    if csv:
+        print(f"kernels/ssd_recurrent_s{s},{t_rec:.0f},exact_scan")
+    for chunk in (32, 64, 128):
+        t = _timeit(jax.jit(lambda *a, c=chunk: ssd_chunked(*a, chunk=c)[0]),
+                    x, dt, A_log, B, C, D, st)
+        if csv:
+            print(f"kernels/ssd_chunk{chunk}_s{s},{t:.0f},chunk_parallel")
+
+
+def bench_dot_interaction(csv=True):
+    from repro.kernels.ref import dot_interaction_ref
+    z = jax.random.normal(jax.random.PRNGKey(2), (1024, 27, 64))
+    t = _timeit(jax.jit(dot_interaction_ref), z)
+    if csv:
+        print(f"kernels/dot_interaction_b1024,{t:.0f},xla_ref")
+
+
+def main():
+    bench_wkv()
+    bench_ssd()
+    bench_dot_interaction()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,303 @@
+"""Post-SPMD HLO analysis: FLOPs / bytes / collective wire bytes per device.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified
+empirically — a 4-layer scan reports the same flops as a 1-layer scan), so a
+roofline built on it would be off by the layer count.  This walker parses
+``compiled.as_text()`` instead:
+
+  * per-computation symbol tables resolve operand shapes;
+  * dot FLOPs = 2 * prod(out_shape) * contraction_size;
+  * bytes accessed = out + operand bytes of non-trivial top-level ops
+    (fusions count as single instructions — their internals are
+    registers/VMEM, exactly how HloCostAnalysis treats them);
+  * collective wire bytes use ring-model factors on the replica-group size;
+  * while bodies are multiplied by ``known_trip_count`` from backend_config
+    (fallback: constant found in the condition computation).
+
+All quantities are PER DEVICE (the module is the post-partitioning SPMD
+program).  CPU-backend fusion/layout differs from TPU — recorded caveat; the
+dominant dot/collective terms are partitioning-determined, not backend-
+determined.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "partition-id", "replica-id",
+               "iota", "while", "conditional", "call"}
+
+# Raw elementwise ops that XLA:TPU fuses into neighbours — the CPU backend
+# leaves many unfused, so counting their operands would overstate TPU HBM
+# traffic.  "fused" byte accounting skips them; "strict" counts everything.
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "convert", "select",
+    "broadcast", "exponential", "exponential-minus-one", "tanh", "maximum",
+    "minimum", "compare", "and", "or", "not", "xor", "negate", "rsqrt",
+    "sqrt", "log", "log-plus-one", "power", "abs", "floor", "ceil", "sign",
+    "cosine", "sine", "clamp", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "reshape", "transpose", "reverse", "pad",
+    "slice", "concatenate", "reduce", "map", "atan2", "expm1", "log1p",
+    "is-finite", "popcnt", "remainder",
+}
+
+
+@dataclasses.dataclass
+class Shape:
+    dtype: str
+    dims: tuple
+
+    @property
+    def bytes(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n * _DTYPE_BYTES.get(self.dtype, 4)
+
+    @property
+    def elems(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shapes: list           # output shapes (tuple outputs -> several)
+    op: str
+    operands: list
+    attrs: str
+
+
+@dataclasses.dataclass
+class Stats:
+    flops: float = 0.0
+    bytes: float = 0.0          # strict: every top-level instruction
+    bytes_fused: float = 0.0    # TPU-fusion model: elementwise chains free
+    collective_bytes: float = 0.0
+    per_collective: dict = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, o: "Stats"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.bytes_fused += o.bytes_fused
+        self.collective_bytes += o.collective_bytes
+        for k, v in o.per_collective.items():
+            self.per_collective[k] = self.per_collective.get(k, 0.0) + v
+        return self
+
+    def scaled(self, f: float) -> "Stats":
+        return Stats(self.flops * f, self.bytes * f, self.bytes_fused * f,
+                     self.collective_bytes * f,
+                     {k: v * f for k, v in self.per_collective.items()})
+
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+
+
+def _parse_shapes(type_str: str) -> list:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dims = tuple(int(d) for d in m.group(2).split(",") if d) \
+            if m.group(2) else ()
+        out.append(Shape(m.group(1), dims))
+    return out
+
+
+def _parse_operands(rest: str) -> tuple[list, str]:
+    """Split the operand list from trailing attrs (depth-0 close paren)."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                ops = re.findall(r"%([\w\.\-]+)", rest[:i])
+                return ops, rest[i + 1:]
+    return re.findall(r"%([\w\.\-]+)", rest), ""
+
+
+def parse_module(text: str) -> dict:
+    comps: dict = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line.strip())
+            if m and "{" in line:
+                cur = m.group(1)
+                comps[cur] = {"instrs": {}, "order": [],
+                              "entry": line.lstrip().startswith("ENTRY")}
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, tstr, op, rest = m.groups()
+        operands, attrs = _parse_operands(rest)
+        comps[cur]["instrs"][name] = Instr(name, _parse_shapes(tstr), op,
+                                           operands, attrs)
+        comps[cur]["order"].append(name)
+    return comps
+
+
+def _group_size(attrs: str, num_partitions: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return num_partitions
+
+
+def _wire_bytes(op: str, out_bytes: float, in_bytes: float, n: int) -> float:
+    """Ring-model per-device wire bytes."""
+    if n <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * out_bytes * (n - 1) / n
+    if op == "all-gather":
+        return out_bytes * (n - 1) / n
+    if op == "reduce-scatter":
+        return in_bytes * (n - 1) / n
+    if op == "all-to-all":
+        return out_bytes * (n - 1) / n
+    if op == "collective-permute":
+        return out_bytes
+    return 0.0
+
+
+def _trip_count(instr: Instr, comps: dict) -> int:
+    m = re.search(r'known_trip_count.*?"n":"(\d+)"', instr.attrs)
+    if m:
+        return int(m.group(1))
+    m = re.search(r"condition=%([\w\.\-]+)", instr.attrs)
+    if m and m.group(1) in comps:
+        for i in comps[m.group(1)]["instrs"].values():
+            if i.op == "constant":
+                c = re.search(r"constant\((\d+)\)", i.attrs) or \
+                    re.search(r"\((\d+)\)", i.attrs)
+                if c:
+                    return int(c.group(1))
+    return 1
+
+
+def _dot_flops(instr: Instr, table: dict) -> float:
+    out_elems = sum(s.elems for s in instr.shapes)
+    lhs = table.get(instr.operands[0]) if instr.operands else None
+    if lhs is None or not lhs.shapes:
+        return 0.0
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.attrs)
+    contract = 1
+    if m and m.group(1):
+        for d in m.group(1).split(","):
+            contract *= lhs.shapes[0].dims[int(d)]
+    return 2.0 * out_elems * contract
+
+
+def _comp_stats(cname: str, comps: dict, num_partitions: int,
+                cache: dict) -> Stats:
+    if cname in cache:
+        return cache[cname]
+    cache[cname] = Stats()  # break cycles defensively
+    comp = comps[cname]
+    table = comp["instrs"]
+    st = Stats()
+    for iname in comp["order"]:
+        ins = table[iname]
+        out_b = sum(s.bytes for s in ins.shapes)
+        in_b = sum(sum(s.bytes for s in table[o].shapes)
+                   for o in ins.operands if o in table)
+        if ins.op == "dot":
+            st.flops += _dot_flops(ins, table)
+            st.bytes += out_b + in_b
+            st.bytes_fused += out_b + in_b
+        elif ins.op in _COLLECTIVES or \
+                ins.op in tuple(c + "-start" for c in _COLLECTIVES):
+            op = ins.op.replace("-start", "")
+            n = _group_size(ins.attrs, num_partitions)
+            wb = _wire_bytes(op, out_b, in_b, n)
+            st.collective_bytes += wb
+            st.per_collective[op] = st.per_collective.get(op, 0.0) + wb
+            st.bytes += out_b + in_b
+            st.bytes_fused += out_b + in_b
+        elif ins.op == "while":
+            body = re.search(r"body=%([\w\.\-]+)", ins.attrs)
+            trip = _trip_count(ins, comps)
+            if body and body.group(1) in comps:
+                st += _comp_stats(body.group(1), comps, num_partitions,
+                                  cache).scaled(trip)
+        elif ins.op in ("fusion", "call", "custom-call"):
+            called = re.search(r"calls=%([\w\.\-]+)", ins.attrs)
+            if called and called.group(1) in comps:
+                sub = _comp_stats(called.group(1), comps, num_partitions,
+                                  cache)
+                st.flops += sub.flops          # dots inside fusions
+                st.collective_bytes += sub.collective_bytes
+                for k, v in sub.per_collective.items():
+                    st.per_collective[k] = st.per_collective.get(k, 0) + v
+            st.bytes += out_b + in_b           # fusion = one HBM round trip
+            st.bytes_fused += out_b + in_b
+        elif ins.op == "conditional":
+            for b in re.findall(r"(?:branch_computations=\{|true_computation=%|false_computation=%)([\w\.\-,%]+)",
+                                ins.attrs):
+                for sub in b.replace("%", "").split(","):
+                    if sub in comps:
+                        st += _comp_stats(sub, comps, num_partitions, cache)
+            st.bytes += out_b + in_b
+            st.bytes_fused += out_b + in_b
+        elif ins.op in _SKIP_BYTES:
+            continue
+        else:
+            st.bytes += out_b + in_b
+            if ins.op not in _ELEMENTWISE:
+                st.bytes_fused += out_b + in_b
+    cache[cname] = st
+    return st
+
+
+def analyze(hlo_text: str, num_partitions: int) -> Stats:
+    comps = parse_module(hlo_text)
+    entry = next((c for c, v in comps.items() if v["entry"]), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    return _comp_stats(entry, comps, num_partitions, {})
+
+
+def roofline_terms(stats: Stats, *, peak_flops: float = 197e12,
+                   hbm_bw: float = 819e9, ici_bw: float = 4 * 50e9) -> dict:
+    """Seconds per term on one TPU v5e chip (4 ICI links usable).  The
+    memory term uses the TPU-fusion byte model; the strict (unfused, CPU-
+    backend-literal) figure is reported alongside."""
+    t_compute = stats.flops / peak_flops
+    t_memory = stats.bytes_fused / hbm_bw
+    t_collective = stats.collective_bytes / ici_bw
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    terms["bottleneck"] = dom.replace("_s", "")
+    terms["memory_strict_s"] = stats.bytes / hbm_bw
+    terms["step_time_lower_bound_s"] = bound
+    terms["roofline_fraction_of_bound"] = (
+        t_compute / bound if bound > 0 else 0.0)
+    return terms

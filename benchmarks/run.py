@@ -1,0 +1,35 @@
+"""Benchmark harness: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Roofline tables come from the
+dry-run JSONs when present (run ``python -m repro.launch.dryrun`` first).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import (bench_alltoallv, bench_dlrm, bench_kernels,
+                            bench_sim)
+
+    bench_sim.run()            # paper Figs 7 & 8 (+ straggler control)
+    bench_alltoallv.main()     # paper Fig 6 analogue
+    bench_dlrm.run()           # §VI-B with measured stage times
+    bench_kernels.main()       # kernel-level chunked-vs-recurrent
+
+    # roofline tables (require a prior dry-run)
+    for tag in ("16x16", "2x16x16"):
+        if os.path.exists(os.path.join("results", f"dryrun_{tag}.json")):
+            from benchmarks import roofline
+            roofline.report(tag)
+        else:
+            print(f"# roofline {tag}: run `PYTHONPATH=src python -m "
+                  f"repro.launch.dryrun --both` first")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Fault-tolerance demo: train with async checkpoints, inject a node
+failure mid-run, recover onto a shrunk mesh from the last checkpoint, and
+finish — state intact, failed step retried.
+
+Run:  PYTHONPATH=src python examples/failure_recovery.py
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime import checkpoint as C
+from repro.runtime.elastic import ElasticRunner, NodeFailure
+
+# toy "model": quadratic bowl; state = (params, step_count)
+TARGET = jnp.asarray([3.0, -2.0, 0.5, 1.0])
+
+
+def step_fn(state, batch, mesh):
+    params, n = state
+    grad = 2 * (params - TARGET) + 0.01 * batch
+    return (params - 0.1 * grad, n + 1)
+
+
+def main():
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        state = (jnp.zeros(4), jnp.int32(0))
+        batches = [jnp.float32(i % 3 - 1) for i in range(40)]
+
+        killed = {"done": False}
+
+        def fault(step):
+            if step == 25 and not killed["done"]:
+                killed["done"] = True
+                survivors = jax.devices()[: max(1, len(jax.devices()) // 2)]
+                print(f"!! injecting node failure at step {step}: "
+                      f"{len(survivors)} devices survive")
+                raise NodeFailure(survivors)
+
+        runner = ElasticRunner(make_shardings=lambda mesh: None,
+                               ckpt_dir=ckpt_dir)
+        state, mesh, recoveries = runner.run(
+            state, lambda s: iter(batches[s:]), step_fn, None, fault=fault,
+            ckpt_every=10)
+        params, n = state
+        print(f"finished: {int(n)} steps applied, {recoveries} recovery, "
+              f"params={params}")
+        assert int(n) == 40, "every step must be (re)applied, none skipped"
+        assert jnp.allclose(params, TARGET, atol=0.1)
+        print(f"last committed checkpoint: step {C.latest_step(ckpt_dir)}")
+        print("recovery OK — no step lost, state restored from checkpoint")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""alltoallv on a TPU mesh: ragged exchange as counts + bucket-padded payload.
+
+XLA collectives need static shapes, so the paper's variable message sizes
+become *padding*: each (source, destination) pair gets a fixed ``cap``-row
+bucket plus an exchanged count.  ``dispatch_stats`` quantifies the padding
+waste — the TPU-side analogue of the paper's Fig. 6 message-size effects.
+
+Two flavours used by DLRM (models/dlrm.py):
+  * ``butterfly_pooled``  — reference-DLRM exchange of POOLED embedding-bag
+    vectors: a plain equal-split all_to_all (batch split, table concat).
+  * ``alltoallv_raw``     — the paper's Setting-1 style exchange of UNPOOLED
+    vectors padded to ``max_hot`` (message raggedness -> padding waste).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import partition
+
+
+@dataclasses.dataclass(frozen=True)
+class A2AVStats:
+    payload_bytes: int      # bytes actually exchanged (padded buffers)
+    useful_bytes: int       # bytes of real (non-padding) rows
+    padding_fraction: float
+
+
+def butterfly_pooled(x, axis: str = "model"):
+    """Reference-DLRM butterfly: x (B, T_local, D) per shard, batch split /
+    table concat -> (B / P, T_local * P, D).  Equal splits; raggedness only
+    via table-count imbalance which the caller pads into T_local."""
+    return jax.lax.all_to_all(x, axis, split_axis=0, concat_axis=1,
+                              tiled=True)
+
+
+def alltoallv_raw(send, counts, axis: str = "model"):
+    """send: (P, cap, D) padded per-destination buckets; counts: (P,) int32
+    valid rows per bucket.  Returns (recv (P, cap, D), recv_counts (P,)).
+
+    recv[q] holds the rows source q sent to this shard, of which
+    recv_counts[q] are valid.  Semantically MPI_Alltoallv with bucket
+    padding; the counts exchange is the (tiny) analogue of the paper's
+    request-size negotiation.
+    """
+    recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0,
+                              tiled=True)
+    recv_counts = jax.lax.all_to_all(counts.reshape(-1, 1), axis, 0, 0,
+                                     tiled=True).reshape(-1)
+    return recv, recv_counts
+
+
+def pack_ragged(rows, dest, n_dest: int, cap: int):
+    """Scatter rows (N, D) with destinations dest (N,) into per-destination
+    buckets (n_dest, cap, D) + counts.  Rows beyond cap are dropped (the
+    static-shape price of raggedness; count the drops in tests)."""
+    n, d = rows.shape
+    order = jnp.argsort(dest, stable=True)
+    ds, rs = dest[order], rows[order]
+    starts = jnp.searchsorted(ds, jnp.arange(n_dest), side="left")
+    pos = jnp.arange(n) - starts[jnp.clip(ds, 0, n_dest - 1)]
+    valid = (ds >= 0) & (ds < n_dest) & (pos < cap)
+    buf = jnp.zeros((n_dest, cap, d), rows.dtype)
+    buf = buf.at[jnp.where(valid, ds, n_dest),
+                 jnp.where(valid, pos, 0)].set(rs, mode="drop")
+    counts = jnp.bincount(jnp.where(valid, ds, n_dest), length=n_dest + 1)
+    return buf, counts[:n_dest].astype(jnp.int32)
+
+
+def dispatch_stats(counts, cap: int, row_bytes: int) -> A2AVStats:
+    """Padding-waste accounting for one alltoallv call (host-side)."""
+    counts = jax.device_get(counts)
+    total_slots = counts.size * cap
+    useful = int(counts.sum())
+    return A2AVStats(
+        payload_bytes=total_slots * row_bytes,
+        useful_bytes=useful * row_bytes,
+        padding_fraction=1.0 - useful / max(total_slots, 1),
+    )

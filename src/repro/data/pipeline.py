@@ -1,0 +1,58 @@
+"""Host-side input pipeline: background prefetch with bounded queue.
+
+The paper preloads datasets before measuring ("the generation of on-the-fly
+randomized data proved exceptionally slow") — ``Preloader`` does that;
+``Prefetcher`` is the production path (double/triple buffering so the host
+never starves the device stream, the first line of straggler mitigation at
+pod scale).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+
+class Prefetcher:
+    """Wrap an iterator with a daemon thread + bounded queue."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._sentinel = object()
+        self._err: Optional[BaseException] = None
+
+        def worker():
+            try:
+                for item in it:
+                    self._q.put(item)
+            except BaseException as e:  # surfaced on next()
+                self._err = e
+            finally:
+                self._q.put(self._sentinel)
+
+        self._thread = threading.Thread(target=worker, daemon=True)
+        self._thread.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._sentinel:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+
+class Preloader:
+    """Materialise n batches up front (the paper's measurement protocol)."""
+
+    def __init__(self, make: Callable[[int], object], n: int):
+        self.batches = [make(i) for i in range(n)]
+
+    def __iter__(self):
+        return iter(self.batches)
+
+    def __len__(self):
+        return len(self.batches)

@@ -1,0 +1,56 @@
+"""Jit'd dispatch wrappers over the Pallas kernels.
+
+On TPU the Pallas lowering runs natively; everywhere else (this CPU container,
+unit tests) ``interpret=True`` executes the kernel body in Python so the exact
+same code path is validated against the ref.py oracles.  ``impl='ref'`` forces
+the oracle (used for A/B in benchmarks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.dot_interaction import dot_interaction as _dot_pallas
+from repro.kernels.embedding_bag import embedding_bag as _bag_pallas
+from repro.kernels.flash_attention import flash_attention_pallas as _fa_pallas
+from repro.kernels.rwkv6_wkv import wkv_chunked_pallas as _wkv_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "batch_tile"))
+def dot_interaction_op(z, *, impl: str = "auto", batch_tile: int = 128):
+    if impl == "ref":
+        return _ref.dot_interaction_ref(z)
+    return _dot_pallas(z, batch_tile=batch_tile, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "batch_tile"))
+def embedding_bag_op(table, idx, mask, *, impl: str = "auto",
+                     batch_tile: int = 64):
+    if impl == "ref":
+        return _ref.embedding_bag_ref(table, idx, mask)
+    return _bag_pallas(table, idx, mask, batch_tile=batch_tile,
+                       interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "chunk"))
+def rwkv6_wkv_op(r, k, v, logw, u, state0, *, impl: str = "auto",
+                 chunk: int = 64):
+    if impl == "ref":
+        return _ref.rwkv6_wkv_ref(r, k, v, logw, u, state0)
+    return _wkv_pallas(r, k, v, logw, u, state0, chunk=chunk,
+                       interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "cq", "ck"))
+def flash_attention_op(q, k, v, *, causal: bool = True, window: int = 0,
+                       softcap: float = 0.0, cq: int = 256, ck: int = 256):
+    return _fa_pallas(q, k, v, causal=causal, window=window,
+                      softcap=softcap, cq=cq, ck=ck,
+                      interpret=not _on_tpu())

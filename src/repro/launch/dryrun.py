@@ -1,0 +1,150 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^^ MUST precede every other import — jax locks the device count on first
+# backend initialisation.  Do NOT set this anywhere global (conftest /
+# pyproject): smoke tests and benches must see 1 device.
+
+"""Multi-pod dry-run: prove the distribution config is coherent without
+hardware.  For every (architecture × input shape) cell this lowers AND
+compiles the step program against the production meshes:
+
+    single pod : (data=16, model=16)          = 256 chips
+    multi pod  : (pod=2, data=16, model=16)   = 512 chips
+
+and records memory_analysis / cost_analysis / parsed-HLO roofline terms into
+results/dryrun_<mesh>.json (consumed by benchmarks/roofline.py and
+EXPERIMENTS.md).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+        [--multi-pod | --both] [--out results/]
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import base as cb  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import build_cell, cells_for  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+
+
+def _mem_dict(mem) -> dict:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh, multi_pod: bool,
+             rules_overrides=None) -> dict:
+    from benchmarks import hlo_analysis
+
+    t0 = time.time()
+    cell = build_cell(arch, shape_name, mesh, overrides=rules_overrides)
+    lowered = cell.lower(mesh)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = _mem_dict(compiled.memory_analysis())
+    cost = dict(compiled.cost_analysis() or {})
+    stats = hlo_analysis.analyze(compiled.as_text(),
+                                 num_partitions=mesh.size)
+    terms = hlo_analysis.roofline_terms(stats)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem,
+        "xla_cost_analysis": {k: float(v) for k, v in cost.items()
+                              if k in ("flops", "bytes accessed")},
+        "hlo_flops": stats.flops,
+        "hlo_bytes": stats.bytes,
+        "hlo_bytes_fused": stats.bytes_fused,
+        "collective_bytes": stats.collective_bytes,
+        "per_collective": stats.per_collective,
+        "roofline": terms,
+    }
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both", action="store_true")
+    ap.add_argument("--out", default="results")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, (
+        f"dry-run needs 512 placeholder devices, got {len(jax.devices())}")
+
+    meshes = []
+    if args.both or not args.multi_pod:
+        meshes.append((False, make_production_mesh(multi_pod=False)))
+    if args.both or args.multi_pod:
+        meshes.append((True, make_production_mesh(multi_pod=True)))
+
+    archs = [args.arch] if args.arch else cb.list_archs()
+    os.makedirs(args.out, exist_ok=True)
+
+    for multi_pod, mesh in meshes:
+        tag = "2x16x16" if multi_pod else "16x16"
+        path = os.path.join(args.out, f"dryrun_{tag}.json")
+        results = []
+        if os.path.exists(path):
+            results = json.load(open(path))
+        done = {(r["arch"], r["shape"]) for r in results
+                if r.get("status") == "ok"}
+        for arch in archs:
+            for shape, skip in cells_for(arch):
+                if args.shape and shape.name != args.shape:
+                    continue
+                if (arch, shape.name) in done:
+                    print(f"[skip-done] {arch}/{shape.name} @ {tag}")
+                    continue
+                if skip:
+                    rec = {"arch": arch, "shape": shape.name, "mesh": tag,
+                           "status": "skipped", "reason": skip}
+                    print(f"[skipped]  {arch}/{shape.name} @ {tag}: {skip}")
+                else:
+                    print(f"[lowering] {arch}/{shape.name} @ {tag} ...",
+                          flush=True)
+                    try:
+                        rec = run_cell(arch, shape.name, mesh, multi_pod)
+                        r = rec["roofline"]
+                        print(f"  ok: compile={rec['compile_s']}s "
+                              f"compute={r['compute_s']:.4f}s "
+                              f"memory={r['memory_s']:.4f}s "
+                              f"collective={r['collective_s']:.4f}s "
+                              f"bound={r['bottleneck']}", flush=True)
+                    except Exception as e:  # record and continue
+                        rec = {"arch": arch, "shape": shape.name,
+                               "mesh": tag, "status": "error",
+                               "error": f"{type(e).__name__}: {e}",
+                               "trace": traceback.format_exc()[-2000:]}
+                        print(f"  ERROR {type(e).__name__}: {e}", flush=True)
+                results = [r for r in results
+                           if not (r["arch"] == arch
+                                   and r["shape"] == shape.name)]
+                results.append(rec)
+                json.dump(results, open(path, "w"), indent=1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,294 @@
+"""Dry-run cell construction: per (arch × shape × mesh) produce the step
+function, ShapeDtypeStruct inputs (weak-type-correct, shardable, no device
+allocation) and NamedShardings.
+
+Sharding policy (DESIGN.md §6), resolved dynamically per arch:
+  * weights: TP over ``model`` on flat head/mlp/vocab/expert dims whenever the
+    dim divides the axis; FSDP over ``data`` on the d_model dim for training.
+  * activations: batch over (pod, data); head-count dims over ``model`` only
+    when the *count* divides the axis (else replicated KV/Q heads — the
+    standard TP16-with-kv8 fallback).
+  * KV caches: sequence-sharded over ``model`` (decode_32k) or
+    (data, model) (long_500k, batch=1).
+  * whisper-tiny: pure DP (37M params; TP over a 16-way axis would shard
+    6-head attention unevenly for zero benefit).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cb
+from repro.configs.base import DLRMConfig, ModelConfig, ShapeConfig
+from repro.models import api, dlrm as dlrm_mod
+from repro.sharding import partition
+from repro.train import optimizer as opt_mod
+from repro.train import steps as steps_mod
+
+F32, BF16, I32 = jnp.float32, jnp.bfloat16, jnp.int32
+
+# Decoder lengths for the enc-dec (whisper) cells: the assigned seq_len is
+# the ACOUSTIC length; targets use whisper's own max_target_positions.
+WHISPER_DEC_TRAIN = 448
+WHISPER_DEC_PREFILL = 256
+WHISPER_ENC_DECODE = 1536  # ~whisper's 1500-frame cap, padded to shard 16-way
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# rules
+# ---------------------------------------------------------------------------
+
+
+def arch_rules(cfg, mesh, shape: ShapeConfig) -> dict:
+    rules: dict = {}
+    md = mesh.shape["model"]
+    if isinstance(cfg, DLRMConfig):
+        return rules  # DLRM shards via explicit shard_map specs
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cfg.name.startswith("whisper"):
+        for r in ("heads", "kv_heads", "mlp", "vocab", "experts",
+                  "emb_vocab", "emb_col"):
+            rules[r] = None
+    else:
+        g = h // kh
+        rules["heads"] = "model" if (h * hd) % md == 0 else None
+        rules["kv_heads"] = "model" if (kh * hd) % md == 0 else None
+        rules["act_heads"] = "model" if h % md == 0 else None
+        # score-tensor sharding: exactly one of kv / group / q-chunk axes
+        rules["act_kv"] = "model" if kh % md == 0 else None
+        rules["act_groups"] = "model" if (kh % md and g % md == 0) else None
+        rules["act_qchunk"] = "model" if (kh % md and g % md) else None
+        rules["mlp"] = "model" if cfg.d_ff % md == 0 else None
+        rules["vocab"] = "model" if cfg.vocab_size % md == 0 else None
+        rules["emb_vocab"] = rules["vocab"]
+    # NOTE (§Perf iter 4): column-sharding the embedding table in training
+    # (emb_vocab=None, emb_col=model) makes the token gather shard-local, but
+    # the measured win was ~0.1 s of 55 s AND the combination with sharded
+    # token inputs trips a GSPMD partitioner bug (dynamic-slice 8192 from a
+    # 512 operand after spmd-partitioning) — reverted to row sharding.
+    if shape.kind == "train":
+        # FSDP: d_model dims of weights over data (dedup keeps activations
+        # batch-major since "batch" claims the data axis first)
+        nd = mesh.shape.get("data", 1)
+        rules["embed"] = "data" if cfg.d_model % nd == 0 else None
+        # sequence parallelism on the residual stream: the per-layer carry
+        # stack saved for backward shrinks by the model axis
+        if cfg.family in ("dense", "moe", "vlm") and \
+                shape.seq_len % md == 0:
+            rules["res_seq"] = "model"
+    if shape.kind == "decode":
+        if shape.global_batch == 1:
+            rules["batch"] = None
+            rules["kv_seq"] = ("data", "model")
+        else:
+            rules["kv_seq"] = "model"
+    if shape.kind == "prefill":
+        rules["kv_seq"] = "model"
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# batch input specs
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if isinstance(cfg, DLRMConfig):
+        t_pad = dlrm_mod.padded_tables(cfg, 16)
+        return {
+            "dense": sds((b, cfg.n_dense_features), F32),
+            "idx": sds((b, t_pad, 1), I32),
+            "mask": sds((b, t_pad, 1), F32),
+            **({"labels": sds((b,), F32)} if shape.kind == "train" else {}),
+        }
+    out: dict = {}
+    if cfg.family == "audio":
+        sd = WHISPER_DEC_TRAIN if shape.kind == "train" else \
+            WHISPER_DEC_PREFILL
+        if shape.kind == "decode":
+            out["tokens"] = sds((b, 1), I32)
+        else:
+            out["frames"] = sds((b, s, cfg.d_frontend), F32)
+            out["tokens"] = sds((b, sd), I32)
+            if shape.kind == "train":
+                out["labels"] = sds((b, sd), I32)
+        return out
+    if cfg.frontend == "vision_patches" and shape.kind != "decode":
+        nf = cfg.n_frontend_tokens
+        out["patches"] = sds((b, nf, cfg.d_frontend), F32)
+        out["tokens"] = sds((b, s - nf), I32)
+        if shape.kind == "train":
+            out["labels"] = sds((b, s), I32)
+        return out
+    out["tokens"] = sds((b, 1 if shape.kind == "decode" else s), I32)
+    if shape.kind == "train":
+        out["labels"] = sds((b, s), I32)
+    return out
+
+
+def _batch_shardings(cfg, shape: ShapeConfig, batch_tree, mesh, rules):
+    def axes_for(name, leaf):
+        if name in ("tokens", "labels"):
+            return ("batch", "seq")[:leaf.ndim] if leaf.ndim == 2 else \
+                ("batch",)
+        if name == "frames":
+            return ("batch", "seq", None)
+        if name == "patches":
+            return ("batch", None, None)
+        if name in ("dense",):
+            return ("batch", None)
+        if name in ("idx", "mask"):
+            return ("batch", "table_shard", None)
+        return tuple([None] * leaf.ndim)
+
+    return {k: partition.sharding(*axes_for(k, v), mesh=mesh, rules=rules)
+            for k, v in batch_tree.items()}
+
+
+# ---------------------------------------------------------------------------
+# param / state shapes (eval_shape only — nothing is allocated)
+# ---------------------------------------------------------------------------
+
+
+def param_shapes(cfg, n_shards: int = 16, dtype=None):
+    if isinstance(cfg, DLRMConfig):
+        fn = lambda k: dlrm_mod.init_dlrm(k, cfg, n_shards)
+    else:
+        fn = lambda k: api.init(k, cfg, n_shards)
+    shapes = jax.eval_shape(fn, jax.random.PRNGKey(0))
+    if dtype is not None:
+        shapes = jax.tree.map(
+            lambda a: sds(a.shape, dtype) if a.dtype == F32 else a, shapes)
+    return shapes
+
+
+def param_spec_tree(cfg):
+    if isinstance(cfg, DLRMConfig):
+        return dlrm_mod.dlrm_specs(cfg)
+    return api.specs(cfg)
+
+
+IS_AXES = functools.partial(
+    lambda t: isinstance(t, tuple) and all(a is None or isinstance(a, str)
+                                           for a in t))
+
+
+def tree_shardings(spec_tree, mesh, rules):
+    return jax.tree.map(
+        lambda axes: partition.sharding(*axes, mesh=mesh, rules=rules),
+        spec_tree, is_leaf=IS_AXES)
+
+
+# ---------------------------------------------------------------------------
+# cells
+# ---------------------------------------------------------------------------
+
+
+class Cell:
+    """One (arch × shape) dry-run program, ready to lower under a mesh."""
+
+    def __init__(self, arch: str, shape: ShapeConfig, fn, args, shardings,
+                 rules, static_cfg, donate=()):
+        self.arch, self.shape = arch, shape
+        self.fn, self.args, self.shardings = fn, args, shardings
+        self.rules, self.cfg = rules, static_cfg
+        self.donate = donate
+        self.name = f"{arch}/{shape.name}"
+
+    def lower(self, mesh):
+        with partition.axis_rules(mesh, self.rules):
+            jitted = jax.jit(self.fn, in_shardings=self.shardings,
+                             donate_argnums=self.donate)
+            return jitted.lower(*self.args)
+
+
+def build_cell(arch_name: str, shape_name: str, mesh,
+               overrides: Optional[dict] = None) -> Cell:
+    spec = cb.get_arch(arch_name)
+    cfg = spec.config
+    shape = next(s for s in spec.shapes if s.name == shape_name)
+    rules = arch_rules(cfg, mesh, shape)
+    if overrides:
+        rules.update(overrides)
+    batch = input_specs(cfg, shape)
+    bshard = _batch_shardings(cfg, shape, batch, mesh, rules)
+    pspec = param_spec_tree(cfg)
+
+    if isinstance(cfg, DLRMConfig):
+        return _build_dlrm_cell(arch_name, cfg, shape, batch, bshard, pspec,
+                                mesh, rules)
+
+    if shape.kind == "train":
+        params = param_shapes(cfg)
+        opt_state = jax.eval_shape(opt_mod.adamw_init, params)
+        step = steps_mod.make_train_step(cfg, accum_steps=cfg.train_accum)
+        pshard = tree_shardings(pspec, mesh, rules)
+        oshard = tree_shardings(opt_mod.adamw_specs(pspec), mesh, rules)
+        return Cell(arch_name, shape, step, (params, opt_state, batch),
+                    (pshard, oshard, bshard), rules, cfg, donate=(0, 1))
+
+    serve_cfg = cfg
+    params = param_shapes(cfg, dtype=BF16)
+    pshard = tree_shardings(pspec, mesh, rules)
+    if shape.kind == "prefill":
+        step = steps_mod.make_prefill_step(serve_cfg)
+        return Cell(arch_name, shape, step, (params, batch),
+                    (pshard, bshard), rules, cfg)
+
+    # decode
+    cache = jax.eval_shape(
+        lambda: api.make_cache(serve_cfg, shape.global_batch, shape.seq_len,
+                               dtype=BF16))
+    cshard = tree_shardings(api.cache_specs(serve_cfg), mesh, rules)
+    step = steps_mod.make_serve_step(serve_cfg)
+    return Cell(arch_name, shape, step, (params, batch["tokens"], cache),
+                (pshard, bshard["tokens"], cshard), rules, cfg, donate=(2,))
+
+
+def _build_dlrm_cell(arch_name, cfg, shape, batch, bshard, pspec, mesh,
+                     rules, *, bound: int = 4, microbatches: int = 16):
+    params = param_shapes(cfg, dtype=F32)
+    pshard = tree_shardings(pspec, mesh, rules)
+    if shape.kind == "train":
+        def train_fn(p, opt_state, b):
+            def loss_fn(pp):
+                logits = dlrm_mod.forward_distributed(
+                    pp, cfg, b["dense"], b["idx"], b["mask"],
+                    bound=0, microbatches=1, restore_order=False)
+                return dlrm_mod.bce_loss(logits, b["labels"])
+
+            loss, grads = jax.value_and_grad(loss_fn)(p)
+            lr = opt_mod.cosine_schedule(opt_state["count"])
+            p, opt_state = opt_mod.adamw_update(grads, opt_state, p, lr)
+            return p, opt_state, {"loss": loss}
+
+        opt_state = jax.eval_shape(opt_mod.adamw_init, params)
+        oshard = tree_shardings(opt_mod.adamw_specs(pspec), mesh, rules)
+        return Cell(arch_name, shape, train_fn, (params, opt_state, batch),
+                    (pshard, oshard, bshard), rules, cfg)
+
+    def serve_fn(p, b):
+        # the BLS-enabled inference step (paper Listing 2): bound k over a
+        # microbatch stream, drained in-program
+        logits = dlrm_mod.forward_distributed(
+            p, cfg, b["dense"], b["idx"], b["mask"],
+            bound=bound, microbatches=microbatches, restore_order=False)
+        return jax.nn.sigmoid(logits)
+
+    return Cell(arch_name, shape, serve_fn, (params, batch),
+                (pshard, bshard), rules, cfg)
+
+
+def cells_for(arch_name: str):
+    """(shape, skip_reason|None) for every assigned shape of an arch."""
+    spec = cb.get_arch(arch_name)
+    return [(s, spec.skips.get(s.name)) for s in spec.shapes]

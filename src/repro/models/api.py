@@ -1,0 +1,105 @@
+"""Uniform model facade: one entry point per family for init / specs /
+forward / decode, so the trainer, server, dry-run and tests are arch-agnostic.
+
+Batch dict convention:
+  tokens  (B, S) int32          — always present for LM cells
+  labels  (B, S) int32          — train cells (-1 = masked position)
+  frames  (B, S, d_frontend)    — audio stub (whisper)
+  patches (B, n_front, d_front) — vision stub (llava)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import rwkv6, transformer, whisper, zamba2
+
+
+def init(key, cfg: ModelConfig, n_shards: int = 16):
+    if cfg.family == "ssm":
+        return rwkv6.init_rwkv6(key, cfg, n_shards)
+    if cfg.family == "hybrid":
+        return zamba2.init_zamba2(key, cfg, n_shards)
+    if cfg.family == "audio":
+        return whisper.init_whisper(key, cfg, n_shards)
+    return transformer.init_lm(key, cfg, n_shards)
+
+
+def specs(cfg: ModelConfig):
+    if cfg.family == "ssm":
+        return rwkv6.rwkv6_specs(cfg)
+    if cfg.family == "hybrid":
+        return zamba2.zamba2_specs(cfg)
+    if cfg.family == "audio":
+        return whisper.whisper_specs(cfg)
+    return transformer.lm_specs(cfg)
+
+
+def forward(params, cfg: ModelConfig, batch: dict, *, remat: bool = True,
+            last_only: bool = False):
+    """-> (logits, aux)."""
+    if cfg.family == "audio":
+        return whisper.forward(params, cfg, batch["tokens"], batch["frames"],
+                               remat=remat, last_only=last_only)
+    if cfg.family == "ssm":
+        return rwkv6.forward(params, cfg, batch["tokens"], remat=remat,
+                             last_only=last_only)
+    if cfg.family == "hybrid":
+        return zamba2.forward(params, cfg, batch["tokens"], remat=remat,
+                              last_only=last_only)
+    return transformer.forward(params, cfg, batch["tokens"],
+                               batch.get("patches"), remat=remat,
+                               last_only=last_only)
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    if cfg.family == "ssm":
+        return rwkv6.make_state(cfg, batch, dtype)
+    if cfg.family == "hybrid":
+        return zamba2.make_cache(cfg, batch, max_len, dtype)
+    if cfg.family == "audio":
+        # encoder length: assigned decode cells are mechanical, use a small
+        # fixed acoustic context (whisper caps sources at ~1500 frames;
+        # padded to 1536 so the cross-KV seq dim shards 16-way)
+        return whisper.make_cache(cfg, batch, max_len, enc_len=1536,
+                                  dtype=dtype)
+    return transformer.make_cache(cfg, batch, max_len, dtype)
+
+
+def cache_specs(cfg: ModelConfig):
+    if cfg.family == "ssm":
+        return rwkv6.state_specs(cfg)
+    if cfg.family == "hybrid":
+        return zamba2.cache_specs(cfg)
+    if cfg.family == "audio":
+        return whisper.cache_specs(cfg)
+    return transformer.cache_specs(cfg)
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache):
+    if cfg.family == "ssm":
+        return rwkv6.decode_step(params, cfg, tokens, cache)
+    if cfg.family == "hybrid":
+        return zamba2.decode_step(params, cfg, tokens, cache)
+    if cfg.family == "audio":
+        return whisper.decode_step(params, cfg, tokens, cache)
+    return transformer.decode_step(params, cfg, tokens, cache)
+
+
+def loss(cfg: ModelConfig, logits, labels, aux):
+    return transformer.lm_loss(logits, labels, aux)
+
+
+def batch_spec_axes(cfg: ModelConfig, kind: str) -> dict:
+    """Logical axes for each batch entry (see sharding/partition.py)."""
+    out = {"tokens": ("batch", "seq")}
+    if kind == "train":
+        out["labels"] = ("batch", "seq")
+    if cfg.family == "audio":
+        out["frames"] = ("batch", "seq", None)
+    if cfg.frontend == "vision_patches" and kind != "decode":
+        out["patches"] = ("batch", None, None)
+    return out

@@ -1,0 +1,395 @@
+"""Grouped-query attention with the assigned archs' flavours.
+
+Supports: GQA/MQA, RoPE (neox + chatglm "2d" interleaved partial), qk-norm (qwen3),
+QKV bias (qwen2/chatglm), attention-logit softcap (gemma2), sliding-window masking
+(gemma2 local layers), and single-token decode against a (possibly sequence-sharded)
+KV cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding.partition import constrain
+
+NEG_INF = -2.3819763e38  # most-negative bf16-representable
+
+
+def init_attention(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 6)
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": L.init_dense(ks[0], d, h * hd, cfg.dtype, bias=cfg.qkv_bias),
+        "wk": L.init_dense(ks[1], d, kh * hd, cfg.dtype, bias=cfg.qkv_bias),
+        "wv": L.init_dense(ks[2], d, kh * hd, cfg.dtype, bias=cfg.qkv_bias),
+        "wo": L.init_dense(ks[3], h * hd, d, cfg.dtype,
+                           scale=(h * hd) ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.init_rmsnorm(hd, cfg.dtype)
+        p["k_norm"] = L.init_rmsnorm(hd, cfg.dtype)
+    return p
+
+
+def attention_specs(cfg: ModelConfig):
+    p = {
+        "wq": L.dense_specs("embed", "heads", bias=cfg.qkv_bias),
+        "wk": L.dense_specs("embed", "heads", bias=cfg.qkv_bias),
+        "wv": L.dense_specs("embed", "heads", bias=cfg.qkv_bias),
+        "wo": L.dense_specs("heads", "embed"),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": ("head_dim",)}
+        p["k_norm"] = {"scale": ("head_dim",)}
+    return p
+
+
+def _project_qkv(params, cfg: ModelConfig, x, positions):
+    b, s, _ = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = L.dense(params["wq"], x).reshape(b, s, h, hd)
+    k = L.dense(params["wk"], x).reshape(b, s, kh, hd)
+    v = L.dense(params["wv"], x).reshape(b, s, kh, hd)
+    if cfg.qk_norm:
+        q = L.rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = L.rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    if cfg.rope_style != "none":
+        q = L.apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction,
+                         cfg.rope_style)
+        k = L.apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction,
+                         cfg.rope_style)
+    return q, k, v
+
+
+def _sdpa(cfg: ModelConfig, q, k, v, mask):
+    """q:(B,S,H,D) k,v:(B,T,Kh,D) mask broadcastable to (B,1,1,S,T)."""
+    b, s, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    q = q.reshape(b, s, kh, g, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = L.softcap(scores, cfg.attn_logit_softcap)
+    scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h * hd)
+
+
+def causal_mask(s: int, t: int, window: int = 0, offset: int = 0):
+    """(1,1,1,s,t) boolean mask; query i attends key j iff j<=i+offset and
+    within the sliding window when window>0."""
+    qi = jnp.arange(s)[:, None] + offset
+    kj = jnp.arange(t)[None, :]
+    m = kj <= qi
+    if window:
+        m &= (qi - kj) < window
+    return m[None, None, None]
+
+
+# Above this sequence length the full (S, T) score tensor is flash-chunked.
+FLASH_THRESHOLD = 2048
+
+
+# ---------------------------------------------------------------------------
+# custom-VJP flash attention
+#
+# A jnp scan-based flash forward alone is NOT enough for training: jax AD
+# saves every inner-scan iteration's residuals, so the backward materialises
+# stacked (nq, nk, B, Kh, G, cq, ck) score/mask tensors — measured 259 GB of
+# per-device temps on the qwen2-72b train cell (EXPERIMENTS.md §Perf iter 1).
+# The custom VJP below recomputes chunk scores in the backward from (q, k,
+# lse) — the classic flash-attention backward — so residuals are
+# O(B·S·H·(hd+2)) instead of O(B·S²·H).
+# ---------------------------------------------------------------------------
+
+
+def _chunk_scores(cfg, qc, kc, qpos, kpos, *, window, causal, scale):
+    """(B,cq,Kh,G,hd),(B,ck,Kh,hd) -> fp32 scores (B,Kh,G,cq,ck) + mask."""
+    sc = jnp.einsum("bqkgd,bskd->bkgqs", qc, kc,
+                    preferred_element_type=jnp.float32) * scale
+    sc = L.softcap(sc, cfg.attn_logit_softcap).astype(jnp.float32)
+    ok = jnp.ones((qc.shape[1], kc.shape[1]), bool)
+    if causal:
+        ok &= kpos[None, :] <= qpos[:, None]
+    if window:
+        ok &= (qpos[:, None] - kpos[None, :]) < window
+    return jnp.where(ok[None, None, None], sc, -jnp.inf), ok
+
+
+def _flash_fwd_impl(cfg, q, k, v, *, window, causal, cq, ck):
+    """Returns (out (B,S,H*hd), lse (B,Kh,G,S))."""
+    b, s, h, hd = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = hd ** -0.5
+    nq, nk = s // cq, t // ck
+    qr = q.reshape(b, nq, cq, kh, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    kr = k.reshape(b, nk, ck, kh, hd).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(b, nk, ck, kh, hd).transpose(1, 0, 2, 3, 4)
+
+    def q_body(_, qin):
+        qi, qc_ = qin
+        qpos = qi * cq + jnp.arange(cq)
+
+        def kv_body(carry, kin):
+            m, l, acc = carry
+            kj, kc_, vc_ = kin
+            kpos = kj * ck + jnp.arange(ck)
+            sc, _ = _chunk_scores(cfg, qc_, kc_, qpos, kpos, window=window,
+                                  causal=causal, scale=scale)
+            m_new = jnp.maximum(m, sc.max(-1))
+            safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.where(jnp.isfinite(sc), jnp.exp(sc - safe_m[..., None]),
+                          0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - safe_m), 0.0)
+            l = l * corr + p.sum(-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vc_.dtype), vc_)
+            acc = acc * corr[..., None].astype(acc.dtype) + pv
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, kh, g, cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, cq, hd), v.dtype)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0),
+                                      (jnp.arange(nk), kr, vr))
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        lse = jnp.where(jnp.isfinite(m), m, 0.0) + \
+            jnp.log(jnp.maximum(l, 1e-30))
+        # (B,Kh,G,cq,hd) -> (B,cq,H*hd)
+        return None, (out.transpose(0, 3, 1, 2, 4).reshape(b, cq, h * hd),
+                      lse)
+
+    _, (outs, lses) = jax.lax.scan(q_body, None, (jnp.arange(nq), qr))
+    out = outs.transpose(1, 0, 2, 3).reshape(b, s, h * hd)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(b, kh, g, s)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 4, 5, 6, 7))
+def flash_attention(cfg, q, k, v, window, causal, cq, ck):
+    out, _ = _flash_fwd_impl(cfg, q, k, v, window=window, causal=causal,
+                             cq=cq, ck=ck)
+    return out
+
+
+def _flash_vjp_fwd(cfg, q, k, v, window, causal, cq, ck):
+    out, lse = _flash_fwd_impl(cfg, q, k, v, window=window, causal=causal,
+                               cq=cq, ck=ck)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(cfg, window, causal, cq, ck, res, dout):
+    q, k, v, out, lse = res
+    b, s, h, hd = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = hd ** -0.5
+    softcap = cfg.attn_logit_softcap
+    nq, nk = s // cq, t // ck
+    qr = q.reshape(b, nq, cq, kh, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    kr = k.reshape(b, nk, ck, kh, hd).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(b, nk, ck, kh, hd).transpose(1, 0, 2, 3, 4)
+    dor = dout.reshape(b, nq, cq, kh, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    our = out.reshape(b, nq, cq, kh, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    lser = lse.reshape(b, kh, g, nq, cq).transpose(3, 0, 1, 2, 4)
+    # D_i = sum_d dout_i * out_i  (per query row)
+    delta = jnp.einsum("nbqkgd,nbqkgd->nbkgq", dor.astype(jnp.float32),
+                       our.astype(jnp.float32))
+
+    def _p_and_dspre(qc_, kc_, lse_c, qpos, kpos):
+        """Recompute normalised probs p and the pre-softcap score grads."""
+        sc_pre = jnp.einsum("bqkgd,bskd->bkgqs", qc_, kc_,
+                            preferred_element_type=jnp.float32) * scale
+        sc = L.softcap(sc_pre, softcap).astype(jnp.float32)
+        ok = jnp.ones((qc_.shape[1], kc_.shape[1]), bool)
+        if causal:
+            ok &= kpos[None, :] <= qpos[:, None]
+        if window:
+            ok &= (qpos[:, None] - kpos[None, :]) < window
+        sc = jnp.where(ok[None, None, None], sc, -jnp.inf)
+        p = jnp.exp(sc - lse_c[..., None])
+        p = jnp.where(jnp.isfinite(sc), p, 0.0)
+        return p, sc_pre
+
+    def _ds_pre(p, dp, delta_c, sc_pre):
+        ds = p * (dp - delta_c[..., None])
+        if softcap:
+            th = jnp.tanh(sc_pre / softcap)
+            ds = ds * (1.0 - jnp.square(th))
+        return ds * scale
+
+    # pass 1: dq — outer over q chunks, inner over kv chunks
+    def dq_body(_, qin):
+        qi, qc_, do_c, lse_c, delta_c = qin
+        qpos = qi * cq + jnp.arange(cq)
+
+        def kv_body(dq_acc, kin):
+            kj, kc_, vc_ = kin
+            kpos = kj * ck + jnp.arange(ck)
+            p, sc_pre = _p_and_dspre(qc_, kc_, lse_c, qpos, kpos)
+            dp = jnp.einsum("bqkgd,bskd->bkgqs", do_c, vc_,
+                            preferred_element_type=jnp.float32)
+            ds = _ds_pre(p, dp, delta_c, sc_pre)
+            dq_acc += jnp.einsum("bkgqs,bskd->bqkgd", ds.astype(kc_.dtype),
+                                 kc_).astype(jnp.float32)
+            return dq_acc, None
+
+        dq0 = jnp.zeros((b, cq, kh, g, hd), jnp.float32)
+        dq, _ = jax.lax.scan(kv_body, dq0, (jnp.arange(nk), kr, vr))
+        return None, dq
+
+    _, dqs = jax.lax.scan(dq_body, None,
+                          (jnp.arange(nq), qr, dor, lser, delta))
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, hd).astype(q.dtype)
+
+    # pass 2: dk, dv — outer over kv chunks, inner over q chunks
+    def dkv_body(_, kin):
+        kj, kc_, vc_ = kin
+        kpos = kj * ck + jnp.arange(ck)
+
+        def q_body(carry, qin):
+            dk_acc, dv_acc = carry
+            qi, qc_, do_c, lse_c, delta_c = qin
+            qpos = qi * cq + jnp.arange(cq)
+            p, sc_pre = _p_and_dspre(qc_, kc_, lse_c, qpos, kpos)
+            dv_acc += jnp.einsum("bkgqs,bqkgd->bskd",
+                                 p, do_c.astype(jnp.float32))
+            dp = jnp.einsum("bqkgd,bskd->bkgqs", do_c, vc_,
+                            preferred_element_type=jnp.float32)
+            ds = _ds_pre(p, dp, delta_c, sc_pre)
+            dk_acc += jnp.einsum("bkgqs,bqkgd->bskd", ds,
+                                 qc_.astype(jnp.float32))
+            return (dk_acc, dv_acc), None
+
+        dk0 = jnp.zeros((b, ck, kh, hd), jnp.float32)
+        dv0 = jnp.zeros((b, ck, kh, hd), jnp.float32)
+        (dk, dv), _ = jax.lax.scan(
+            q_body, (dk0, dv0), (jnp.arange(nq), qr, dor, lser, delta))
+        return None, (dk, dv)
+
+    _, (dks, dvs) = jax.lax.scan(dkv_body, None, (jnp.arange(nk), kr, vr))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(b, t, kh, hd).astype(k.dtype)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(b, t, kh, hd).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def _flash(cfg: ModelConfig, q, k, v, *, window: int = 0,
+           causal: bool = True, cq: int = 1024, ck: int = 1024):
+    """Chunked online-softmax attention in pure jnp (scan x scan) — the XLA
+    analogue of flash attention, so 32k+ sequences never materialise the full
+    score matrix (per-step transient is (B, Kh, G, cq, ck) fp32 in VMEM-sized
+    chunks).  Exact, incl. softcap / sliding window / GQA."""
+    b, s, h, hd = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    cq = min(cq, s)
+    ck = min(ck, t)
+    assert s % cq == 0 and t % ck == 0, (s, cq, t, ck)
+    nq, nk = s // cq, t // ck
+    scale = hd ** -0.5
+    qr = q.reshape(b, nq, cq, kh, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    kr = k.reshape(b, nk, ck, kh, hd).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(b, nk, ck, kh, hd).transpose(1, 0, 2, 3, 4)
+
+    def q_body(_, qin):
+        qi, qc = qin  # qc: (B, cq, Kh, G, hd)
+        qpos = qi * cq + jnp.arange(cq)
+
+        def kv_body(carry, kin):
+            m, l, acc = carry
+            kj, kc, vc = kin
+            kpos = kj * ck + jnp.arange(ck)
+            sc = jnp.einsum("bqkgd,bskd->bkgqs", qc, kc,
+                            preferred_element_type=jnp.float32) * scale
+            sc = L.softcap(sc, cfg.attn_logit_softcap).astype(jnp.float32)
+            ok = jnp.ones((cq, ck), bool)
+            if causal:
+                ok &= kpos[None, :] <= qpos[:, None]
+            if window:
+                ok &= (qpos[:, None] - kpos[None, :]) < window
+            sc = jnp.where(ok[None, None, None], sc, -jnp.inf)
+            m_new = jnp.maximum(m, sc.max(-1))
+            # guard fully-masked rows (m_new == -inf)
+            safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(sc - safe_m[..., None])
+            p = jnp.where(jnp.isfinite(sc), p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - safe_m), 0.0)
+            l = l * corr + p.sum(-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vc.dtype), vc)
+            acc = acc * corr[..., None].astype(acc.dtype) + pv
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, kh, g, cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, cq, hd), v.dtype)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, a0),
+            (jnp.arange(nk), kr, vr))
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        # (B, Kh, G, cq, hd) -> (B, cq, Kh*G*hd)
+        return None, out.transpose(0, 3, 1, 2, 4).reshape(b, cq, h * hd)
+
+    _, outs = jax.lax.scan(q_body, None, (jnp.arange(nq), qr))
+    return outs.transpose(1, 0, 2, 3).reshape(b, s, h * hd)
+
+
+def attend_full(params, cfg: ModelConfig, x, *, window: int = 0,
+                positions=None, causal: bool = True):
+    """Training / prefill self-attention over the whole sequence."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    q = constrain(q, "batch", "seq", "act_heads", None)
+    k = constrain(k, "batch", "seq", "act_kv", None)
+    v = constrain(v, "batch", "seq", "act_kv", None)
+    if s > FLASH_THRESHOLD:
+        out = flash_attention(cfg, q, k, v, window, causal,
+                              min(1024, s), min(1024, s))
+    else:
+        mask = causal_mask(s, s, window) if causal else \
+            jnp.ones((1, 1, 1, s, s), bool)
+        out = _sdpa(cfg, q, k, v, mask)
+    out = L.dense(params["wo"], out)
+    return constrain(out, "batch", "seq", "embed"), (k, v)
+
+
+def attend_cross(params, cfg: ModelConfig, x, enc_k, enc_v, positions=None):
+    """Encoder-decoder cross attention (whisper): keys from encoder, no mask."""
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = L.dense(params["wq"], x).reshape(b, s, h, hd)
+    mask = jnp.ones((1, 1, 1, s, enc_k.shape[1]), bool)
+    out = _sdpa(cfg, q, enc_k, enc_v, mask)
+    return L.dense(params["wo"], out)
+
+
+def decode_step(params, cfg: ModelConfig, x, cache_k, cache_v, pos, *,
+                window: int = 0):
+    """One-token decode. x:(B,1,D); cache:(B,Smax,Kh,D); pos: scalar index of
+    the slot the new token occupies (all sequences aligned)."""
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, pos, axis=1)
+    cache_k = constrain(cache_k, "batch", "kv_seq", "kv_heads", None)
+    cache_v = constrain(cache_v, "batch", "kv_seq", "kv_heads", None)
+    t = cache_k.shape[1]
+    kj = jnp.arange(t)[None, :]
+    m = kj <= pos
+    if window:
+        m &= (pos - kj) < window
+    mask = m[:, None, None, None, :]  # (1,1,1,1,T) -> broadcast (B,Kh,G,1,T)
+    out = _sdpa(cfg, q, cache_k, cache_v, mask)
+    out = L.dense(params["wo"], out)
+    return constrain(out, "batch", "seq", "embed"), (cache_k, cache_v)

@@ -1,0 +1,236 @@
+"""DLRM (Naumov et al., arXiv:1906.00091) — the paper's reference model.
+
+Architecture: dense features -> bottom MLP; categorical features -> embedding
+bags over (table-parallel) embedding tables; pairwise dot interaction; top MLP
+-> CTR logit.
+
+Distribution follows the reference implementation the paper extends: tables
+are TABLE-parallel across the ``model`` axis (each member owns T/P whole
+tables, padded), each member runs its bags for the WHOLE per-data-row batch,
+and the butterfly alltoall (batch split / table concat) hands every member the
+full feature set for its 1/P batch slice.  The BLS pipeline wraps exactly this
+exchange (``serve_stream``), with bound k as in the paper.
+
+Tables are stacked (T_pad, R_max, s) so the whole sparse arsenal is one
+shardable array; real Criteo tables are ragged in R — padding waste is
+reported by ``table_stats``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import DLRMConfig
+from repro.core import bls as bls_mod
+from repro.models import layers as L
+from repro.sharding import partition
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def padded_tables(cfg: DLRMConfig, n_shards: int) -> int:
+    t = cfg.n_tables
+    return ((t + n_shards - 1) // n_shards) * n_shards
+
+
+def init_dlrm(key, cfg: DLRMConfig, n_shards: int = 16):
+    kt, kb, ktop = jax.random.split(key, 3)
+    t_pad = padded_tables(cfg, n_shards)
+    r_max = max(cfg.table_sizes)
+    dt = jnp.dtype(cfg.dtype)
+
+    def mlp_params(key, dims):
+        ks = jax.random.split(key, len(dims) - 1)
+        return [L.init_dense(ks[i], dims[i], dims[i + 1], cfg.dtype,
+                             bias=True) for i in range(len(dims) - 1)]
+
+    # N.B. a (T_pad, R_max, s) stack; rows beyond a table's true size are
+    # never indexed (synthetic data clips indices per true table size).
+    tables = L.truncated_normal(kt, (t_pad, r_max, cfg.embed_dim),
+                                1.0 / cfg.embed_dim, dt)
+    bot_dims = (cfg.n_dense_features, *cfg.bottom_mlp)
+    n_feat = cfg.n_tables + 1
+    n_inter = n_feat * (n_feat - 1) // 2 if cfg.arch_interaction_op == "dot" \
+        else n_feat * cfg.embed_dim
+    top_in = n_inter + cfg.embed_dim
+    top_dims = (top_in, *cfg.top_mlp)
+    return {
+        "tables": tables,
+        "bot": mlp_params(kb, bot_dims),
+        "top": mlp_params(ktop, top_dims),
+    }
+
+
+def dlrm_specs(cfg: DLRMConfig):
+    return {
+        "tables": ("table_shard", None, None),
+        "bot": [L.dense_specs(None, None, bias=True)
+                for _ in range(len(cfg.bottom_mlp))],
+        "top": [L.dense_specs(None, None, bias=True)
+                for _ in range(len(cfg.top_mlp))],
+    }
+
+
+# ---------------------------------------------------------------------------
+# pieces
+# ---------------------------------------------------------------------------
+
+
+def apply_mlp(params, x, final_act: Optional[str] = None):
+    """Reference DLRM MLP: ReLU between layers; optional sigmoid at the end
+    is left to the loss (logits returned)."""
+    for i, lp in enumerate(params):
+        x = L.dense(lp, x)
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def apply_emb(tables, idx, mask):
+    """Embedding bags.  tables:(T,R,s) idx:(B,T,hot) mask:(B,T,hot)
+    -> (B,T,s).  The paper's dominant stage (its Fig. 5 flame graph);
+    kernels/embedding_bag.py is the Pallas version of this contraction."""
+    gathered = jnp.take_along_axis(
+        tables[None, :, :, :],
+        idx[..., None].astype(jnp.int32) % tables.shape[1],
+        axis=2,
+    )  # (B,T,hot,s)
+    return jnp.sum(gathered * mask[..., None].astype(gathered.dtype), axis=2)
+
+
+def dot_interaction(z):
+    """z:(B,F,s) -> (B, F(F-1)/2) lower-triangle pairwise dots (the
+    reference's interact_features; kernels/dot_interaction.py = Pallas)."""
+    b, f, s = z.shape
+    zz = jnp.einsum("bfs,bgs->bfg", z, z)
+    ii, jj = jnp.tril_indices(f, k=-1)
+    return zz[:, ii, jj]
+
+
+def forward_local(params, cfg: DLRMConfig, dense, idx, mask):
+    """Single-device reference forward (oracle for the distributed path)."""
+    t = cfg.n_tables
+    z0 = apply_mlp(params["bot"], dense)                       # (B, s)
+    emb = apply_emb(params["tables"][:t], idx[:, :t], mask[:, :t])
+    z = jnp.concatenate([z0[:, None, :], emb], axis=1)         # (B, T+1, s)
+    inter = dot_interaction(z)
+    top_in = jnp.concatenate([z0, inter.astype(z0.dtype)], axis=-1)
+    return apply_mlp(params["top"], top_in)[..., 0]            # (B,) logit
+
+
+# ---------------------------------------------------------------------------
+# distributed forward (reference-DLRM butterfly over the ``model`` axis)
+# ---------------------------------------------------------------------------
+
+
+def _batch_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
+                        bound: int = 0, microbatches: int = 1,
+                        unroll: Optional[int] = None,
+                        restore_order: bool = True):
+    """dense:(B, n_dense) idx/mask:(B, T_pad, hot); batch B sharded over
+    (pod, data) [dense replicated across ``model`` within a data row, as the
+    reference's data loader scatters it]; tables over ``model``.  bound>0
+    runs the BLS pipeline over ``microbatches`` slices of the batch (the
+    iteration stream); bound=0 + microbatches=1 is the reference synchronous
+    step.  Returns (B,) CTR logits in input order (restore_order=False keeps
+    pipeline order — microbatch-major — and skips a reshuffle collective).
+    """
+    mesh = partition.current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return forward_local(params, cfg, dense, idx, mask)
+    n_shards = mesh.shape["model"]
+    baxes = _batch_axes(mesh)
+    mb = microbatches
+
+    def shard_fn(tables, bot, top, dense_s, idx_s, mask_s):
+        # per-shard shapes: tables (t_loc,R,s); dense (B_row, n_dense)
+        # replicated over model; idx/mask (B_row, t_loc, hot)
+        m = jax.lax.axis_index("model")
+        b_row = dense_s.shape[0]
+        bs = b_row // (mb * n_shards)  # rows per (microbatch, member)
+
+        def stage_a(x):
+            j, d, ix, mk = x
+            pooled = apply_emb(tables, ix, mk)        # (B_row/mb, t_loc, s)
+            # member m's dense rows of microbatch j (matches a2a delivery)
+            dm = jax.lax.dynamic_slice_in_dim(d, m * bs, bs, axis=0)
+            z0 = apply_mlp(bot, dm)                   # (bs, s)
+            return pooled, z0
+
+        def collective(pooled):
+            # butterfly: batch split / table concat  -> (bs, t_pad, s)
+            return jax.lax.all_to_all(pooled, "model", split_axis=0,
+                                      concat_axis=1, tiled=True)
+
+        def stage_b(emb_all, z0):
+            t = cfg.n_tables
+            z = jnp.concatenate([z0[:, None, :], emb_all[:, :t]], axis=1)
+            inter = dot_interaction(z)
+            top_in = jnp.concatenate([z0, inter.astype(z0.dtype)], axis=-1)
+            return apply_mlp(top, top_in)[..., 0]
+
+        def split(a):  # (B_row, ...) -> (mb, B_row/mb, ...)
+            return a.reshape(mb, a.shape[0] // mb, *a.shape[1:])
+
+        js = jnp.arange(mb, dtype=jnp.int32)
+        xs = (js, split(dense_s), split(idx_s), split(mask_s))
+        if bound == 0 and mb == 1:
+            payload, side = stage_a(jax.tree.map(lambda a: a[0], xs))
+            return stage_b(collective(payload), side)[None]
+        outs, _ = bls_mod.bls_pipeline(stage_a, collective, stage_b, xs,
+                                       bound, unroll=unroll)
+        return outs  # (mb, bs)
+
+    out = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P("model", None, None),
+                  jax.tree.map(lambda _: P(), params["bot"]),
+                  jax.tree.map(lambda _: P(), params["top"]),
+                  P(baxes if baxes else None, None),
+                  P(baxes if baxes else None, "model", None),
+                  P(baxes if baxes else None, "model", None)),
+        out_specs=P(None, baxes + ("model",) if baxes else "model"),
+        check_vma=False,
+    )(params["tables"], params["bot"], params["top"], dense, idx, mask)
+    # out: (mb, B/mb) where each row of size B/mb is laid out
+    # [data-row, member, bs]; input order within a data row is
+    # [microbatch, member, bs].
+    if not restore_order:
+        return out.reshape(-1)
+    n_data = 1
+    for a in baxes:
+        n_data *= mesh.shape[a]
+    bs = dense.shape[0] // (n_data * mb * n_shards)
+    o = out.reshape(mb, n_data, n_shards, bs)
+    return o.transpose(1, 0, 2, 3).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# loss / metrics
+# ---------------------------------------------------------------------------
+
+
+def bce_loss(logits, labels):
+    lf = logits.astype(jnp.float32)
+    yf = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(lf, 0) - lf * yf + jnp.log1p(jnp.exp(-jnp.abs(lf))))
+
+
+def table_stats(cfg: DLRMConfig, n_shards: int = 16) -> dict:
+    t_pad = padded_tables(cfg, n_shards)
+    r_max = max(cfg.table_sizes)
+    real = sum(cfg.table_sizes) * cfg.embed_dim
+    padded = t_pad * r_max * cfg.embed_dim
+    return {"t_pad": t_pad, "r_max": r_max,
+            "padding_fraction": 1.0 - real / padded,
+            "bytes": padded * jnp.dtype(cfg.dtype).itemsize}

@@ -1,0 +1,288 @@
+"""Shared NN layers: norms, GLU MLPs, rotary embeddings, vocab embedding/head.
+
+All modules are functional: ``init_*`` returns a param pytree, ``*_specs`` returns a
+matching pytree of logical-axis tuples (see sharding/partition.py), and the apply
+function is a plain function of (params, inputs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.partition import constrain
+
+Dtype = jnp.dtype
+
+
+def _dt(cfg_dtype: str) -> Dtype:
+    return jnp.dtype(cfg_dtype)
+
+
+def truncated_normal(key, shape, scale, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(dim: int, dtype: str, plus_one: bool = False):
+    # gemma2 stores weight as (1 + w); represented by zeros-init + plus_one flag
+    return {"scale": jnp.zeros((dim,), _dt(dtype)) if plus_one
+            else jnp.ones((dim,), _dt(dtype))}
+
+
+def rmsnorm_specs():
+    return {"scale": ("embed",)}
+
+
+def _rmsnorm_impl(scale, x, eps: float, plus_one: bool):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xn = xf * jax.lax.rsqrt(var + eps)
+    w = scale.astype(jnp.float32)
+    if plus_one:
+        w = 1.0 + w
+    return (xn * w).astype(dt)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _rmsnorm_cvjp(scale, x, eps, plus_one):
+    return _rmsnorm_impl(scale, x, eps, plus_one)
+
+
+def _rmsnorm_cvjp_fwd(scale, x, eps, plus_one):
+    return _rmsnorm_impl(scale, x, eps, plus_one), (scale, x)
+
+
+def _rmsnorm_cvjp_bwd(eps, plus_one, res, g):
+    """fp32 internal math, but dx is returned in x.dtype so the cotangent
+    crossing (sequence-parallel) block boundaries — and therefore the
+    boundary all-reduce — stays bf16 (EXPERIMENTS.md §Perf iter 6)."""
+    scale, x = res
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    d = x.shape[-1]
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    xn = xf * inv
+    w = scale.astype(jnp.float32)
+    if plus_one:
+        w = 1.0 + w
+    gw = gf * w
+    dx = inv * (gw - xn * jnp.mean(gw * xn, axis=-1, keepdims=True))
+    dscale = jnp.sum(gf * xn, axis=tuple(range(x.ndim - 1)))
+    return dscale.astype(scale.dtype), dx.astype(x.dtype)
+
+
+_rmsnorm_cvjp.defvjp(_rmsnorm_cvjp_fwd, _rmsnorm_cvjp_bwd)
+
+
+def rmsnorm(params, x, eps: float = 1e-6, plus_one: bool = False):
+    return _rmsnorm_cvjp(params["scale"], x, eps, plus_one)
+
+
+def init_layernorm(dim: int, dtype: str):
+    return {"scale": jnp.ones((dim,), _dt(dtype)),
+            "bias": jnp.zeros((dim,), _dt(dtype))}
+
+
+def layernorm_specs():
+    return {"scale": ("embed",), "bias": ("embed",)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xf * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Activations / softcap
+# ---------------------------------------------------------------------------
+
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def softcap(x, cap: float):
+    """gemma2 logit soft-capping: cap * tanh(x / cap). cap==0 -> identity."""
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GLU MLP (SwiGLU / GeGLU) and plain MLP
+# ---------------------------------------------------------------------------
+
+
+def init_glu_mlp(key, d_model: int, d_ff: int, dtype: str):
+    kg, ku, kd = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    return {
+        "gate": truncated_normal(kg, (d_model, d_ff), s_in, _dt(dtype)),
+        "up": truncated_normal(ku, (d_model, d_ff), s_in, _dt(dtype)),
+        "down": truncated_normal(kd, (d_ff, d_model), s_out, _dt(dtype)),
+    }
+
+
+def glu_mlp_specs():
+    return {"gate": ("embed", "mlp"), "up": ("embed", "mlp"),
+            "down": ("mlp", "embed")}
+
+
+def glu_mlp(params, x, act: str = "silu"):
+    a = activation(act)
+    h = a(x @ params["gate"]) * (x @ params["up"])
+    h = constrain(h, "batch", "seq", "mlp")
+    return h @ params["down"]
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype: str, bias: bool = True):
+    k1, k2 = jax.random.split(key)
+    return {"fc1": init_dense(k1, d_model, d_ff, dtype, bias=bias),
+            "fc2": init_dense(k2, d_ff, d_model, dtype, bias=bias,
+                              scale=d_ff ** -0.5)}
+
+
+def mlp_specs(bias: bool = True):
+    return {"fc1": dense_specs("embed", "mlp", bias=bias),
+            "fc2": dense_specs("mlp", "embed", bias=bias)}
+
+
+def mlp(params, x, act: str = "gelu"):
+    h = activation(act)(dense(params["fc1"], x))
+    h = constrain(h, "batch", "seq", "mlp")
+    return dense(params["fc2"], h)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float, fraction: float = 1.0):
+    """Inverse frequencies for the rotated sub-dimension."""
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x, positions, theta: float, fraction: float = 1.0,
+               style: str = "neox"):
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    inv, rot = rope_frequencies(head_dim, theta, fraction)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., seq, rot/2)
+    cos = jnp.cos(ang)[..., :, None, :]  # add heads axis
+    sin = jnp.sin(ang)[..., :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    xr = xr.astype(jnp.float32)
+    if style == "neox":
+        # split halves: [a, b] -> [a*cos - b*sin, b*cos + a*sin]
+        a, b = xr[..., : rot // 2], xr[..., rot // 2:]
+        ra = a * cos - b * sin
+        rb = b * cos + a * sin
+        out = jnp.concatenate([ra, rb], axis=-1)
+    elif style == "glm2d":
+        # interleaved (GPT-J / chatglm "2d") pairing: (x0,x1),(x2,x3),...
+        a, b = xr[..., 0::2], xr[..., 1::2]
+        ra = a * cos - b * sin
+        rb = b * cos + a * sin
+        out = jnp.stack([ra, rb], axis=-1).reshape(xr.shape)
+    else:
+        raise ValueError(style)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Vocab embedding + LM head
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype: str):
+    return {"table": truncated_normal(key, (vocab, d_model), 1.0, _dt(dtype))}
+
+
+def embedding_specs():
+    # own logical axes: training of untied archs shards columns (local
+    # gather); serving + tied archs shard rows like the LM head
+    return {"table": ("emb_vocab", "emb_col")}
+
+
+def embed_tokens(params, tokens, scale: Optional[float] = None):
+    out = params["table"][tokens]
+    out = constrain(out, "batch", "seq", "embed")
+    if scale is not None:
+        out = (out.astype(jnp.float32) * scale).astype(out.dtype)
+    return out
+
+
+def init_lm_head(key, d_model: int, vocab: int, dtype: str):
+    return {"kernel": truncated_normal(key, (d_model, vocab),
+                                       d_model ** -0.5, _dt(dtype))}
+
+
+def lm_head_specs():
+    return {"kernel": ("embed", "vocab")}
+
+
+def lm_head(params, x, cap: float = 0.0):
+    logits = x @ params["kernel"]
+    logits = constrain(logits, "batch", "seq", "vocab")
+    return softcap(logits, cap)
+
+
+def tied_lm_head(embed_params, x, cap: float = 0.0):
+    logits = x @ embed_params["table"].T
+    logits = constrain(logits, "batch", "seq", "vocab")
+    return softcap(logits, cap)
+
+
+# ---------------------------------------------------------------------------
+# Dense projections
+# ---------------------------------------------------------------------------
+
+
+def init_dense(key, d_in: int, d_out: int, dtype: str, bias: bool = False,
+               scale: Optional[float] = None):
+    p = {"kernel": truncated_normal(key, (d_in, d_out),
+                                    scale if scale is not None else d_in ** -0.5,
+                                    _dt(dtype))}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), _dt(dtype))
+    return p
+
+
+def dense_specs(in_ax, out_ax, bias: bool = False):
+    p = {"kernel": (in_ax, out_ax)}
+    if bias:
+        p["bias"] = (out_ax,)
+    return p
+
+
+def dense(params, x):
+    y = x @ params["kernel"]
+    if "bias" in params:
+        y = y + params["bias"]
+    return y

@@ -1,0 +1,208 @@
+"""Mamba-2 (SSD) block — used standalone and inside the zamba2 hybrid.
+
+Chunked SSD: per-head *scalar* log-decay means the in-chunk pairwise decay is a
+plain (C, C) matrix per head — exact and overflow-safe (all exponents are
+non-positive differences of a running cumulative sum).  ``ssd_recurrent`` is the
+decode path / oracle.  State = conv tail (B, k-1, conv_ch) + SSD state
+(B, H, P, N): constant in sequence length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models import layers as L
+from repro.sharding.partition import constrain
+
+
+def dims(cfg: ModelConfig):
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    n_heads = d_inner // ssm.head_dim
+    conv_ch = d_inner + 2 * ssm.d_state
+    return d_inner, n_heads, conv_ch
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    ssm = cfg.ssm
+    d_inner, nh, conv_ch = dims(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    d_in_proj = 2 * d_inner + 2 * ssm.d_state + nh
+    return {
+        "norm": L.init_rmsnorm(cfg.d_model, "float32"),
+        "in_proj": L.init_dense(k1, cfg.d_model, d_in_proj, "float32"),
+        "conv_w": L.truncated_normal(k2, (ssm.d_conv, conv_ch),
+                                     ssm.d_conv ** -0.5, jnp.float32),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),     # A = -exp(A_log) = -1
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "gate_norm": L.init_rmsnorm(d_inner, "float32"),
+        "out_proj": L.init_dense(k3, d_inner, cfg.d_model, "float32",
+                                 scale=d_inner ** -0.5),
+    }
+
+
+def mamba2_specs(cfg: ModelConfig):
+    return {
+        "norm": L.rmsnorm_specs(),
+        "in_proj": L.dense_specs("embed", "heads"),
+        "conv_w": (None, "heads"),
+        "conv_b": ("heads",),
+        "A_log": ("heads",),
+        "dt_bias": ("heads",),
+        "D": ("heads",),
+        "gate_norm": {"scale": ("heads",)},
+        "out_proj": L.dense_specs("heads", "embed"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv
+# ---------------------------------------------------------------------------
+
+
+def conv_full(w, b, x):
+    """x:(B,S,C); causal depthwise conv, kernel k=w.shape[0]."""
+    k = w.shape[0]
+    out = jnp.zeros_like(x)
+    for j in range(k):
+        shift = k - 1 - j
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1] - 0]
+        xs = xs[:, :x.shape[1]]
+        out = out + w[j] * xs
+    return out + b
+
+
+def conv_step(w, b, conv_state, xt):
+    """xt:(B,1,C); conv_state:(B,k-1,C) holding the previous inputs."""
+    k = w.shape[0]
+    window = jnp.concatenate([conv_state, xt], axis=1)  # (B,k,C)
+    out = jnp.einsum("kc,bkc->bc", w, window)[:, None] + b
+    return out, window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# SSD evaluators
+# ---------------------------------------------------------------------------
+
+
+def ssd_recurrent(x, dt, A_log, B, C, D, state):
+    """x:(B,S,H,P) dt:(B,S,H) B,C:(B,S,N) state:(B,H,P,N)."""
+
+    def step(st, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P),(B,H),(B,N),(B,N)
+        a = jnp.exp(-jnp.exp(A_log) * dtt)          # (B,H)
+        xbar = xt * dtt[..., None]
+        st = a[..., None, None] * st + xbar[..., None] * bt[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", st, ct)
+        return st, y
+
+    xs = tuple(a.swapaxes(0, 1) for a in (x, dt, B, C))
+    state, y = jax.lax.scan(step, state, xs)
+    y = y.swapaxes(0, 1) + D[None, None, :, None] * x
+    return y, state
+
+
+def ssd_chunked(x, dt, A_log, B, C, D, state, chunk: int = 128):
+    """Chunk-parallel SSD; shapes as ssd_recurrent, S % chunk == 0."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    nc = s // chunk
+    a = (-jnp.exp(A_log)[None, None] * dt).astype(jnp.float32)  # (B,S,H) log
+    xbar = x * dt[..., None]
+    rs = lambda t, d: t.reshape(b, nc, chunk, *d)
+    xc, ac = rs(xbar, (h, p)), rs(a, (h,))
+    bc, cc = rs(B, (n,)), rs(C, (n,))
+    xorig = rs(x, (h, p))
+
+    def chunk_step(st, inp):
+        xk, ak, bk, ck, xo = inp
+        la = jnp.cumsum(ak, axis=1)                    # (B,C,H) inclusive
+        ltot = la[:, -1:]                              # (B,1,H)
+        # intra: scores[t,s] = (C_t . B_s) * exp(la_t - la_s), s <= t
+        cb = jnp.einsum("btn,bsn->bts", ck, bk)
+        dec = jnp.exp(la[:, :, None] - la[:, None, :, :])  # (B,t,s,H)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        scores = cb[..., None] * jnp.where(mask[None, :, :, None], dec, 0.0)
+        intra = jnp.einsum("btsh,bshp->bthp", scores, xk)
+        cross = jnp.einsum("btn,bhpn->bthp", ck, st) * \
+            jnp.exp(la)[..., None]
+        y = intra + cross + D[None, None, :, None] * xo
+        # state update
+        bw = bk[:, :, None, :] * jnp.exp(ltot - la)[..., None]  # (B,C,H,N)
+        st = jnp.exp(ltot[:, 0])[..., None, None] * st + \
+            jnp.einsum("bshn,bshp->bhpn", bw, xk)
+        return st, y
+
+    xs = tuple(t.swapaxes(0, 1) for t in (xc, ac, bc, cc, xorig))
+    # remat the chunk body (see rwkv6.wkv_chunked): the (C,C,H) decay matrix
+    # is recomputed in the backward rather than stacked across chunks
+    state, y = jax.lax.scan(jax.checkpoint(chunk_step), state, xs)
+    return y.swapaxes(0, 1).reshape(b, s, h, p), state
+
+
+# ---------------------------------------------------------------------------
+# block
+# ---------------------------------------------------------------------------
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    ssm = cfg.ssm
+    d_inner, nh, _ = dims(cfg)
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * ssm.d_state],
+                           axis=-1)
+    return z, xbc, dt
+
+
+def block(p, cfg: ModelConfig, x, state=None, chunked: bool = True):
+    """x:(B,S,D).  state: None (train) or dict(conv (B,k-1,C), ssd (B,H,P,N))."""
+    ssm = cfg.ssm
+    d_inner, nh, conv_ch = dims(cfg)
+    b, s, d = x.shape
+    h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+    zxbcdt = L.dense(p["in_proj"], h)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    new_state = {}
+    if state is None:
+        xbc = conv_full(p["conv_w"].astype(xbc.dtype),
+                        p["conv_b"].astype(xbc.dtype), xbc)
+    else:
+        xbc, conv_st = conv_step(p["conv_w"].astype(xbc.dtype),
+                                 p["conv_b"].astype(xbc.dtype),
+                                 state["conv"], xbc)
+        new_state["conv"] = conv_st
+    xbc = jax.nn.silu(xbc)
+    xs, B, C = jnp.split(xbc, [d_inner, d_inner + ssm.d_state], axis=-1)
+    xs = xs.reshape(b, s, nh, ssm.head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    ssd_state = (state or {}).get(
+        "ssd", jnp.zeros((b, nh, ssm.head_dim, ssm.d_state), jnp.float32))
+    fn = ssd_chunked if chunked and s % ssm.chunk == 0 and s > 1 \
+        else ssd_recurrent
+    kw = {"chunk": ssm.chunk} if fn is ssd_chunked else {}
+    y, ssd_state = fn(xs.astype(jnp.float32), dt, p["A_log"],
+                      B.astype(jnp.float32), C.astype(jnp.float32),
+                      p["D"], ssd_state, **kw)
+    new_state["ssd"] = ssd_state
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = L.rmsnorm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = L.dense(p["out_proj"], y)
+    return x + constrain(out, "batch", "seq", "embed"), new_state
+
+
+def make_state(cfg: ModelConfig, batch: int, dtype=None):
+    ssm = cfg.ssm
+    d_inner, nh, conv_ch = dims(cfg)
+    dt = jnp.dtype(dtype or cfg.dtype)
+    return {
+        "conv": jnp.zeros((batch, ssm.d_conv - 1, conv_ch), dt),
+        "ssd": jnp.zeros((batch, nh, ssm.head_dim, ssm.d_state),
+                         jnp.float32),
+    }

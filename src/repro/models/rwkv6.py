@@ -1,0 +1,335 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free, data-dependent decay.
+
+Two WKV evaluators:
+  * ``wkv_recurrent`` — exact token-by-token recurrence (decode path + oracle).
+  * ``wkv_chunked``   — chunk-parallel training form.  All exponentials are of
+    non-positive cumulative log-decays (differences L_t − L_s with s ≤ t), so it
+    is exact and overflow-safe without clamping; the (C,C,K) in-chunk decay
+    tensor is the quantity the Pallas kernel (kernels/rwkv6_wkv.py) keeps in
+    VMEM instead of materialising in HBM.
+
+State per layer = two token-shift vectors (B,D) + WKV state (B,H,K,V): constant
+in sequence length, which is why rwkv6 runs the ``long_500k`` cell that pure
+full-attention archs skip.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding.partition import constrain
+
+HEAD_SIZE = 64
+LORA_MAA = 32
+LORA_DECAY = 64
+
+
+def n_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // HEAD_SIZE
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    h = n_heads(cfg)
+    ks = jax.random.split(key, 12)
+    dt = "float32"
+    u = L.truncated_normal(ks[0], (h, HEAD_SIZE), 0.5, jnp.float32)
+    return {
+        "ln1": L.init_layernorm(d, dt),
+        "ln2": L.init_layernorm(d, dt),
+        # token-shift data-dependent lerp (ddlerp) parameters
+        "maa_x": jnp.zeros((d,), jnp.float32),
+        "maa_rkvwg": jnp.zeros((5, d), jnp.float32),
+        "maa_A": L.truncated_normal(ks[1], (d, 5 * LORA_MAA), d ** -0.5,
+                                    jnp.float32),
+        "maa_B": L.truncated_normal(ks[2], (5, LORA_MAA, d),
+                                    LORA_MAA ** -0.5, jnp.float32),
+        # decay = -exp(time_decay + tanh(xw @ A) @ B); init around e^-1
+        "time_decay": jnp.zeros((d,), jnp.float32),
+        "decay_A": L.truncated_normal(ks[3], (d, LORA_DECAY), d ** -0.5,
+                                      jnp.float32),
+        "decay_B": L.truncated_normal(ks[4], (LORA_DECAY, d),
+                                      LORA_DECAY ** -0.5, jnp.float32),
+        "time_faaaa": u,  # per-(head, key-dim) bonus
+        "wr": L.init_dense(ks[5], d, d, dt),
+        "wk": L.init_dense(ks[6], d, d, dt),
+        "wv": L.init_dense(ks[7], d, d, dt),
+        "wg": L.init_dense(ks[8], d, d, dt),
+        "wo": L.init_dense(ks[9], d, d, dt, scale=d ** -0.5),
+        "ln_x": L.init_layernorm(d, dt),  # per-head group norm affine
+        # channel mix
+        "cm_maa_k": jnp.zeros((d,), jnp.float32),
+        "cm_maa_r": jnp.zeros((d,), jnp.float32),
+        "cm_k": L.init_dense(ks[10], d, f, dt),
+        "cm_v": L.init_dense(ks[11], f, d, dt, scale=f ** -0.5),
+        "cm_r": L.init_dense(ks[10], d, d, dt),
+    }
+
+
+def _layer_specs(cfg: ModelConfig):
+    dd = L.dense_specs("embed", "heads")
+    return {
+        "ln1": L.layernorm_specs(), "ln2": L.layernorm_specs(),
+        "maa_x": ("embed",), "maa_rkvwg": (None, "embed"),
+        "maa_A": ("embed", None), "maa_B": (None, None, "embed"),
+        "time_decay": ("embed",), "decay_A": ("embed", None),
+        "decay_B": (None, "embed"), "time_faaaa": ("heads", None),
+        "wr": dd, "wk": dd, "wv": dd, "wg": dd,
+        "wo": L.dense_specs("heads", "embed"),
+        "ln_x": L.layernorm_specs(),
+        "cm_maa_k": ("embed",), "cm_maa_r": ("embed",),
+        "cm_k": L.dense_specs("embed", "mlp"),
+        "cm_v": L.dense_specs("mlp", "embed"),
+        "cm_r": L.dense_specs("embed", "heads"),
+    }
+
+
+def init_rwkv6(key, cfg: ModelConfig, n_shards: int = 16):
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    return {
+        "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, "float32"),
+        "ln0": L.init_layernorm(cfg.d_model, "float32"),
+        "layers": jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys),
+        "final_norm": L.init_layernorm(cfg.d_model, "float32"),
+        "head": L.init_lm_head(kh, cfg.d_model, cfg.vocab_size, "float32"),
+    }
+
+
+def rwkv6_specs(cfg: ModelConfig):
+    sub = _layer_specs(cfg)
+    return {
+        "embed": L.embedding_specs(),
+        "ln0": L.layernorm_specs(),
+        "layers": jax.tree.map(lambda t: ("layers",) + t, sub,
+                               is_leaf=lambda t: isinstance(t, tuple)),
+        "final_norm": L.layernorm_specs(),
+        "head": L.lm_head_specs(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# WKV evaluators
+# ---------------------------------------------------------------------------
+
+
+def wkv_recurrent(r, k, v, logw, u, state):
+    """Exact recurrence.  r,k,logw:(B,S,H,K) v:(B,S,H,V) u:(H,K)
+    state:(B,H,K,V).  Returns (out (B,S,H,V), state)."""
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,K), ..., (B,H,V), (B,H,K)
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,K,V)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = jnp.exp(wt)[..., None] * s + kv
+        return s, out
+
+    xs = (r.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          logw.swapaxes(0, 1))
+    state, out = jax.lax.scan(step, state, xs)
+    return out.swapaxes(0, 1), state
+
+
+def wkv_chunked(r, k, v, logw, u, state, chunk: int = 32):
+    """Chunk-parallel WKV.  Shapes as wkv_recurrent; S % chunk == 0."""
+    b, s, h, kk = r.shape
+    vv = v.shape[-1]
+    nc = s // chunk
+    rs = r.reshape(b, nc, chunk, h, kk)
+    ks = k.reshape(b, nc, chunk, h, kk)
+    vs = v.reshape(b, nc, chunk, h, vv)
+    ws = logw.reshape(b, nc, chunk, h, kk).astype(jnp.float32)
+
+    def chunk_step(st, inp):
+        rc, kc, vc, wc = inp  # (B,C,H,K) etc.
+        linc = jnp.cumsum(wc, axis=1)            # inclusive cum log decay
+        lexc = linc - wc                          # exclusive
+        ltot = linc[:, -1:]                       # (B,1,H,K)
+        # cross-chunk: r_t decayed from chunk start times carried state
+        cross = jnp.einsum("bthk,bhkv->bthv",
+                           rc * jnp.exp(lexc), st)
+        # intra-chunk: pairwise decay tensor, strictly-lower mask
+        wdiff = jnp.exp(lexc[:, :, None] - linc[:, None, :, :, :])  # (B,t,s,H,K)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), -1)
+        scores = jnp.einsum("bthk,bshk,btshk->bhts", rc, kc,
+                            jnp.where(mask[None, :, :, None, None], wdiff, 0.0))
+        intra = jnp.einsum("bhts,bshv->bthv", scores, vc)
+        # current-token bonus via u
+        bonus = jnp.einsum("bthk,bthk->bth", rc, u[None, None] * kc)
+        out = cross + intra + bonus[..., None] * vc
+        # state update: decay whole chunk + inject decayed keys
+        kdec = kc * jnp.exp(ltot - linc)
+        st = jnp.exp(ltot[:, 0])[..., None] * st + \
+            jnp.einsum("bshk,bshv->bhkv", kdec, vc)
+        return st, out
+
+    xs = tuple(a.swapaxes(0, 1) for a in (rs, ks, vs, ws))
+    # remat the chunk body: the (C,C,K) in-chunk decay tensor is recomputed
+    # in the backward instead of being saved per chunk (a 128-chunk stack of
+    # it dominated rwkv6 train memory — EXPERIMENTS.md §Perf)
+    state, out = jax.lax.scan(jax.checkpoint(chunk_step), state, xs)
+    out = out.swapaxes(0, 1).reshape(b, s, h, vv)
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _ddlerp(p, x, shifted):
+    """Data-dependent lerp producing the 5 mixed inputs (r,k,v,w,g)."""
+    delta = shifted - x
+    xxx = x + delta * p["maa_x"]
+    b, s, _ = x.shape
+    f = jnp.tanh(xxx.astype(jnp.float32) @ p["maa_A"])
+    f = f.reshape(b, s, 5, LORA_MAA)
+    mixes = jnp.einsum("bsfl,fld->fbsd", f, p["maa_B"])  # (5,B,S,D)
+    mixes = mixes + p["maa_rkvwg"][:, None, None, :]
+    return tuple(x + delta * mixes[i].astype(x.dtype) for i in range(5))
+
+
+def _shift(x, prev=None):
+    """Token shift: previous token's features (prev fills t=0)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def time_mix(p, cfg: ModelConfig, x, *, shift_prev=None, wkv_state=None,
+             chunked: bool = True, chunk: int = 32):
+    b, s, d = x.shape
+    h = n_heads(cfg)
+    shifted = _shift(x, shift_prev)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, shifted)
+    r = L.dense(p["wr"], xr).reshape(b, s, h, HEAD_SIZE)
+    k = L.dense(p["wk"], xk).reshape(b, s, h, HEAD_SIZE)
+    v = L.dense(p["wv"], xv).reshape(b, s, h, HEAD_SIZE)
+    g = jax.nn.silu(L.dense(p["wg"], xg))
+    dec = p["time_decay"] + jnp.tanh(
+        xw.astype(jnp.float32) @ p["decay_A"]) @ p["decay_B"]
+    logw = -jnp.exp(dec.astype(jnp.float32)).reshape(b, s, h, HEAD_SIZE)
+    if wkv_state is None:
+        wkv_state = jnp.zeros((b, h, HEAD_SIZE, HEAD_SIZE), jnp.float32)
+    fn = wkv_chunked if chunked and s % chunk == 0 and s > 1 else wkv_recurrent
+    kw = {"chunk": chunk} if fn is wkv_chunked else {}
+    out, wkv_state = fn(r.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), logw,
+                        p["time_faaaa"], wkv_state, **kw)
+    # per-head group norm + gate
+    mu = out.mean(-1, keepdims=True)
+    var = out.var(-1, keepdims=True)
+    out = (out - mu) * jax.lax.rsqrt(var + 64e-5)
+    out = out.reshape(b, s, d) * p["ln_x"]["scale"] + p["ln_x"]["bias"]
+    out = (out.astype(x.dtype) * g)
+    return L.dense(p["wo"], out), x[:, -1:], wkv_state
+
+
+def channel_mix(p, x, *, shift_prev=None):
+    shifted = _shift(x, shift_prev)
+    delta = shifted - x
+    xk = x + delta * p["cm_maa_k"]
+    xr = x + delta * p["cm_maa_r"]
+    kk = jnp.square(jax.nn.relu(L.dense(p["cm_k"], xk)))
+    kk = constrain(kk, "batch", "seq", "mlp")
+    return jax.nn.sigmoid(L.dense(p["cm_r"], xr)) * L.dense(p["cm_v"], kk), \
+        x[:, -1:]
+
+
+def block(p, cfg: ModelConfig, x, state=None, chunked: bool = True):
+    """state: None (train) or dict(tm_shift (B,1,D), cm_shift, wkv (B,H,K,V))."""
+    st = state or {}
+    tm_out, tm_shift, wkv = time_mix(
+        p, cfg, L.layernorm(p["ln1"], x), shift_prev=st.get("tm_shift"),
+        wkv_state=st.get("wkv"), chunked=chunked)
+    x = x + tm_out
+    cm_out, cm_shift = channel_mix(p, L.layernorm(p["ln2"], x),
+                                   shift_prev=st.get("cm_shift"))
+    x = x + cm_out
+    new_state = {"tm_shift": tm_shift, "cm_shift": cm_shift, "wkv": wkv}
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# model-level API (matches transformer.py's contract)
+# ---------------------------------------------------------------------------
+
+
+def forward(params, cfg: ModelConfig, tokens, frontend_embeds=None, *,
+            collect_cache: bool = False, remat: bool = True,
+            last_only: bool = False):
+    cdt = jnp.dtype(cfg.dtype)
+    from repro.models.transformer import cast_params, _remat
+    pc = cast_params({k: v for k, v in params.items() if k != "layers"}, cdt)
+    x = L.embed_tokens(pc["embed"], tokens)
+    x = L.layernorm(pc["ln0"], x)
+
+    def layer_fn(x, lp):
+        lp = cast_params(lp, cdt)
+        x, st = block(lp, cfg, x)
+        return x, st if collect_cache else None
+
+    body = _remat(layer_fn, cfg) if remat else layer_fn
+
+    def scan_body(x, lp):
+        return body(x, lp)
+
+    x, states = jax.lax.scan(scan_body, x, params["layers"])
+    x = L.layernorm(pc["final_norm"], x[:, -1:] if last_only else x)
+    logits = L.lm_head(pc["head"], x)
+    aux = jnp.float32(0.0)
+    if collect_cache:
+        return logits, aux, states
+    return logits, aux
+
+
+def make_state(cfg: ModelConfig, batch: int, dtype=None):
+    h = n_heads(cfg)
+    dt = jnp.dtype(dtype or cfg.dtype)
+    return {
+        "tm_shift": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model), dt),
+        "cm_shift": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model), dt),
+        "wkv": jnp.zeros((cfg.n_layers, batch, h, HEAD_SIZE, HEAD_SIZE),
+                         jnp.float32),
+        "pos": jnp.int32(0),
+    }
+
+
+def state_specs(cfg: ModelConfig):
+    return {"tm_shift": (None, "batch", None, "embed"),
+            "cm_shift": (None, "batch", None, "embed"),
+            "wkv": (None, "batch", "heads", None, None),
+            "pos": ()}
+
+
+def decode_step(params, cfg: ModelConfig, tokens, state):
+    """tokens:(B,1).  Returns (logits (B,1,V), new state)."""
+    cdt = jnp.dtype(cfg.dtype)
+    from repro.models.transformer import cast_params
+    pc = cast_params({k: v for k, v in params.items() if k != "layers"}, cdt)
+    x = L.embed_tokens(pc["embed"], tokens)
+    x = L.layernorm(pc["ln0"], x)
+
+    def scan_body(x, xs):
+        lp, tm, cm, wkv = xs
+        lp = cast_params(lp, cdt)
+        x, st = block(lp, cfg, x,
+                      state={"tm_shift": tm, "cm_shift": cm, "wkv": wkv},
+                      chunked=False)
+        return x, (st["tm_shift"], st["cm_shift"], st["wkv"])
+
+    x, (tms, cms, wkvs) = jax.lax.scan(
+        scan_body, x,
+        (params["layers"], state["tm_shift"], state["cm_shift"],
+         state["wkv"]))
+    x = L.layernorm(pc["final_norm"], x)
+    logits = L.lm_head(pc["head"], x)
+    return logits, {"tm_shift": tms, "cm_shift": cms, "wkv": wkvs,
+                    "pos": state["pos"] + 1}

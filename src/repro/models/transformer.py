@@ -1,0 +1,355 @@
+"""Decoder-only LM backbone with scan-over-layers.
+
+Layers are stacked into *groups* matching the config's ``layer_pattern`` (gemma2
+alternates local/global so its group is 2 layers; uniform archs use groups of 1) and
+``lax.scan`` runs over the group axis, keeping the HLO O(1) in depth — required for
+the 512-device dry-run and standard practice (MaxText does the same).
+
+Params are initialised in float32 (training master dtype) and cast to ``cfg.dtype``
+at apply time; serving checkpoints may already hold bf16 and the cast is a no-op.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.sharding.partition import constrain
+
+# ---------------------------------------------------------------------------
+# layer pattern / grouping
+# ---------------------------------------------------------------------------
+
+
+def layer_pattern(cfg: ModelConfig) -> tuple[str, ...]:
+    if cfg.layer_pattern == "global":
+        return ("global",)
+    if cfg.layer_pattern == "local_global":
+        return ("local", "global")
+    raise ValueError(cfg.layer_pattern)
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    pat = layer_pattern(cfg)
+    assert cfg.n_layers % len(pat) == 0, (cfg.n_layers, pat)
+    return cfg.n_layers // len(pat)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_sublayer(key, cfg: ModelConfig, n_shards: int):
+    ka, kf = jax.random.split(key)
+    p = {
+        "ln1": L.init_rmsnorm(cfg.d_model, "float32", cfg.norm_plus_one),
+        "ln2": L.init_rmsnorm(cfg.d_model, "float32", cfg.norm_plus_one),
+        "attn": A.init_attention(ka, cfg.replace(dtype="float32")),
+    }
+    if cfg.moe is not None:
+        p["ffn"] = M.init_moe(kf, cfg.replace(dtype="float32"), n_shards)
+    else:
+        p["ffn"] = L.init_glu_mlp(kf, cfg.d_model, cfg.d_ff, "float32")
+    if cfg.post_norms:
+        p["ln1_post"] = L.init_rmsnorm(cfg.d_model, "float32",
+                                       cfg.norm_plus_one)
+        p["ln2_post"] = L.init_rmsnorm(cfg.d_model, "float32",
+                                       cfg.norm_plus_one)
+    return p
+
+
+def _sublayer_specs(cfg: ModelConfig):
+    p = {
+        "ln1": L.rmsnorm_specs(),
+        "ln2": L.rmsnorm_specs(),
+        "attn": A.attention_specs(cfg),
+        "ffn": M.moe_specs(cfg) if cfg.moe is not None else L.glu_mlp_specs(),
+    }
+    if cfg.post_norms:
+        p["ln1_post"] = L.rmsnorm_specs()
+        p["ln2_post"] = L.rmsnorm_specs()
+    return p
+
+
+def init_lm(key, cfg: ModelConfig, n_shards: int = 16):
+    pat = layer_pattern(cfg)
+    ke, kh, kl, kfe = jax.random.split(key, 4)
+
+    def init_group(k):
+        ks = jax.random.split(k, len(pat))
+        return {f"sub{i}": _init_sublayer(ks[i], cfg, n_shards)
+                for i in range(len(pat))}
+
+    group_keys = jax.random.split(kl, n_groups(cfg))
+    p = {
+        "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, "float32"),
+        "layers": jax.vmap(init_group)(group_keys),
+        "final_norm": L.init_rmsnorm(cfg.d_model, "float32",
+                                     cfg.norm_plus_one),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = L.init_lm_head(kh, cfg.d_model, cfg.vocab_size, "float32")
+    if cfg.frontend != "none":
+        p["frontend_proj"] = L.init_dense(kfe, cfg.d_frontend, cfg.d_model,
+                                          "float32")
+    return p
+
+
+def lm_specs(cfg: ModelConfig):
+    pat = layer_pattern(cfg)
+    sub = _sublayer_specs(cfg)
+    # prepend the stacked "layers" axis to every per-layer leaf
+    stacked = jax.tree.map(lambda axes: ("layers",) + axes,
+                           {f"sub{i}": sub for i in range(len(pat))},
+                           is_leaf=lambda t: isinstance(t, tuple))
+    p = {
+        "embed": L.embedding_specs(),
+        "layers": stacked,
+        "final_norm": L.rmsnorm_specs(),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = L.lm_head_specs()
+    if cfg.frontend != "none":
+        p["frontend_proj"] = L.dense_specs(None, "embed")
+    return p
+
+
+def cast_params(tree, dtype):
+    dt = jnp.dtype(dtype)
+
+    def cast(path, a):
+        if a.dtype == jnp.float32 and "router" not in str(path):
+            return a.astype(dt)
+        return a
+
+    return jax.tree_util.tree_map_with_path(cast, tree)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _ffn(params, cfg: ModelConfig, h):
+    if cfg.moe is not None:
+        return M.moe_ffn(params, cfg, h)
+    return L.glu_mlp(params, h, cfg.act), jnp.float32(0.0)
+
+
+def block_full(params, cfg: ModelConfig, x, kind: str):
+    """One sublayer over a full sequence (train / prefill).  Returns
+    (x, aux_loss, (k, v)) — k/v returned so prefill can build the cache.
+
+    Norms run in the sequence-sharded region (their outputs constrained to
+    res_seq) so the boundary all-gather moves the bf16 norm OUTPUT, not the
+    fp32 norm internals — Megatron's LN placement."""
+    window = cfg.sliding_window if kind == "local" else 0
+    h = L.rmsnorm(params["ln1"], x, cfg.norm_eps, cfg.norm_plus_one)
+    h = constrain(h, "batch", "res_seq", "embed")
+    attn, kv = A.attend_full(params["attn"], cfg, h, window=window)
+    if cfg.post_norms:
+        attn = L.rmsnorm(params["ln1_post"], attn, cfg.norm_eps,
+                         cfg.norm_plus_one)
+    x = x + attn
+    h = L.rmsnorm(params["ln2"], x, cfg.norm_eps, cfg.norm_plus_one)
+    h = constrain(h, "batch", "res_seq", "embed")
+    ffn, aux = _ffn(params["ffn"], cfg, h)
+    if cfg.post_norms:
+        ffn = L.rmsnorm(params["ln2_post"], ffn, cfg.norm_eps,
+                        cfg.norm_plus_one)
+    x = x + ffn
+    # residual stream may be sequence-sharded between layers (train rules):
+    # the per-layer activation stack the backward saves shrinks by the model
+    # axis, at the cost of an all-gather/reduce-scatter pair per block
+    return constrain(x, "batch", "res_seq", "embed"), aux, kv
+
+
+def block_decode(params, cfg: ModelConfig, x, kind: str, cache_k, cache_v,
+                 pos):
+    window = cfg.sliding_window if kind == "local" else 0
+    h = L.rmsnorm(params["ln1"], x, cfg.norm_eps, cfg.norm_plus_one)
+    attn, (ck, cv) = A.decode_step(params["attn"], cfg, h, cache_k, cache_v,
+                                   pos, window=window)
+    if cfg.post_norms:
+        attn = L.rmsnorm(params["ln1_post"], attn, cfg.norm_eps,
+                         cfg.norm_plus_one)
+    x = x + attn
+    h = L.rmsnorm(params["ln2"], x, cfg.norm_eps, cfg.norm_plus_one)
+    ffn, aux = _ffn(params["ffn"], cfg, h)
+    if cfg.post_norms:
+        ffn = L.rmsnorm(params["ln2_post"], ffn, cfg.norm_eps,
+                        cfg.norm_plus_one)
+    return x + ffn, aux, (ck, cv)
+
+
+# ---------------------------------------------------------------------------
+# embedding-in / logits-out
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params, cfg: ModelConfig, tokens, frontend_embeds=None):
+    scale = cfg.d_model ** 0.5 if cfg.scale_embeds else None
+    x = L.embed_tokens(params["embed"], tokens, scale)
+    if frontend_embeds is not None:
+        fe = L.dense(params["frontend_proj"],
+                     frontend_embeds.astype(x.dtype))
+        x = jnp.concatenate([fe, x], axis=1)
+    return x
+
+
+def logits_out(params, cfg: ModelConfig, x):
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps, cfg.norm_plus_one)
+    if cfg.tie_embeddings:
+        return L.tied_lm_head(params["embed"], x, cfg.final_logit_softcap)
+    return L.lm_head(params["head"], x, cfg.final_logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def forward(params, cfg: ModelConfig, tokens, frontend_embeds=None, *,
+            collect_cache: bool = False, remat: bool = True,
+            last_only: bool = False):
+    """Returns (logits, aux_loss[, cache]) over the full sequence.
+    last_only slices the stream before the LM head (prefill never pays the
+    full-sequence logits matmul)."""
+    pat = layer_pattern(cfg)
+    cdt = jnp.dtype(cfg.dtype)
+    pc = cast_params({k: v for k, v in params.items() if k != "layers"}, cdt)
+    x = embed_inputs(pc, cfg, tokens, frontend_embeds)
+    x = constrain(x, "batch", "res_seq", "embed")
+    # cast the stacked layer params ONCE, before the scan: the per-step FSDP
+    # all-gathers then move bf16, not the fp32 masters (§Perf iter 6)
+    layers_c = cast_params(params["layers"], cdt)
+
+    def group_fn(x, gp):
+        aux = jnp.float32(0.0)
+        kvs = []
+        for i, kind in enumerate(pat):
+            x, a, kv = block_full(gp[f"sub{i}"], cfg, x, kind)
+            aux += a
+            kvs.append(kv)
+        ks = jnp.stack([k for k, _ in kvs])
+        vs = jnp.stack([v for _, v in kvs])
+        return x, (aux, (ks, vs) if collect_cache else None)
+
+    body = _remat(group_fn, cfg) if remat else group_fn
+
+    def scan_body(carry, group_params):
+        x = carry
+        x, (aux, kv) = body(x, group_params)
+        return x, (aux, kv)
+
+    x, (auxs, kv) = jax.lax.scan(scan_body, x, layers_c)
+    logits = logits_out(pc, cfg, x[:, -1:] if last_only else x)
+    aux = jnp.sum(auxs)
+    if collect_cache:
+        return logits, aux, kv
+    return logits, aux
+
+
+def prefill(params, cfg: ModelConfig, tokens, frontend_embeds=None,
+            pad_to: Optional[int] = None):
+    """Full-sequence forward that also returns a KV cache sized ``pad_to``
+    (defaults to the prompt length)."""
+    logits, aux, (ks, vs) = forward(params, cfg, tokens, frontend_embeds,
+                                    collect_cache=True, remat=False)
+    s = ks.shape[3]
+    pad_to = pad_to or s
+    if pad_to > s:
+        pad = [(0, 0)] * ks.ndim
+        pad[3] = (0, pad_to - s)
+        ks = jnp.pad(ks, pad)
+        vs = jnp.pad(vs, pad)
+    cache = {"k": constrain_cache(ks), "v": constrain_cache(vs),
+             "pos": jnp.int32(s)}
+    return logits[:, -1:], cache
+
+
+def constrain_cache(c):
+    # (groups, group, batch, seq, kv_heads, head_dim)
+    return constrain(c, None, None, "batch", "kv_seq", "kv_heads", None)
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    pat = layer_pattern(cfg)
+    dt = jnp.dtype(dtype or cfg.dtype)
+    shape = (n_groups(cfg), len(pat), batch, max_len, cfg.n_kv_heads,
+             cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+            "pos": jnp.int32(0)}
+
+
+def cache_specs(cfg: ModelConfig):
+    return {"k": (None, None, "batch", "kv_seq", "kv_heads", None),
+            "v": (None, None, "batch", "kv_seq", "kv_heads", None),
+            "pos": ()}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache):
+    """One decode step.  tokens:(B,1) int32; cache from make_cache/prefill.
+    Returns (logits (B,1,V), new_cache)."""
+    pat = layer_pattern(cfg)
+    cdt = jnp.dtype(cfg.dtype)
+    pc = cast_params({k: v for k, v in params.items() if k != "layers"}, cdt)
+    pos = cache["pos"]
+    x = embed_inputs(pc, cfg, tokens)
+
+    def scan_body(x, xs):
+        group_params, ck, cv = xs
+        gp = cast_params(group_params, cdt)
+        new_k, new_v = [], []
+        for i, kind in enumerate(pat):
+            x, _, (k_i, v_i) = block_decode(gp[f"sub{i}"], cfg, x, kind,
+                                            ck[i], cv[i], pos)
+            new_k.append(k_i)
+            new_v.append(v_i)
+        return x, (jnp.stack(new_k), jnp.stack(new_v))
+
+    x, (ks, vs) = jax.lax.scan(scan_body, x,
+                               (params["layers"], cache["k"], cache["v"]))
+    logits = logits_out(pc, cfg, x)
+    new_cache = {"k": constrain_cache(ks), "v": constrain_cache(vs),
+                 "pos": pos + 1}
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(logits, labels, aux: jnp.ndarray = None, aux_weight: float = 0.01):
+    """Mean token cross-entropy; labels < 0 are masked."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, jnp.maximum(labels, 0)[..., None],
+                             axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    if aux is not None:
+        loss = loss + aux_weight * aux
+    return loss

@@ -1,0 +1,176 @@
+"""Zamba2 hybrid (arXiv:2411.15242): a stack of Mamba2 blocks with a single
+SHARED attention+MLP transformer block invoked every ``shared_attn_every``
+mamba layers (param reuse; each invocation keeps its own KV cache).
+
+Simplifications vs the released checkpoints (recorded in DESIGN.md): the
+per-invocation LoRA adapters on the shared block and the concat-with-embedding
+input are omitted; the shared block consumes the running hidden state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import transformer as T
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.shared_attn_every == 0
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_shared(key, cfg: ModelConfig):
+    ka, kf = jax.random.split(key)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model, "float32"),
+        "ln2": L.init_rmsnorm(cfg.d_model, "float32"),
+        "attn": A.init_attention(ka, cfg.replace(dtype="float32")),
+        "ffn": L.init_glu_mlp(kf, cfg.d_model, cfg.d_ff, "float32"),
+    }
+
+
+def init_zamba2(key, cfg: ModelConfig, n_shards: int = 16):
+    ke, km, ks, kh = jax.random.split(key, 4)
+    layer_keys = jax.random.split(km, cfg.n_layers).reshape(
+        n_groups(cfg), cfg.shared_attn_every, 2)
+
+    def init_group(ks_):
+        return jax.vmap(lambda k: M2.init_mamba2(k, cfg))(ks_)
+
+    return {
+        "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, "float32"),
+        "mamba": jax.vmap(init_group)(layer_keys),
+        "shared": _init_shared(ks, cfg),
+        "final_norm": L.init_rmsnorm(cfg.d_model, "float32"),
+        "head": L.init_lm_head(kh, cfg.d_model, cfg.vocab_size, "float32"),
+    }
+
+
+def zamba2_specs(cfg: ModelConfig):
+    msub = M2.mamba2_specs(cfg)
+    return {
+        "embed": L.embedding_specs(),
+        "mamba": jax.tree.map(lambda t: ("layers", None) + t, msub,
+                              is_leaf=lambda t: isinstance(t, tuple)),
+        "shared": {
+            "ln1": L.rmsnorm_specs(), "ln2": L.rmsnorm_specs(),
+            "attn": A.attention_specs(cfg),
+            "ffn": L.glu_mlp_specs(),
+        },
+        "final_norm": L.rmsnorm_specs(),
+        "head": L.lm_head_specs(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward / decode
+# ---------------------------------------------------------------------------
+
+
+def _shared_full(p, cfg, x):
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    attn, kv = A.attend_full(p["attn"], cfg, h)
+    x = x + attn
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + L.glu_mlp(p["ffn"], h, cfg.act), kv
+
+
+def forward(params, cfg: ModelConfig, tokens, frontend_embeds=None, *,
+            collect_cache: bool = False, remat: bool = True,
+            last_only: bool = False):
+    cdt = jnp.dtype(cfg.dtype)
+    pc = T.cast_params({k: v for k, v in params.items()
+                        if k not in ("mamba",)}, cdt)
+    x = L.embed_tokens(pc["embed"], tokens)
+    shared = pc["shared"]
+
+    def group_fn(x, gp):
+        gp = T.cast_params(gp, cdt)
+        x, kv = _shared_full(shared, cfg, x)
+
+        def inner(x, lp):
+            x, st = M2.block(lp, cfg, x, chunked=True)
+            return x, (st if collect_cache else None)
+
+        x, states = jax.lax.scan(inner, x, gp)
+        return x, (kv if collect_cache else None, states)
+
+    body = T._remat(group_fn, cfg) if remat else group_fn
+    x, (kvs, mstates) = jax.lax.scan(lambda c, xs: body(c, xs), x,
+                                     params["mamba"])
+    x = L.rmsnorm(pc["final_norm"], x[:, -1:] if last_only else x,
+                  cfg.norm_eps)
+    logits = L.lm_head(pc["head"], x)
+    aux = jnp.float32(0.0)
+    if collect_cache:
+        return logits, aux, (kvs, mstates)
+    return logits, aux
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dt = jnp.dtype(dtype or cfg.dtype)
+    g = n_groups(cfg)
+    e = cfg.shared_attn_every
+    d_inner, nh, conv_ch = M2.dims(cfg)
+    return {
+        "attn_k": jnp.zeros((g, batch, max_len, cfg.n_kv_heads,
+                             cfg.head_dim), dt),
+        "attn_v": jnp.zeros((g, batch, max_len, cfg.n_kv_heads,
+                             cfg.head_dim), dt),
+        "conv": jnp.zeros((g, e, batch, cfg.ssm.d_conv - 1, conv_ch), dt),
+        "ssd": jnp.zeros((g, e, batch, nh, cfg.ssm.head_dim,
+                          cfg.ssm.d_state), jnp.float32),
+        "pos": jnp.int32(0),
+    }
+
+
+def cache_specs(cfg: ModelConfig):
+    return {"attn_k": (None, "batch", "kv_seq", "kv_heads", None),
+            "attn_v": (None, "batch", "kv_seq", "kv_heads", None),
+            "conv": (None, None, "batch", None, "heads"),
+            "ssd": (None, None, "batch", "heads", None, None),
+            "pos": ()}
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache):
+    cdt = jnp.dtype(cfg.dtype)
+    pc = T.cast_params({k: v for k, v in params.items()
+                        if k not in ("mamba",)}, cdt)
+    x = L.embed_tokens(pc["embed"], tokens)
+    shared = pc["shared"]
+    pos = cache["pos"]
+
+    def group_fn(x, xs):
+        gp, ck, cv, conv_st, ssd_st = xs
+        gp = T.cast_params(gp, cdt)
+        h = L.rmsnorm(shared["ln1"], x, cfg.norm_eps)
+        attn, (ck, cv) = A.decode_step(shared["attn"], cfg, h, ck, cv, pos)
+        x = x + attn
+        h = L.rmsnorm(shared["ln2"], x, cfg.norm_eps)
+        x = x + L.glu_mlp(shared["ffn"], h, cfg.act)
+
+        def inner(x, lxs):
+            lp, cst, sst = lxs
+            x, st = M2.block(lp, cfg, x, state={"conv": cst, "ssd": sst},
+                             chunked=False)
+            return x, (st["conv"], st["ssd"])
+
+        x, (convs, ssds) = jax.lax.scan(inner, x, (gp, conv_st, ssd_st))
+        return x, (ck, cv, convs, ssds)
+
+    x, (cks, cvs, convs, ssds) = jax.lax.scan(
+        group_fn, x, (params["mamba"], cache["attn_k"], cache["attn_v"],
+                      cache["conv"], cache["ssd"]))
+    x = L.rmsnorm(pc["final_norm"], x, cfg.norm_eps)
+    logits = L.lm_head(pc["head"], x)
+    return logits, {"attn_k": cks, "attn_v": cvs, "conv": convs,
+                    "ssd": ssds, "pos": pos + 1}

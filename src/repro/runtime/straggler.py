@@ -1,0 +1,65 @@
+"""Straggler detection + mitigation policy.
+
+For inference the BLS bound IS the mitigation: a bound of k absorbs any
+transient per-host delay up to k iterations of slack (paper §IV).  The
+policy below closes the loop: observe per-step latency jitter, recommend the
+smallest k whose absorption window covers the tail, and cap it by the memory
+budget (ring bytes are linear in k — core/bls.BLSStats)."""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class BoundRecommendation:
+    bound: int
+    reason: str
+    p50: float
+    p99: float
+
+
+class StragglerMonitor:
+    """EWMA + windowed percentiles over observed step latencies."""
+
+    def __init__(self, window: int = 256):
+        self.lat = collections.deque(maxlen=window)
+
+    def observe(self, seconds: float) -> None:
+        self.lat.append(seconds)
+
+    def percentile(self, q: float) -> float:
+        if not self.lat:
+            return 0.0
+        xs = sorted(self.lat)
+        i = min(len(xs) - 1, int(q * len(xs)))
+        return xs[i]
+
+    def recommend_bound(self, *, slot_bytes: int, memory_budget: int,
+                        max_bound: int = 16) -> BoundRecommendation:
+        """k ~= ceil(p99 excess jitter / median step): the number of
+        iterations of slack needed to absorb the observed tail, capped by
+        the ring-buffer budget (paper: ring bytes = k * slot_bytes)."""
+        p50 = self.percentile(0.50)
+        p99 = self.percentile(0.99)
+        if p50 <= 0:
+            return BoundRecommendation(0, "no data", 0.0, 0.0)
+        jitter = max(p99 - p50, 0.0)
+        k = min(max_bound, int(-(-jitter // p50)))  # ceil
+        if slot_bytes > 0:
+            k = min(k, memory_budget // slot_bytes)
+        reason = (f"p99-p50 jitter {jitter*1e3:.2f} ms over median "
+                  f"{p50*1e3:.2f} ms -> k={k}")
+        return BoundRecommendation(k, reason, p50, p99)
+
+
+def detect_stragglers(per_host_latencies: dict, threshold: float = 1.5
+                      ) -> list:
+    """Hosts consistently above threshold x median are CONSISTENT stragglers
+    — the case the paper shows BLS cannot mask; flag for eviction/replace
+    (elastic.py) instead of masking."""
+    if not per_host_latencies:
+        return []
+    med = sorted(per_host_latencies.values())[len(per_host_latencies) // 2]
+    return [h for h, v in per_host_latencies.items() if v > threshold * med]

@@ -1,0 +1,126 @@
+"""Batched inference engine.
+
+DLRM path (the paper's scenario): requests (dense, sparse) accumulate into
+fixed-size batches; the jitted BLS step runs the bounded-lag pipeline over
+microbatches; per-batch latency feeds the straggler monitor whose
+recommendation can retune the bound between batches.
+
+LM path: synchronous batched greedy decode against a prefill'd KV cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DLRMConfig, ModelConfig
+from repro.models import api, dlrm as dlrm_mod
+from repro.runtime.straggler import StragglerMonitor
+from repro.train import steps as steps_mod
+
+
+@dataclasses.dataclass
+class ServeStats:
+    batches: int = 0
+    requests: int = 0
+    total_s: float = 0.0
+
+    @property
+    def throughput_rps(self) -> float:
+        return self.requests / self.total_s if self.total_s else 0.0
+
+
+class DLRMEngine:
+    """Fixed-batch CTR serving with the BLS-enabled step."""
+
+    def __init__(self, params, cfg: DLRMConfig, *, batch_size: int = 512,
+                 bound: int = 0, microbatches: int = 1):
+        self.params, self.cfg = params, cfg
+        self.batch_size = batch_size
+        self.bound, self.microbatches = bound, microbatches
+        self.monitor = StragglerMonitor()
+        self.stats = ServeStats()
+        self._pending: list = []
+        self._step = jax.jit(self._make_step(bound, microbatches))
+
+    def _make_step(self, bound, microbatches):
+        cfg = self.cfg
+
+        def step(params, dense, idx, mask):
+            logits = dlrm_mod.forward_distributed(
+                params, cfg, dense, idx, mask, bound=bound,
+                microbatches=microbatches)
+            return jax.nn.sigmoid(logits)
+
+        return step
+
+    def submit(self, dense: np.ndarray, idx: np.ndarray, mask: np.ndarray):
+        """Queue one request (row).  Returns CTRs when a batch fills."""
+        self._pending.append((dense, idx, mask))
+        if len(self._pending) >= self.batch_size:
+            return self.flush()
+        return None
+
+    def flush(self):
+        if not self._pending:
+            return None
+        n = len(self._pending)
+        pad = self.batch_size - n
+        d = np.stack([p[0] for p in self._pending] +
+                     [self._pending[-1][0]] * pad)
+        i = np.stack([p[1] for p in self._pending] +
+                     [self._pending[-1][1]] * pad)
+        m = np.stack([p[2] for p in self._pending] +
+                     [self._pending[-1][2]] * pad)
+        self._pending.clear()
+        t0 = time.perf_counter()
+        out = np.asarray(self._step(self.params, jnp.asarray(d),
+                                    jnp.asarray(i), jnp.asarray(m)))
+        el = time.perf_counter() - t0
+        self.monitor.observe(el)
+        self.stats.batches += 1
+        self.stats.requests += n
+        self.stats.total_s += el
+        return out[:n]
+
+    def recommend_bound(self, memory_budget: int = 64 << 20):
+        cfg = self.cfg
+        slot = (self.batch_size * cfg.n_tables * cfg.embed_dim * 4 +
+                self.batch_size * cfg.embed_dim * 4)
+        return self.monitor.recommend_bound(slot_bytes=slot,
+                                            memory_budget=memory_budget)
+
+
+class LMEngine:
+    """Batched greedy decoding for the LM families."""
+
+    def __init__(self, params, cfg: ModelConfig, *, max_len: int = 256):
+        self.params, self.cfg, self.max_len = params, cfg, max_len
+        self._serve = jax.jit(steps_mod.make_serve_step(cfg))
+        self.monitor = StragglerMonitor()
+
+    def generate(self, prompts: np.ndarray, n_tokens: int) -> np.ndarray:
+        """prompts: (B, P) int32 -> (B, n_tokens) greedy continuation."""
+        from repro.models import transformer as T
+        b, p = prompts.shape
+        if self.cfg.family in ("dense", "moe", "vlm"):
+            _, cache = T.prefill(self.params, self.cfg,
+                                 jnp.asarray(prompts), pad_to=self.max_len)
+        else:
+            cache = api.make_cache(self.cfg, b, self.max_len)
+            for t in range(p):  # recurrent families consume token-by-token
+                _, cache = api.decode_step(self.params, self.cfg,
+                                           jnp.asarray(prompts[:, t:t + 1]),
+                                           cache)
+        tok = jnp.asarray(prompts[:, -1:])
+        outs = []
+        for _ in range(n_tokens):
+            t0 = time.perf_counter()
+            tok, cache = self._serve(self.params, tok, cache)
+            self.monitor.observe(time.perf_counter() - t0)
+            outs.append(np.asarray(tok))
+        return np.concatenate(outs, axis=1)

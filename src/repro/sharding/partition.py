@@ -1,0 +1,154 @@
+"""Logical-axis sharding: rules mapping logical tensor axes to mesh axes.
+
+Modules annotate tensors with *logical* axis names; a rules table maps those to
+physical mesh axes.  ``constrain`` is a no-op outside a mesh context so the same
+model code runs in single-device smoke tests and in the 512-device dry-run.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Default logical->physical rules for the production (data, model) mesh.
+# "batch" rides (pod, data) when the pod axis exists.
+DEFAULT_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),
+    "seq": None,            # sequence usually replicated; long-context decode overrides
+    "res_seq": None,        # residual-stream seq (Megatron-style sequence
+                            # parallelism between layers; train rules -> model)
+    "kv_seq": None,         # KV-cache sequence axis (sequence-parallel decode overrides)
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "act_heads": None,     # head-count dim of activations (set per arch when
+    "act_kv": None,        # divisible by the model axis)
+    "act_groups": None,    # GQA group dim of score tensors (fallback)
+    "act_qchunk": None,    # flash q-chunk dim of score tensors (fallback 2)
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "emb_vocab": "model",   # embedding-table rows
+    "emb_col": None,        # embedding-table columns
+    "experts": "model",
+    "expert_mlp": None,
+    "layers": None,
+    "table_rows": "model",   # DLRM row-sharded embedding tables
+    "stack": None,
+    "conv": None,
+    "state": None,
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: dict[str, object] = dict(DEFAULT_RULES)
+
+
+_CTX = _Ctx()
+
+
+class axis_rules:
+    """Context manager installing a mesh + logical rules for ``constrain``."""
+
+    def __init__(self, mesh: Optional[Mesh], rules: Optional[dict] = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+
+    def __enter__(self):
+        self._prev = (_CTX.mesh, _CTX.rules)
+        _CTX.mesh, _CTX.rules = self.mesh, self.rules
+        return self
+
+    def __exit__(self, *exc):
+        _CTX.mesh, _CTX.rules = self._prev
+        return False
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def _physical(axes: Sequence[Optional[str]], rules: dict, mesh: Mesh) -> P:
+    """Map logical axes to a PartitionSpec valid for ``mesh``."""
+    used: set[str] = set()
+    out = []
+    for ax in axes:
+        if ax is None:
+            out.append(None)
+            continue
+        phys = rules.get(ax, None)
+        if phys is None:
+            out.append(None)
+            continue
+        if isinstance(phys, str):
+            phys = (phys,)
+        # keep only axes present in the mesh and not already used in this spec
+        keep = tuple(p for p in phys if p in mesh.axis_names and p not in used)
+        used.update(keep)
+        if not keep:
+            out.append(None)
+        elif len(keep) == 1:
+            out.append(keep[0])
+        else:
+            out.append(keep)
+    return P(*out)
+
+
+def spec(*axes: Optional[str], rules: Optional[dict] = None,
+         mesh: Optional[Mesh] = None) -> P:
+    """Resolve logical axes to a PartitionSpec (requires a mesh for validity).
+    A ``rules`` argument is treated as OVERRIDES on top of the defaults."""
+    mesh = mesh or _CTX.mesh
+    if rules is not None:
+        r = dict(DEFAULT_RULES)
+        r.update(rules)
+    else:
+        r = _CTX.rules
+    if mesh is None:
+        return P(*axes)  # best effort; only used for debugging
+    return _physical(axes, r, mesh)
+
+
+def sharding(*axes: Optional[str], mesh: Optional[Mesh] = None,
+             rules: Optional[dict] = None) -> Optional[NamedSharding]:
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec(*axes, rules=rules, mesh=mesh))
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint against the installed rules; no-op w/o mesh."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(f"constrain: {len(axes)} axes for rank-{x.ndim} array")
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, _physical(axes, _CTX.rules, mesh)))
+
+
+def tree_shardings(spec_tree, mesh: Optional[Mesh] = None,
+                   rules: Optional[dict] = None):
+    """Map a pytree of logical-axis tuples to NamedShardings.  ``rules`` are
+    overrides on top of the defaults."""
+    mesh = mesh or _CTX.mesh
+    if rules is not None:
+        r = dict(DEFAULT_RULES)
+        r.update(rules)
+    else:
+        r = _CTX.rules
+    if mesh is None:
+        raise ValueError("tree_shardings requires a mesh")
+    return jax.tree.map(
+        lambda axes: NamedSharding(mesh, _physical(axes, r, mesh)),
+        spec_tree,
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            a is None or isinstance(a, str) for a in t),
+    )

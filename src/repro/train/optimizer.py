@@ -1,0 +1,69 @@
+"""AdamW with fully-sharded (param-spec-mirrored) optimizer state, plus the
+cosine/warmup schedule.  No optax dependency — everything the dry-run shards
+is built here."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_specs(param_specs):
+    """Optimizer-state logical axes mirror the parameters'."""
+    return {"m": param_specs, "v": param_specs, "count": ()}
+
+
+def adamw_update(grads, state, params, lr, *, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1):
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** cf
+    bc2 = 1.0 - b2 ** cf
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m = b1 * m + (1.0 - b1) * gf
+        v = b2 * v + (1.0 - b2) * jnp.square(gf)
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        step = step + weight_decay * p.astype(jnp.float32)
+        return m, v, (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_p = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}
+
+
+def cosine_schedule(step, *, peak_lr: float = 3e-4, warmup: int = 100,
+                    total: int = 10_000, floor: float = 0.1):
+    sf = step.astype(jnp.float32)
+    warm = (sf + 1.0) / max(warmup, 1)  # step 0 already takes a step
+    prog = jnp.clip((sf - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return peak_lr * jnp.where(sf < warmup, warm, cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float = 1.0):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm

@@ -1,0 +1,78 @@
+"""Arch-agnostic train / prefill / serve step builders.
+
+These are the programs the multi-pod dry-run lowers and the drivers execute:
+  train_step  : fwd + loss + bwd + clip + AdamW  (shape cells ``train_*``)
+  prefill_step: no-grad forward (+ KV-cache build for decode handoff)
+  serve_step  : one-token decode against a KV cache / recurrent state
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.train import optimizer as opt
+
+
+def make_train_step(cfg: ModelConfig, *, peak_lr: float = 3e-4,
+                    grad_clip: float = 1.0, total_steps: int = 10_000,
+                    accum_steps: int = 1):
+    """accum_steps > 1 scans gradient accumulation over microbatches: the
+    live activation set shrinks by the factor (how the 72B train cell fits
+    v5e HBM) at the cost of re-gathering FSDP shards per microbatch."""
+
+    def loss_fn(p, batch):
+        logits, aux = api.forward(p, cfg, batch, remat=True)
+        return api.loss(cfg, logits, batch["labels"], aux)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            split = jax.tree.map(
+                lambda a: a.reshape(accum_steps, a.shape[0] // accum_steps,
+                                    *a.shape[1:]), batch)
+
+            def micro(carry, mb):
+                loss_acc, grads_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (loss_acc + l,
+                        jax.tree.map(jnp.add, grads_acc, g)), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(micro, (jnp.float32(0.0), zeros),
+                                            split)
+            inv = 1.0 / accum_steps
+            loss = loss * inv
+            grads = jax.tree.map(lambda g: g * inv, grads)
+        grads, grad_norm = opt.clip_by_global_norm(grads, grad_clip)
+        lr = opt.cosine_schedule(opt_state["count"], peak_lr=peak_lr,
+                                 total=total_steps)
+        params, opt_state = opt.adamw_update(grads, opt_state, params, lr)
+        metrics = {"loss": loss, "grad_norm": grad_norm, "lr": lr}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, aux = api.forward(params, cfg, batch, remat=False,
+                                  last_only=True)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, tokens, cache):
+        logits, cache = api.decode_step(params, cfg, tokens, cache)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], cache
+
+    return serve_step

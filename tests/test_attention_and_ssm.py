@@ -1,0 +1,123 @@
+"""Flash attention (fwd + custom VJP) and SSM evaluator equivalences."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models import attention as A
+
+
+def _cfg(softcap=0.0):
+    return ModelConfig(name="t", family="dense", n_layers=1, d_model=64,
+                       n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64,
+                       attn_logit_softcap=softcap, dtype="float32")
+
+
+def _qkv(s=256, b=2, h=4, kh=2, hd=16, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (b, s, h, hd)),
+            jax.random.normal(ks[1], (b, s, kh, hd)),
+            jax.random.normal(ks[2], (b, s, kh, hd)))
+
+
+@pytest.mark.parametrize("window,causal,softcap", [
+    (0, True, 0.0), (64, True, 0.0), (0, False, 0.0),
+    (0, True, 30.0), (32, True, 50.0),
+])
+def test_flash_matches_dense_fwd_and_grad(window, causal, softcap):
+    cfg = _cfg(softcap)
+    q, k, v = _qkv()
+    s = q.shape[1]
+    mask = A.causal_mask(s, s, window) if causal else \
+        jnp.ones((1, 1, 1, s, s), bool)
+    f = lambda q, k, v: A.flash_attention(cfg, q, k, v, window, causal,
+                                          64, 32)
+    r = lambda q, k, v: A._sdpa(cfg, q, k, v, mask)
+    assert jnp.allclose(f(q, k, v), r(q, k, v), atol=1e-4)
+    dout = jax.random.normal(jax.random.PRNGKey(9), (2, s, 64))
+    _, vf = jax.vjp(f, q, k, v)
+    _, vr = jax.vjp(r, q, k, v)
+    for gf, gr in zip(vf(dout), vr(dout)):
+        assert jnp.allclose(gf, gr, atol=2e-3)
+
+
+def test_decode_matches_full_forward_qwen_flavour():
+    cfg = _cfg().replace(qk_norm=True, qkv_bias=True)
+    from repro.models import transformer as T
+    cfg = cfg.replace(n_layers=2, remat="none")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg, 1)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 17), 0, 64)
+    last, cache = T.prefill(params, cfg, toks[:, :16], pad_to=24)
+    lg, _ = T.decode_step(params, cfg, toks[:, 16:17], cache)
+    full, _ = T.forward(params, cfg, toks, remat=False)
+    assert jnp.allclose(lg[:, 0], full[:, 16], atol=2e-3)
+
+
+class TestSSM:
+    def test_mamba2_chunked_vs_recurrent(self):
+        from repro.models import mamba2 as M2
+        b, s, nh, p, n = 2, 64, 3, 16, 8
+        ks = jax.random.split(jax.random.PRNGKey(1), 5)
+        x = jax.random.normal(ks[0], (b, s, nh, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, nh)))
+        B = jax.random.normal(ks[2], (b, s, n))
+        C = jax.random.normal(ks[3], (b, s, n))
+        A_log = jax.random.normal(ks[4], (nh,)) * 0.5
+        D = jnp.ones((nh,))
+        st0 = jnp.zeros((b, nh, p, n))
+        y1, s1 = M2.ssd_recurrent(x, dt, A_log, B, C, D, st0)
+        y2, s2 = M2.ssd_chunked(x, dt, A_log, B, C, D, st0, chunk=16)
+        assert jnp.allclose(y1, y2, atol=1e-4)
+        assert jnp.allclose(s1, s2, atol=1e-4)
+
+    def test_rwkv6_decode_matches_forward(self):
+        from repro.models import rwkv6 as R
+        cfg = ModelConfig(name="t", family="ssm", n_layers=2, d_model=128,
+                          n_heads=2, n_kv_heads=2, d_ff=256, vocab_size=64,
+                          dtype="float32", remat="none")
+        params = R.init_rwkv6(jax.random.PRNGKey(0), cfg, 1)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 64)
+        full, _ = R.forward(params, cfg, toks, remat=False)
+        state = R.make_state(cfg, 2)
+        outs = []
+        for t in range(16):
+            lg, state = R.decode_step(params, cfg, toks[:, t:t + 1], state)
+            outs.append(lg)
+        dec = jnp.concatenate(outs, 1)
+        assert jnp.allclose(dec, full, atol=2e-3)
+
+    def test_zamba2_decode_matches_forward(self):
+        from repro.models import zamba2 as Z
+        cfg = ModelConfig(name="t", family="hybrid", n_layers=4, d_model=64,
+                          n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=64,
+                          d_head=16, shared_attn_every=2,
+                          ssm=SSMConfig(d_state=16, d_conv=4, expand=2,
+                                        head_dim=16, chunk=8),
+                          dtype="float32", remat="none")
+        params = Z.init_zamba2(jax.random.PRNGKey(0), cfg, 1)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 64)
+        full, _ = Z.forward(params, cfg, toks, remat=False)
+        cache = Z.make_cache(cfg, 2, 16)
+        outs = []
+        for t in range(16):
+            lg, cache = Z.decode_step(params, cfg, toks[:, t:t + 1], cache)
+            outs.append(lg)
+        dec = jnp.concatenate(outs, 1)
+        assert jnp.allclose(dec, full, atol=2e-3)
+
+
+def test_rope_styles():
+    from repro.models import layers as L
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, 16))
+    pos = jnp.arange(8)[None]
+    for style, frac in [("neox", 1.0), ("glm2d", 0.5)]:
+        y = L.apply_rope(x, pos, 10000.0, frac, style)
+        assert y.shape == x.shape
+        # norm preserved on the rotated part; untouched tail equal
+        rot = int(16 * frac)
+        assert jnp.allclose(jnp.linalg.norm(y[..., :rot], axis=-1),
+                            jnp.linalg.norm(x[..., :rot], axis=-1),
+                            atol=1e-4)
+        assert jnp.allclose(y[..., rot:], x[..., rot:])
+        # position 0 is identity
+        assert jnp.allclose(y[:, 0], x[:, 0], atol=1e-5)

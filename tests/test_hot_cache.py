@@ -1,0 +1,58 @@
+"""Hot-row cache: correctness (hits+misses == full lookup) and the
+power-law hit-rate property the paper's caching-related work exploits."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DLRMConfig
+from repro.data import synthetic as S
+from repro.models.dlrm import apply_emb
+from repro.serving import hot_cache as HC
+
+
+def _setup(cache_rows=16, batch=64, mode="powerlaw"):
+    cfg = DLRMConfig(name="t", table_sizes=(500, 300, 400), embed_dim=8,
+                     max_hot=4)
+    key = jax.random.PRNGKey(0)
+    tables = jax.random.normal(key, (3, 500, 8))
+    b = S.make_batch(cfg, batch, mode=mode, seed=1)
+    idx, mask = jnp.asarray(b.idx), jnp.asarray(b.mask)
+    counts = HC.observe(np.zeros((3, 500)), b.idx, b.mask)
+    cache = HC.build(tables, counts, cache_rows)
+    return tables, cache, idx, mask
+
+
+def test_hits_plus_misses_equals_full_lookup():
+    tables, cache, idx, mask = _setup()
+    full = apply_emb(tables, idx, mask)
+    hits, miss_mask = HC.lookup(cache, idx, mask)
+    misses = apply_emb(tables, idx, miss_mask)
+    assert jnp.allclose(hits + misses, full, atol=1e-5)
+
+
+def test_powerlaw_hit_rate_beats_uniform():
+    _, cache_p, idx_p, mask_p = _setup(mode="powerlaw")
+    _, cache_u, idx_u, mask_u = _setup(mode="hetero")
+    hr_p = HC.hit_rate(cache_p, idx_p, mask_p)
+    hr_u = HC.hit_rate(cache_u, idx_u, mask_u)
+    # 16 of 300-500 rows cached: the zipf head concentrates mass
+    assert hr_p > 0.5, hr_p
+    assert hr_p > 2 * hr_u, (hr_p, hr_u)
+
+
+def test_exchange_payload_shrinks_by_hit_rate():
+    tables, cache, idx, mask = _setup()
+    _, miss_mask = HC.lookup(cache, idx, mask)
+    before = float(jnp.sum(mask > 0))
+    after = float(jnp.sum(miss_mask > 0))
+    hr = HC.hit_rate(cache, idx, mask)
+    assert after == before * (1 - hr)
+
+
+def test_cache_larger_than_table_is_safe():
+    tables, cache, idx, mask = _setup(cache_rows=10_000)
+    hits, miss_mask = HC.lookup(cache, idx, mask)
+    # everything cached -> no misses at all
+    assert float(jnp.sum(miss_mask)) == 0.0
+    full = apply_emb(tables, idx, mask)
+    assert jnp.allclose(hits, full, atol=1e-5)

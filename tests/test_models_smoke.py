@@ -1,0 +1,139 @@
+"""Per-assigned-architecture smoke tests: instantiate the REDUCED config of
+the same family, run one forward and one train step on CPU, assert output
+shapes and no NaNs.  (Full configs are exercised only via the dry-run.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as cb
+from repro.models import api
+from repro.train import optimizer as opt_mod
+from repro.train import steps as steps_mod
+
+LM_ARCHS = [a for a in cb.list_archs() if not a.startswith("dlrm")]
+
+
+def _smoke_batch(cfg, key, batch=2, seq=16):
+    ks = jax.random.split(key, 3)
+    out = {}
+    if cfg.family == "audio":
+        out["frames"] = jax.random.normal(ks[0], (batch, seq, cfg.d_frontend))
+        out["tokens"] = jax.random.randint(ks[1], (batch, 8), 0,
+                                           cfg.vocab_size)
+        out["labels"] = jax.random.randint(ks[2], (batch, 8), 0,
+                                           cfg.vocab_size)
+        return out
+    if cfg.frontend == "vision_patches":
+        nf = cfg.n_frontend_tokens
+        out["patches"] = jax.random.normal(ks[0], (batch, nf,
+                                                   cfg.d_frontend))
+        out["tokens"] = jax.random.randint(ks[1], (batch, seq - nf), 0,
+                                           cfg.vocab_size)
+        out["labels"] = jax.random.randint(ks[2], (batch, seq), 0,
+                                           cfg.vocab_size)
+        return out
+    out["tokens"] = jax.random.randint(ks[1], (batch, seq), 0,
+                                       cfg.vocab_size)
+    out["labels"] = jax.random.randint(ks[2], (batch, seq), 0,
+                                       cfg.vocab_size)
+    return out
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_forward_shapes_and_finite(arch):
+    spec = cb.get_arch(arch)
+    cfg = spec.smoke()
+    key = jax.random.PRNGKey(0)
+    params = api.init(key, cfg, n_shards=1)
+    batch = _smoke_batch(cfg, key)
+    logits, aux = api.forward(params, cfg, batch, remat=False)
+    b = batch["tokens"].shape[0]
+    exp_len = (batch["tokens"].shape[1] +
+               (cfg.n_frontend_tokens
+                if cfg.frontend == "vision_patches" else 0))
+    assert logits.shape == (b, exp_len, cfg.vocab_size), arch
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: non-finite logits"
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_one_train_step(arch):
+    spec = cb.get_arch(arch)
+    cfg = spec.smoke()
+    key = jax.random.PRNGKey(1)
+    params = api.init(key, cfg, n_shards=1)
+    opt_state = opt_mod.adamw_init(params)
+    step = steps_mod.make_train_step(cfg)
+    batch = _smoke_batch(cfg, key)
+    new_params, new_opt, metrics = step(params, opt_state, batch)
+    assert bool(jnp.isfinite(metrics["loss"])), arch
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert int(new_opt["count"]) == 1
+    # params actually moved
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params)))
+    assert moved, f"{arch}: no parameter changed"
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_decode_step_shapes(arch):
+    spec = cb.get_arch(arch)
+    cfg = spec.smoke()
+    key = jax.random.PRNGKey(2)
+    params = api.init(key, cfg, n_shards=1)
+    b, max_len = 2, 32
+    cache = api.make_cache(cfg, b, max_len)
+    toks = jax.random.randint(key, (b, 1), 0, cfg.vocab_size)
+    serve = steps_mod.make_serve_step(cfg)
+    next_tok, cache2 = serve(params, toks, cache)
+    assert next_tok.shape == (b, 1)
+    assert int(cache2["pos"]) == 1
+    next_tok2, _ = serve(params, next_tok, cache2)
+    assert next_tok2.shape == (b, 1)
+
+
+def test_dlrm_smoke_forward_and_train():
+    from repro.models import dlrm as D
+    from repro.data import synthetic as S
+
+    spec = cb.get_arch("dlrm-kaggle")
+    cfg = spec.smoke()
+    key = jax.random.PRNGKey(3)
+    params = D.init_dlrm(key, cfg, n_shards=1)
+    b = S.make_batch(cfg, 32, mode="hetero", seed=1)
+    logits = D.forward_local(params, cfg, jnp.asarray(b.dense),
+                             jnp.asarray(b.idx), jnp.asarray(b.mask))
+    assert logits.shape == (32,)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    loss = D.bce_loss(logits, jnp.asarray(b.labels))
+    assert bool(jnp.isfinite(loss))
+
+
+def test_all_ten_assigned_archs_registered():
+    expected = {
+        "qwen2-moe-a2.7b", "granite-moe-3b-a800m", "gemma2-9b", "qwen3-14b",
+        "qwen2-72b", "chatglm3-6b", "llava-next-mistral-7b", "rwkv6-1.6b",
+        "whisper-tiny", "zamba2-2.7b",
+    }
+    assert expected.issubset(set(cb.list_archs()))
+
+
+def test_full_configs_match_assignment():
+    """Pin the assigned hyperparameters exactly."""
+    c = cb.get_arch("qwen2-72b").config
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (80, 8192, 64, 8, 29568, 152064)
+    c = cb.get_arch("gemma2-9b").config
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (42, 3584, 16, 8, 14336, 256000)
+    assert c.attn_logit_softcap == 50.0 and c.final_logit_softcap == 30.0
+    c = cb.get_arch("qwen2-moe-a2.7b").config
+    assert (c.moe.n_experts, c.moe.experts_per_token, c.moe.d_expert,
+            c.moe.n_shared_experts) == (60, 4, 1408, 4)
+    c = cb.get_arch("zamba2-2.7b").config
+    assert (c.n_layers, c.d_model, c.ssm.d_state) == (54, 2560, 64)
+    c = cb.get_arch("rwkv6-1.6b").config
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab_size) == \
+        (24, 2048, 7168, 65536)

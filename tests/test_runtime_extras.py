@@ -1,0 +1,178 @@
+"""Gradient compression, elastic recovery, straggler policy, serving engine,
+and the HLO roofline parser."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import grad_compression as GC
+
+
+class TestGradCompression:
+    def test_int8_roundtrip_bounded_error(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (256,))
+        q, s = GC.int8_encode(x)
+        err = jnp.abs(GC.int8_decode(q, s) - x)
+        assert float(err.max()) <= float(s) * 0.5 + 1e-6
+
+    def test_topk_keeps_largest(self):
+        x = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05])
+        vals, idx = GC.topk_encode(x, k_frac=0.4)
+        dec = GC.topk_decode(vals, idx, 5)
+        assert float(dec[1]) == -5.0 and float(dec[3]) == 3.0
+        assert float(dec[0]) == 0.0
+
+    def test_error_feedback_is_lossless_in_accumulation(self):
+        """Σ decoded == Σ raw gradients (the EF invariant)."""
+        key = jax.random.PRNGKey(1)
+        grads = [jax.random.normal(jax.random.fold_in(key, i), (64,)) * 0.1
+                 for i in range(20)]
+        err = jnp.zeros((64,))
+        total_dec = jnp.zeros((64,))
+        for g in grads:
+            dec, err = GC.ef_compress_leaf(g, err, codec="topk", k_frac=0.1)
+            total_dec = total_dec + dec
+        total_raw = sum(grads)
+        # residual still in err; decoded + err == raw exactly
+        assert jnp.allclose(total_dec + err, total_raw, atol=1e-5)
+
+    def test_training_converges_with_compression(self):
+        """Tiny regression problem: int8-EF grads still reach low loss."""
+        key = jax.random.PRNGKey(2)
+        w_true = jax.random.normal(key, (8,))
+        xs = jax.random.normal(jax.random.fold_in(key, 1), (128, 8))
+        ys = xs @ w_true
+
+        def loss(w):
+            return jnp.mean((xs @ w - ys) ** 2)
+
+        for codec in (None, "int8"):
+            w = jnp.zeros((8,))
+            err = {"w": jnp.zeros((8,))}
+            for _ in range(200):
+                g = jax.grad(loss)(w)
+                if codec:
+                    (g,), err_tree = GC.compress_grads(
+                        (g,), (err["w"],), codec=codec)
+                    err["w"] = err_tree[0]
+                w = w - 0.1 * g
+            assert float(loss(w)) < 1e-3, codec
+
+
+class TestElastic:
+    def test_pick_mesh_shape(self):
+        from repro.runtime.elastic import pick_mesh_shape
+        assert pick_mesh_shape(8) == (1, 8)
+        assert pick_mesh_shape(6) == (3, 2)
+        assert pick_mesh_shape(256, model=16) == (16, 16)
+        assert pick_mesh_shape(7) == (7, 1)
+
+    def test_elastic_runner_recovers(self):
+        from repro.runtime.elastic import ElasticRunner, NodeFailure
+
+        devs = jax.devices()
+        calls = {"n": 0}
+
+        def fault(step):
+            if step == 2 and calls["n"] == 0:
+                calls["n"] += 1
+                raise NodeFailure(devs)  # same devices "survive" on 1-dev
+
+        def step_fn(state, batch, mesh):
+            return state + batch
+
+        runner = ElasticRunner(make_shardings=lambda mesh: None)
+        state, mesh, recoveries = runner.run(
+            jnp.float32(0.0), [jnp.float32(i) for i in (1, 2, 3, 4)],
+            step_fn, None, fault=fault)
+        assert recoveries == 1
+        assert float(state) == 10.0  # failed step retried, nothing lost
+
+
+class TestStraggler:
+    def test_recommend_bound_covers_jitter(self):
+        from repro.runtime.straggler import StragglerMonitor
+        m = StragglerMonitor()
+        for _ in range(99):
+            m.observe(0.010)
+        m.observe(0.035)  # one 25ms excess tail event
+        rec = m.recommend_bound(slot_bytes=1 << 20, memory_budget=64 << 20)
+        assert rec.bound == 3  # ceil(25/10)
+
+    def test_bound_capped_by_memory(self):
+        from repro.runtime.straggler import StragglerMonitor
+        m = StragglerMonitor()
+        for _ in range(50):
+            m.observe(0.010)
+        m.observe(0.100)
+        rec = m.recommend_bound(slot_bytes=32 << 20,
+                                memory_budget=64 << 20)
+        assert rec.bound <= 2
+
+    def test_consistent_straggler_detection(self):
+        from repro.runtime.straggler import detect_stragglers
+        lat = {f"h{i}": 0.01 for i in range(8)}
+        lat["h3"] = 0.025
+        assert detect_stragglers(lat) == ["h3"]
+
+
+class TestServingEngine:
+    def test_dlrm_engine_bls_equals_sync(self):
+        from repro.configs import base as cb
+        from repro.data import synthetic as S
+        from repro.models import dlrm as D
+        from repro.serving.engine import DLRMEngine
+
+        cfg = cb.get_arch("dlrm-kaggle").smoke()
+        params = D.init_dlrm(jax.random.PRNGKey(0), cfg, 1)
+        b = S.make_batch(cfg, 32, mode="hetero", seed=1)
+        outs = {}
+        for bound, mb in [(0, 1), (2, 4)]:
+            eng = DLRMEngine(params, cfg, batch_size=32, bound=bound,
+                             microbatches=mb)
+            for i in range(32):
+                r = eng.submit(b.dense[i], b.idx[i], b.mask[i])
+            outs[bound] = r
+            assert eng.stats.requests == 32
+        assert np.allclose(outs[0], outs[2], atol=1e-5)
+
+
+class TestHloAnalysis:
+    def test_trip_count_multiplication(self):
+        """A 4-layer scan must report ~4x the flops of a 1-layer scan
+        (the xla cost_analysis bug this parser exists to fix)."""
+        from benchmarks.hlo_analysis import analyze
+
+        def lower(n):
+            def f(ws, x):
+                def body(x, w):
+                    return x @ w, None
+                return jax.lax.scan(body, x, ws)[0]
+
+            ws = jax.ShapeDtypeStruct((n, 64, 64), jnp.float32)
+            x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+            return jax.jit(f).lower(ws, x).compile().as_text()
+
+        s1 = analyze(lower(1), num_partitions=1)
+        s4 = analyze(lower(4), num_partitions=1)
+        assert s1.flops > 0
+        assert s4.flops == pytest.approx(4 * s1.flops, rel=0.01)
+
+    def test_dot_flops_exact(self):
+        from benchmarks.hlo_analysis import analyze
+
+        def f(a, b):
+            return a @ b
+
+        a = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+        b = jax.ShapeDtypeStruct((64, 16), jnp.float32)
+        txt = jax.jit(f).lower(a, b).compile().as_text()
+        st = analyze(txt, num_partitions=1)
+        assert st.flops == pytest.approx(2 * 32 * 64 * 16)
+
+    def test_wire_byte_model(self):
+        from benchmarks.hlo_analysis import _wire_bytes
+        assert _wire_bytes("all-reduce", 100, 100, 4) == pytest.approx(150.0)
+        assert _wire_bytes("all-gather", 160, 40, 4) == pytest.approx(120.0)
+        assert _wire_bytes("all-to-all", 100, 100, 4) == pytest.approx(75.0)
+        assert _wire_bytes("all-reduce", 100, 100, 1) == 0.0

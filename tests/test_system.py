@@ -1,0 +1,78 @@
+"""End-to-end behaviour tests pinning the paper's §VI claims."""
+import pytest
+
+from repro.core.schedule_sim import make_workload, simulate, sweep_bounds
+
+
+class TestPaperClaims:
+    """Each test pins one claim from the paper."""
+
+    def test_balanced_runs_no_benefit_no_harm(self):
+        # Fig 8: well-balanced workloads see no benefit from k > 0
+        w = make_workload(8, 300)
+        lat = {k: simulate(w, k).mean_latency for k in (0, 1, 4, 8)}
+        for k in (1, 4, 8):
+            assert lat[k] == pytest.approx(lat[0], rel=1e-6)
+
+    def test_random_delays_masked(self):
+        # Fig 7 setting 2: U[0, 10ms] delays; k>=1 recovers most of the
+        # difference between E[max_p delay] and the per-process mean delay
+        w = make_workload(8, 500, delay_max=0.01, seed=3)
+        s0, s4 = simulate(w, 0), simulate(w, 4)
+        gain = s0.mean_latency - s4.mean_latency
+        # E[max of 8 U(0,d)] - E[U(0,d)] = d*(8/9 - 1/2) ~ 3.9 ms
+        assert gain > 0.0025, gain
+        assert s4.throughput > s0.throughput
+
+    def test_both_backends_benefit_from_delay_masking(self):
+        # paper: "BLS DLRM benefits from both non-blocking MPI backend, or
+        # our BLS backend" in the random-delay setting
+        w = make_workload(8, 300, delay_max=0.01, seed=1)
+        for backend in ("mpi", "bls"):
+            r = sweep_bounds(w, (0, 2), backend)
+            assert r[2]["mean_latency"] < r[0]["mean_latency"], backend
+
+    def test_hetero_wire_only_bls_backend_benefits(self):
+        # Fig 7 setting 1: heterogeneous message sizes; the MPI backend's
+        # serialised progress eats the gain, the BLS backend keeps it
+        w = make_workload(8, 300, hetero_wire=2.0, t_wire=4e-3, seed=2)
+        bls = sweep_bounds(w, (0, 4), "bls")
+        mpi = sweep_bounds(w, (0, 4), "mpi")
+        bls_gain = bls[0]["mean_latency"] - bls[4]["mean_latency"]
+        mpi_gain = mpi[0]["mean_latency"] - mpi[4]["mean_latency"]
+        assert bls_gain > 0
+        assert bls_gain > mpi_gain
+
+    def test_consistent_straggler_not_maskable(self):
+        # paper §IV: a single consistent straggler cannot be masked
+        w = make_workload(8, 300, straggler=2, straggler_slowdown=2.0)
+        lat = {k: simulate(w, k).mean_latency for k in (0, 8)}
+        assert lat[8] > 0.95 * lat[0]
+
+    def test_lag_never_exceeds_bound(self):
+        # Fig 4 semantics
+        w = make_workload(4, 200, delay_max=0.02, seed=5)
+        for k in (0, 1, 2, 4, 7):
+            assert simulate(w, k).max_lag <= k
+
+    def test_larger_bounds_diminishing_returns(self):
+        # paper: "gains quickly diminishing for larger bounds"
+        w = make_workload(8, 500, delay_max=0.01, seed=7)
+        lat = [simulate(w, k).mean_latency for k in (0, 1, 2, 4, 8)]
+        assert (lat[0] - lat[1]) > 5 * max(lat[3] - lat[4], 1e-9)
+
+
+def test_memory_overhead_matches_paper_estimate():
+    """§V-F: b=512, 26 tables, s=64 bytes -> ~860 KB per unit of bound.
+    (s=64 bytes = 16 fp32 dims in the paper's convention.)"""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.bls import memory_overhead_bytes
+
+    payload = jax.ShapeDtypeStruct((512, 26, 16), jnp.float32)
+    side = jax.ShapeDtypeStruct((512, 16), jnp.float32)
+    per_k = memory_overhead_bytes(payload, side, bound=1)
+    assert 0.8e6 < per_k < 1.0e6  # ~= the paper's 860 KB
+    # linear in k, independent of table sizes by construction
+    assert memory_overhead_bytes(payload, side, bound=5) == 5 * per_k
