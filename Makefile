@@ -1,0 +1,13 @@
+# CI entry points.  `make test` is the tier-1 verify command from ROADMAP.md;
+# `make bench` runs the full benchmark harness and appends the DLRM payload
+# to BENCH_dlrm.json keyed by the current git SHA.
+
+PY ?= python
+
+.PHONY: test bench
+
+test:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
+
+bench:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/run.py

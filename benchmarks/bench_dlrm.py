@@ -6,18 +6,31 @@
    the paper's latency/throughput plots driven by OUR implementation's
    numbers rather than hand-picked constants.
 3. Report the BLS ring memory overhead for the paper's configuration.
+4. Measure the FUSED sparse hot path (DESIGN.md): reference vs Pallas
+   pooled lookup, and the exchanged payload bytes of the reference f32
+   butterfly vs the cache-aware + quantized-wire exchange under the
+   power-law-skewed heterogeneous distribution.
+
+``run`` returns a machine-readable payload; ``write_bench_json`` appends it
+to BENCH_dlrm.json keyed by git SHA so the perf trajectory is diffable
+across PRs.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import base as cb
+from repro.core import alltoallv as A2A
 from repro.core.schedule_sim import Workload, simulate
 from repro.data import synthetic as S
 from repro.models import dlrm as D
+from repro.serving import hot_cache as HC
 
 import numpy as np
 
@@ -59,6 +72,103 @@ def measure_stages(batch=512):
     return {"t_emb": t_emb, "t_bot": t_bot, "t_top": t_top, "t_full": t_full}
 
 
+def measure_fused(batch=256, cache_rows=16, csv=True):
+    """The fused sparse hot path under power-law skew + ragged bags:
+    pooled-lookup(+exchange) stage time per backend, and the exchanged
+    payload bytes per wire format with and without the hot cache.  On one
+    device the butterfly is the identity, so the stage time covers pooled
+    lookup + wire encode/decode + pooled-hit correction — the per-member
+    compute of the exchange stage; payload bytes are exact (they depend
+    only on the miss residual and the codec, not on the device count)."""
+    cfg = cb.get_arch("dlrm-kaggle").smoke()
+    params = D.init_dlrm(jax.random.PRNGKey(0), cfg, n_shards=1)
+    t, s = cfg.n_tables, cfg.embed_dim
+    tables = params["tables"][:t]
+    b = S.make_batch(cfg, batch, mode="powerlaw_hetero", seed=0)
+    idx, mask = jnp.asarray(b.idx[:, :t]), jnp.asarray(b.mask[:, :t])
+
+    cache = HC.build_from_batch(tables, b.idx[:, :t], b.mask[:, :t],
+                                cache_rows)
+    hit_rate = HC.hit_rate(cache, idx, mask)
+    _, miss_mask = HC.lookup(cache, idx, mask)
+
+    # --- pooled-lookup stage time: reference vs Pallas kernel ---
+    kernel_backend = "pallas" if jax.default_backend() == "tpu" \
+        else "interpret"
+    lookups = {
+        "ref": jax.jit(lambda i, m: D.apply_emb(tables, i, m, "ref")),
+        kernel_backend: jax.jit(
+            lambda i, m: D.apply_emb(tables, i, m, kernel_backend)),
+    }
+    stage_times = {name: _timeit(fn, idx, mask, reps=5)
+                   for name, fn in lookups.items()}
+
+    # --- the fused stage: miss residual lookup + wire codec + hit add ---
+    def fused(i, m, mm):
+        pooled = D.apply_emb(tables, i, mm, "ref")
+        payload = A2A.encode_wire(pooled, "bfloat16")   # butterfly here
+        emb = A2A.decode_wire(payload, tables.dtype)
+        hits = HC.pooled_hits_of(cache.hot_rows, cache.slot_of, i, m)
+        return emb + hits.astype(emb.dtype)
+
+    stage_times["fused_cache_bf16"] = _timeit(
+        jax.jit(fused), idx, mask, jnp.asarray(miss_mask), reps=5)
+
+    # --- exchanged payload bytes per configuration ---
+    wires = {
+        "ref_f32": A2A.wire_stats(mask, s, "float32"),
+        "bf16": A2A.wire_stats(mask, s, "bfloat16"),
+        "cache_bf16": A2A.wire_stats(miss_mask, s, "bfloat16"),
+        "cache_int8": A2A.wire_stats(miss_mask, s, "int8"),
+    }
+    ref_bytes = wires["ref_f32"].ref_bytes
+    payload = {
+        "batch": batch, "cache_rows": cache_rows,
+        "hit_rate": float(hit_rate),
+        "stage_us": {k: v * 1e6 for k, v in stage_times.items()},
+        "wire": {k: {"dense_bytes": w.dense_bytes,
+                     "live_bytes": w.live_bytes,
+                     "reduction_vs_ref": w.reduction_vs_ref}
+                 for k, w in wires.items()},
+        "ref_exchange_bytes": ref_bytes,
+    }
+    if csv:
+        for k, v in stage_times.items():
+            print(f"dlrm/fused_stage_{k},{v*1e6:.1f},lookup+exchange")
+        print(f"dlrm/fused_hit_rate,{hit_rate:.3f},"
+              f"powerlaw_hetero cache_rows={cache_rows}")
+        for k, w in wires.items():
+            print(f"dlrm/wire_{k},{w.live_bytes},"
+                  f"reduction={w.reduction_vs_ref:.2f}")
+    return payload
+
+
+def git_sha() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            text=True).strip()
+    except Exception:
+        return "unknown"
+
+
+def write_bench_json(payload: dict, path: str = "BENCH_dlrm.json") -> str:
+    """Append this run's payload to ``path`` keyed by git SHA."""
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except Exception:
+            data = {}
+    data[git_sha()] = payload
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
 def run(csv=True):
     st = measure_stages()
     if csv:
@@ -83,16 +193,23 @@ def run(csv=True):
                       f"thru={r.throughput:.1f}")
     # ring memory overhead at the paper's config (b=512, 26 tables, s=64B)
     from repro.core.bls import memory_overhead_bytes
-    payload = jax.ShapeDtypeStruct((512, 26, 16), jnp.float32)
+    ring_payload = jax.ShapeDtypeStruct((512, 26, 16), jnp.float32)
     side = jax.ShapeDtypeStruct((512, 16), jnp.float32)
-    per_k = memory_overhead_bytes(payload, side, 1)
+    per_k = memory_overhead_bytes(ring_payload, side, 1)
     if csv:
         print(f"dlrm/ring_bytes_per_k,{per_k},paper_says_~860KB")
-    return rows
+    fused = measure_fused(csv=csv)
+    return {
+        "stages_us": {k: v * 1e6 for k, v in st.items()},
+        "sim": [{"setting": s_, "bound": k, "mean_latency_us": lat * 1e6,
+                 "throughput": thr} for s_, k, lat, thr in rows],
+        "ring_bytes_per_k": per_k,
+        "fused": fused,
+    }
 
 
 def main():
-    run()
+    write_bench_json(run())
 
 
 if __name__ == "__main__":

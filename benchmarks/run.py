@@ -18,8 +18,12 @@ def main() -> None:
 
     bench_sim.run()            # paper Figs 7 & 8 (+ straggler control)
     bench_alltoallv.main()     # paper Fig 6 analogue
-    bench_dlrm.run()           # §VI-B with measured stage times
+    dlrm_payload = bench_dlrm.run()   # §VI-B + fused sparse hot path
     bench_kernels.main()       # kernel-level chunked-vs-recurrent
+
+    # perf trajectory: BENCH_dlrm.json keyed by git SHA
+    path = bench_dlrm.write_bench_json(dlrm_payload)
+    print(f"# wrote {path} @ {bench_dlrm.git_sha()}")
 
     # roofline tables (require a prior dry-run)
     for tag in ("16x16", "2x16x16"):

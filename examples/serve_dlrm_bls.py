@@ -6,6 +6,7 @@ bound, and cross-checks BLS-on vs BLS-off outputs bit-for-bit.
 
 Run:  PYTHONPATH=src python examples/serve_dlrm_bls.py [--batches 20]
       [--batch-size 256] [--bound 4] [--microbatches 8]
+      [--wire-dtype float32|bfloat16|int8] [--cache-rows N]
 """
 import argparse
 
@@ -15,8 +16,14 @@ import numpy as np
 from repro.configs import base as cb
 from repro.data import synthetic as S
 from repro.data.pipeline import Preloader
+from repro.launch.mesh import make_host_mesh
 from repro.models import dlrm as D
 from repro.serving.engine import DLRMEngine
+from repro.sharding import partition
+
+# wire-codec round-trip error bounds on the sigmoid CTR outputs
+# (float32 allows the cache path's fp32 hits+misses summation reorder)
+WIRE_TOL = {"float32": 1e-4, "bfloat16": 3e-2, "int8": 6e-2}
 
 
 def main():
@@ -25,46 +32,71 @@ def main():
     ap.add_argument("--batch-size", type=int, default=256)
     ap.add_argument("--bound", type=int, default=4)
     ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--wire-dtype", default="float32",
+                    choices=sorted(WIRE_TOL))
+    ap.add_argument("--cache-rows", type=int, default=0,
+                    help="hot-row cache rows per table (0 = off)")
     args = ap.parse_args()
 
     cfg = cb.get_arch("dlrm-kaggle").smoke()
-    params = D.init_dlrm(jax.random.PRNGKey(0), cfg, n_shards=1)
+    # table-parallel over every local device so the butterfly, wire codec
+    # and cache path actually execute (model=1 still runs them, degenerately)
+    n_model = len(jax.devices())
+    while args.batch_size % (args.microbatches * n_model):
+        n_model //= 2
+    mesh = make_host_mesh(model=n_model)
+    params = D.init_dlrm(jax.random.PRNGKey(0), cfg, n_shards=n_model)
+    t_pad = D.padded_tables(cfg, n_model)
 
     # paper protocol: preload the dataset before measuring
     data = Preloader(
         lambda i: S.make_batch(cfg, args.batch_size, mode="hetero", seed=7,
-                               step=i), args.batches)
+                               step=i, t_pad=t_pad), args.batches)
 
     engines = {
         "sync(k=0)": DLRMEngine(params, cfg, batch_size=args.batch_size,
                                 bound=0, microbatches=1),
         f"bls(k={args.bound})": DLRMEngine(
             params, cfg, batch_size=args.batch_size, bound=args.bound,
-            microbatches=args.microbatches),
+            microbatches=args.microbatches, wire_dtype=args.wire_dtype),
     }
+    if args.cache_rows > 0:
+        # calibrate the BLS engine's hot cache on the first preloaded batch
+        calib = S.make_batch(cfg, args.batch_size, mode="hetero", seed=7,
+                             step=0, t_pad=t_pad)
+        name = f"bls(k={args.bound})"
+        cache = engines[name].calibrate_cache(calib.idx, calib.mask,
+                                              args.cache_rows)
+        from repro.serving import hot_cache as HC
+        hr = HC.hit_rate(cache, jax.numpy.asarray(calib.idx),
+                         jax.numpy.asarray(calib.mask))
+        print(f"hot cache: {args.cache_rows} rows/table, "
+              f"calibration hit rate {hr:.2f}")
     outputs = {}
-    for name, eng in engines.items():
-        outs = []
-        for b in data:
-            for i in range(args.batch_size):
-                r = eng.submit(b.dense[i], b.idx[i], b.mask[i])
-                if r is not None:
-                    outs.append(r)
-        tail = eng.flush()
-        if tail is not None:
-            outs.append(tail)
-        outputs[name] = np.concatenate(outs)
-        p50 = eng.monitor.percentile(0.5) * 1e3
-        p99 = eng.monitor.percentile(0.99) * 1e3
-        print(f"{name:12s}: {eng.stats.requests} reqs, "
-              f"{eng.stats.throughput_rps:,.0f} req/s, "
-              f"batch p50={p50:.1f} ms p99={p99:.1f} ms")
+    with partition.axis_rules(mesh):
+        for name, eng in engines.items():
+            outs = []
+            for b in data:
+                for i in range(args.batch_size):
+                    r = eng.submit(b.dense[i], b.idx[i], b.mask[i])
+                    if r is not None:
+                        outs.append(r)
+            tail = eng.flush()
+            if tail is not None:
+                outs.append(tail)
+            outputs[name] = np.concatenate(outs)
+            p50 = eng.monitor.percentile(0.5) * 1e3
+            p99 = eng.monitor.percentile(0.99) * 1e3
+            print(f"{name:12s}: {eng.stats.requests} reqs, "
+                  f"{eng.stats.throughput_rps:,.0f} req/s, "
+                  f"batch p50={p50:.1f} ms p99={p99:.1f} ms")
 
     names = list(outputs)
     diff = float(np.max(np.abs(outputs[names[0]] - outputs[names[1]])))
-    print(f"max |CTR(sync) - CTR(bls)| = {diff:.2e}  "
-          f"(paper §III-C: accuracy fully preserved)")
-    assert diff < 1e-5
+    tol = WIRE_TOL[args.wire_dtype]
+    print(f"max |CTR(sync) - CTR(bls)| = {diff:.2e} (tol {tol:.0e}; paper "
+          f"§III-C: accuracy fully preserved, wire codec adds bounded noise)")
+    assert diff < tol
     rec = engines[names[1]].recommend_bound()
     print(f"straggler monitor: {rec.reason}")
 

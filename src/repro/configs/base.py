@@ -109,10 +109,17 @@ class DLRMConfig:
     max_hot: int = 1                         # multi-hot pooling factor (Setting 1: 100)
     arch_interaction_op: str = "dot"         # dot | cat
     dtype: str = "float32"
+    # --- fused sparse hot path (DESIGN.md) ---
+    sparse_backend: str = "auto"    # ref | pallas | interpret | auto
+    wire_dtype: str = "float32"     # exchange codec: float32 | bfloat16 | int8
+    cache_rows: int = 0             # hot-row cache rows per table (0 = off)
 
     @property
     def n_tables(self) -> int:
         return len(self.table_sizes)
+
+    def replace(self, **kw) -> "DLRMConfig":
+        return dataclasses.replace(self, **kw)
 
 
 # ---------------------------------------------------------------------------

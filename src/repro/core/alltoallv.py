@@ -10,6 +10,13 @@ Two flavours used by DLRM (models/dlrm.py):
     vectors: a plain equal-split all_to_all (batch split, table concat).
   * ``alltoallv_raw``     — the paper's Setting-1 style exchange of UNPOOLED
     vectors padded to ``max_hot`` (message raggedness -> padding waste).
+
+Wire codecs (``encode_wire`` / ``decode_wire``) compress the butterfly
+payload: bf16 halves the exchanged bytes, int8 with a per-row (per pooled
+vector) scale quarters them — the inference-side analogue of
+train/grad_compression.py's data-parallel codecs (no error feedback needed:
+each exchanged value is consumed once, not accumulated).  ``wire_stats``
+does the byte accounting the cache-aware path is judged on.
 """
 from __future__ import annotations
 
@@ -29,12 +36,98 @@ class A2AVStats:
     padding_fraction: float
 
 
-def butterfly_pooled(x, axis: str = "model"):
+def butterfly_pooled(x, axis: str = "model", wire_dtype: str = "float32"):
     """Reference-DLRM butterfly: x (B, T_local, D) per shard, batch split /
     table concat -> (B / P, T_local * P, D).  Equal splits; raggedness only
-    via table-count imbalance which the caller pads into T_local."""
-    return jax.lax.all_to_all(x, axis, split_axis=0, concat_axis=1,
-                              tiled=True)
+    via table-count imbalance which the caller pads into T_local.
+    ``wire_dtype`` applies a wire codec around the exchange."""
+    payload = encode_wire(x, wire_dtype)
+    recv = jax.tree.map(
+        lambda a: jax.lax.all_to_all(a, axis, split_axis=0, concat_axis=1,
+                                     tiled=True), payload)
+    return decode_wire(recv, x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# wire codecs for the pooled exchange
+# ---------------------------------------------------------------------------
+
+WIRE_ITEMSIZE = {"float32": 4, "bfloat16": 2, "int8": 1}
+_WIRE_ALIASES = {None: "float32", "f32": "float32", "bf16": "bfloat16"}
+
+
+def canon_wire(wire_dtype) -> str:
+    """Normalize a wire-dtype spelling to the canonical codec name."""
+    wire = _WIRE_ALIASES.get(wire_dtype, wire_dtype)
+    if wire not in WIRE_ITEMSIZE:
+        raise ValueError(f"unknown wire_dtype {wire_dtype!r}")
+    return wire
+
+
+def encode_wire(x, wire_dtype: str = "float32"):
+    """x (..., D) -> codec pytree whose leaves all keep the leading axes of
+    ``x`` (so any batch-split collective maps straight over the leaves).
+
+    int8 carries one f32 scale per pooled vector (per (sample, table) row),
+    the grad_compression idiom at per-row granularity: pooled embedding
+    magnitudes vary by orders of magnitude across tables, so a per-tensor
+    scale would crush the cold tables' precision.
+    """
+    wire = canon_wire(wire_dtype)
+    if wire == "float32":
+        return {"q": x}
+    if wire == "bfloat16":
+        return {"q": x.astype(jnp.bfloat16)}
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1, keepdims=True),
+                        1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale}
+
+
+def decode_wire(payload, out_dtype=jnp.float32):
+    q = payload["q"]
+    if "scale" in payload:
+        return (q.astype(jnp.float32) * payload["scale"]).astype(out_dtype)
+    return q.astype(out_dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class WireStats:
+    """Byte accounting for one pooled butterfly exchange."""
+    dense_bytes: int     # bytes the padded dense exchange moves at this codec
+    live_bytes: int      # bytes of rows that carry information (>=1 miss)
+    ref_bytes: int       # the f32 dense reference exchange
+    live_rows: int
+    total_rows: int
+
+    @property
+    def reduction_vs_ref(self) -> float:
+        return 1.0 - self.live_bytes / max(self.ref_bytes, 1)
+
+
+def wire_stats(miss_mask, embed_dim: int,
+               wire_dtype: str = "float32") -> WireStats:
+    """miss_mask (B, T, hot): the residual mask actually pooled onto the
+    wire (the full mask when no cache).  A (sample, table) row whose bag is
+    entirely cache hits pools to an exact zero and carries no information —
+    ``live_bytes`` counts only rows with >=1 surviving index, which is what
+    a ragged (cap-padded) exchange would move and what the acceptance
+    criterion measures.  ``dense_bytes`` is what the equal-split butterfly
+    moves regardless."""
+    wire = canon_wire(wire_dtype)
+    miss_mask = jax.device_get(miss_mask)
+    rows_total = int(miss_mask.shape[0] * miss_mask.shape[1])
+    rows_live = int((miss_mask > 0).any(axis=-1).sum())
+    item = WIRE_ITEMSIZE[wire]
+    scale_bytes = 4 if wire == "int8" else 0
+    return WireStats(
+        dense_bytes=rows_total * (embed_dim * item + scale_bytes),
+        live_bytes=rows_live * (embed_dim * item + scale_bytes),
+        ref_bytes=rows_total * embed_dim * 4,
+        live_rows=rows_live,
+        total_rows=rows_total,
+    )
 
 
 def alltoallv_raw(send, counts, axis: str = "model"):

@@ -6,6 +6,10 @@
                heterogeneous alltoallv message sizes the BLS backend exploits.
 ``powerlaw`` — production-style skewed row access (TorchRec/Merlin cache
                motivation; used by the cache-ablation benchmarks).
+``powerlaw_hetero`` — both at once: zipf-skewed row ids AND ragged 1..max_hot
+               bag sizes; the regime the fused cache+quantized-wire exchange
+               is benchmarked under (message raggedness for BLS, head skew
+               for the cache).
 
 All generators are numpy-side (host input pipeline) and deterministic per
 (seed, step) so distributed hosts can generate their shard without exchange.
@@ -50,7 +54,8 @@ def make_batch(cfg: DLRMConfig, batch: int, *, mode: str = "uniform",
     rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
     t = cfg.n_tables
     t_pad = t_pad or t
-    hot = cfg.max_hot if mode == "hetero" else 1
+    ragged = mode in ("hetero", "powerlaw_hetero")
+    hot = cfg.max_hot if ragged else 1
     dense = rng.standard_normal((batch, cfg.n_dense_features),
                                 dtype=np.float32)
     idx = np.zeros((batch, t_pad, hot), np.int32)
@@ -58,20 +63,19 @@ def make_batch(cfg: DLRMConfig, batch: int, *, mode: str = "uniform",
     sizes = np.asarray(cfg.table_sizes)
     for ti in range(t):
         n = sizes[ti]
-        if mode == "powerlaw":
+        if mode.startswith("powerlaw"):
             # Zipf-ish skew clipped to the table size
             raw = rng.zipf(powerlaw_alpha, size=(batch, hot))
             idx[:, ti] = np.minimum(raw - 1, n - 1).astype(np.int32)
-            mask[:, ti] = 1.0
         else:
             idx[:, ti] = rng.integers(0, n, size=(batch, hot),
                                       dtype=np.int32)
-            if mode == "hetero":
-                counts = rng.integers(1, cfg.max_hot + 1, size=batch)
-                mask[:, ti] = (np.arange(hot)[None, :]
-                               < counts[:, None]).astype(np.float32)
-            else:
-                mask[:, ti] = 1.0
+        if ragged:
+            counts = rng.integers(1, cfg.max_hot + 1, size=batch)
+            mask[:, ti] = (np.arange(hot)[None, :]
+                           < counts[:, None]).astype(np.float32)
+        else:
+            mask[:, ti] = 1.0
     labels = (rng.random(batch) < 0.25).astype(np.float32)
     return Batch(dense=dense, idx=idx, mask=mask, labels=labels)
 

@@ -56,3 +56,56 @@ def embedding_bag(table, idx, mask, *, batch_tile: int = 64,
         out_shape=jax.ShapeDtypeStruct((b, s), table.dtype),
         interpret=interpret,
     )(idx, mask, table)
+
+
+# ---------------------------------------------------------------------------
+# stacked-table form: the whole sparse arsenal in one call
+# ---------------------------------------------------------------------------
+
+
+def _stacked_kernel(idx_ref, mask_ref, table_ref, out_ref, *, hot: int):
+    # blocks: idx/mask (bt, 1, hot), table (1, R, s), out (bt, 1, s)
+    bt = out_ref.shape[0]
+    r, s = table_ref.shape[1], table_ref.shape[2]
+
+    def body(i, acc):
+        b, h = i // hot, i % hot
+        row_id = jnp.clip(idx_ref[b, 0, h], 0, r - 1)
+        row = pl.load(table_ref,
+                      (pl.dslice(0, 1), pl.dslice(row_id, 1), slice(None)))
+        w = mask_ref[b, 0, h].astype(jnp.float32)
+        return acc.at[b].add(row[0, 0].astype(jnp.float32) * w)
+
+    acc0 = jnp.zeros((bt, s), jnp.float32)
+    acc = jax.lax.fori_loop(0, bt * hot, body, acc0)
+    out_ref[...] = acc[:, None, :].astype(out_ref.dtype)
+
+
+def embedding_bag_stacked(tables, idx, mask, *, batch_tile: int = 64,
+                          interpret: bool = False):
+    """tables:(T,R,s) idx:(B,T,hot) int32 mask:(B,T,hot) -> (B,T,s).
+
+    The model-facing form of ``apply_emb``: one ``pallas_call`` over a
+    (table, batch-tile) grid.  The table dimension is OUTERMOST so each
+    table block stays VMEM-resident across all its batch tiles, and the
+    (B,T,hot,s) broadcast-gather intermediate the pure-jnp reference
+    materializes never exists — rows stream HBM->VMEM->VREG straight into
+    the f32 accumulator.
+    """
+    t, r, s = tables.shape
+    b, t2, hot = idx.shape
+    assert t == t2, (t, t2)
+    bt = min(batch_tile, b)
+    assert b % bt == 0, (b, bt)
+    return pl.pallas_call(
+        functools.partial(_stacked_kernel, hot=hot),
+        grid=(t, b // bt),
+        in_specs=[
+            pl.BlockSpec((bt, 1, hot), lambda ti, bi: (bi, ti, 0)),
+            pl.BlockSpec((bt, 1, hot), lambda ti, bi: (bi, ti, 0)),
+            pl.BlockSpec((1, r, s), lambda ti, bi: (ti, 0, 0)),  # resident
+        ],
+        out_specs=pl.BlockSpec((bt, 1, s), lambda ti, bi: (bi, ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t, s), tables.dtype),
+        interpret=interpret,
+    )(idx, mask, tables)

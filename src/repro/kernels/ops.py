@@ -8,12 +8,14 @@ the oracle (used for A/B in benchmarks).
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 
 from repro.kernels import ref as _ref
 from repro.kernels.dot_interaction import dot_interaction as _dot_pallas
 from repro.kernels.embedding_bag import embedding_bag as _bag_pallas
+from repro.kernels.embedding_bag import embedding_bag_stacked as _bags_pallas
 from repro.kernels.flash_attention import flash_attention_pallas as _fa_pallas
 from repro.kernels.rwkv6_wkv import wkv_chunked_pallas as _wkv_pallas
 
@@ -36,6 +38,17 @@ def embedding_bag_op(table, idx, mask, *, impl: str = "auto",
         return _ref.embedding_bag_ref(table, idx, mask)
     return _bag_pallas(table, idx, mask, batch_tile=batch_tile,
                        interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "batch_tile"))
+def embedding_bag_stacked_op(tables, idx, mask, *, impl: str = "auto",
+                             batch_tile: int = 64):
+    """(T,R,s) stacked embedding bags -> (B,T,s); the model hot path."""
+    if impl == "ref":
+        return _ref.embedding_bag_stacked_ref(tables, idx, mask)
+    bt = math.gcd(idx.shape[0], batch_tile)  # largest tile dividing B
+    return _bags_pallas(tables, idx, mask, batch_tile=bt,
+                        interpret=not _on_tpu())
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "chunk"))

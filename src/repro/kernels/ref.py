@@ -21,6 +21,18 @@ def embedding_bag_ref(table, idx, mask):
     return jnp.sum(rows * mask[..., None].astype(rows.dtype), axis=1)
 
 
+def embedding_bag_stacked_ref(tables, idx, mask):
+    """tables:(T,R,S) idx/mask:(B,T,hot) -> (B,T,S) per-table masked sums.
+    Materializes the (B,T,hot,S) gather the Pallas kernel avoids."""
+    gathered = jnp.take_along_axis(
+        tables[None, :, :, :],
+        jnp.clip(idx[..., None].astype(jnp.int32), 0,
+                 tables.shape[1] - 1),
+        axis=2,
+    )
+    return jnp.sum(gathered * mask[..., None].astype(gathered.dtype), axis=2)
+
+
 def rwkv6_wkv_ref(r, k, v, logw, u, state):
     """Exact WKV recurrence.  r,k,logw:(B,S,H,K) v:(B,S,H,V) u:(H,K)
     state:(B,H,K,V) -> (out (B,S,H,V), final state)."""

@@ -26,6 +26,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+def _compiler_params_kw() -> dict:
+    from repro import compat
+    return compat.compiler_params_kw(("parallel", "parallel", "arbitrary"))
+
 
 def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, out_ref, sout_ref,
             state, *, n_chunks: int):
@@ -97,8 +101,7 @@ def wkv_chunked_pallas(r, k, v, logw, u, state0, *, chunk: int = 64,
         out_shape=[jax.ShapeDtypeStruct((b, s, h, vv), r.dtype),
                    jax.ShapeDtypeStruct((b, h, kk, vv), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((kk, vv), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
+        **_compiler_params_kw(),
     )(r, k, v, logw, u, state0)
     return out, sout

@@ -24,9 +24,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import DLRMConfig
+from repro.core import alltoallv as a2a_mod
 from repro.core import bls as bls_mod
 from repro.models import layers as L
+from repro.serving import hot_cache as hc_mod
 from repro.sharding import partition
 
 # ---------------------------------------------------------------------------
@@ -92,16 +95,35 @@ def apply_mlp(params, x, final_act: Optional[str] = None):
     return x
 
 
-def apply_emb(tables, idx, mask):
+def resolve_sparse_backend(backend: str) -> str:
+    """'auto' -> the native Pallas kernel on TPU, the jnp reference
+    elsewhere (interpret mode is for validation, not speed)."""
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend not in ("ref", "pallas", "interpret"):
+        raise ValueError(f"unknown sparse_backend {backend!r}")
+    return backend
+
+
+def apply_emb(tables, idx, mask, backend: str = "ref"):
     """Embedding bags.  tables:(T,R,s) idx:(B,T,hot) mask:(B,T,hot)
-    -> (B,T,s).  The paper's dominant stage (its Fig. 5 flame graph);
-    kernels/embedding_bag.py is the Pallas version of this contraction."""
-    gathered = jnp.take_along_axis(
-        tables[None, :, :, :],
-        idx[..., None].astype(jnp.int32) % tables.shape[1],
-        axis=2,
-    )  # (B,T,hot,s)
-    return jnp.sum(gathered * mask[..., None].astype(gathered.dtype), axis=2)
+    -> (B,T,s).  The paper's dominant stage (its Fig. 5 flame graph).
+
+    backend 'ref' is the pure-jnp contraction (materializes the
+    (B,T,hot,s) broadcast gather); 'pallas'/'interpret' dispatch to the
+    stacked-table kernel in kernels/embedding_bag.py, which streams rows
+    through VMEM and never builds that intermediate."""
+    backend = resolve_sparse_backend(backend)
+    if backend != "ref":
+        # ops owns tile choice + interpret-off-TPU; 'pallas' degrades to
+        # interpret mode away from TPU rather than failing at lowering
+        from repro.kernels.ops import embedding_bag_stacked_op
+        return embedding_bag_stacked_op(tables, idx.astype(jnp.int32),
+                                        mask)
+    # shared with the kernel oracle so every backend clips OOB ids the
+    # same way
+    from repro.kernels.ref import embedding_bag_stacked_ref
+    return embedding_bag_stacked_ref(tables, idx, mask)
 
 
 def dot_interaction(z):
@@ -117,7 +139,8 @@ def forward_local(params, cfg: DLRMConfig, dense, idx, mask):
     """Single-device reference forward (oracle for the distributed path)."""
     t = cfg.n_tables
     z0 = apply_mlp(params["bot"], dense)                       # (B, s)
-    emb = apply_emb(params["tables"][:t], idx[:, :t], mask[:, :t])
+    emb = apply_emb(params["tables"][:t], idx[:, :t], mask[:, :t],
+                    backend=cfg.sparse_backend)
     z = jnp.concatenate([z0[:, None, :], emb], axis=1)         # (B, T+1, s)
     inter = dot_interaction(z)
     top_in = jnp.concatenate([z0, inter.astype(z0.dtype)], axis=-1)
@@ -136,7 +159,8 @@ def _batch_axes(mesh):
 def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                         bound: int = 0, microbatches: int = 1,
                         unroll: Optional[int] = None,
-                        restore_order: bool = True):
+                        restore_order: bool = True,
+                        cache=None, wire_dtype: Optional[str] = None):
     """dense:(B, n_dense) idx/mask:(B, T_pad, hot); batch B sharded over
     (pod, data) [dense replicated across ``model`` within a data row, as the
     reference's data loader scatters it]; tables over ``model``.  bound>0
@@ -144,35 +168,92 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
     iteration stream); bound=0 + microbatches=1 is the reference synchronous
     step.  Returns (B,) CTR logits in input order (restore_order=False keeps
     pipeline order — microbatch-major — and skips a reshuffle collective).
+
+    ``cache`` (serving/hot_cache.HotCache over the full (T_pad, R, s) stack,
+    replicated on every member) moves the skewed head of the access
+    distribution off the wire: each member pools the cache HITS of its own
+    batch slice locally in stage_a, only the miss residual is bag-pooled
+    from the sharded tables and rides the butterfly, and the pooled-hit
+    correction is added after the exchange — hits + misses sum to the full
+    bag, so the composition changes WHAT is exchanged, never the logits
+    (up to fp summation order).  ``wire_dtype`` (default cfg.wire_dtype)
+    applies core/alltoallv's codec to the exchanged payload; 'float32' is
+    bit-identical to the reference exchange.
     """
     mesh = partition.current_mesh()
     if mesh is None or "model" not in mesh.axis_names:
+        if cache is not None or (wire_dtype or cfg.wire_dtype) != "float32":
+            import warnings
+            warnings.warn(
+                "forward_distributed: no model-axis mesh installed — "
+                "falling back to forward_local; cache/wire_dtype are "
+                "inactive (install one via partition.axis_rules)",
+                stacklevel=2)
         return forward_local(params, cfg, dense, idx, mask)
     n_shards = mesh.shape["model"]
     baxes = _batch_axes(mesh)
     mb = microbatches
+    wire = wire_dtype if wire_dtype is not None else cfg.wire_dtype
+    backend = cfg.sparse_backend
+    use_cache = cache is not None and cache.cache_rows > 0
+    if use_cache and cache.slot_of.shape[0] != idx.shape[1]:
+        raise ValueError(
+            f"cache covers {cache.slot_of.shape[0]} tables but idx has "
+            f"{idx.shape[1]} (padded) — build the cache over the full "
+            f"(T_pad, R, s) stack")
+    emb_dtype = params["tables"].dtype
 
-    def shard_fn(tables, bot, top, dense_s, idx_s, mask_s):
+    def shard_fn(tables, bot, top, dense_s, idx_s, mask_s, *cache_args):
         # per-shard shapes: tables (t_loc,R,s); dense (B_row, n_dense)
-        # replicated over model; idx/mask (B_row, t_loc, hot)
+        # replicated over model; idx/mask (B_row, t_loc, hot) — or
+        # (B_row, t_pad, hot) replicated when the cache path needs every
+        # member to see its own batch slice across ALL tables.
         m = jax.lax.axis_index("model")
+        t_loc = tables.shape[0]
         b_row = dense_s.shape[0]
         bs = b_row // (mb * n_shards)  # rows per (microbatch, member)
 
         def stage_a(x):
             j, d, ix, mk = x
-            pooled = apply_emb(tables, ix, mk)        # (B_row/mb, t_loc, s)
+            if use_cache:
+                hot_rows, slot_of = cache_args
+                # local-table slice for the miss path
+                ix_loc = jax.lax.dynamic_slice_in_dim(ix, m * t_loc, t_loc,
+                                                      axis=1)
+                mk_loc = jax.lax.dynamic_slice_in_dim(mk, m * t_loc, t_loc,
+                                                      axis=1)
+                slot_loc = jax.lax.dynamic_slice_in_dim(slot_of, m * t_loc,
+                                                        t_loc, axis=0)
+                miss_mk = hc_mod.miss_mask_of(slot_loc, ix_loc, mk_loc)
+                pooled = apply_emb(tables, ix_loc, miss_mk, backend)
+                # member m's own batch slice over ALL tables: pool the
+                # cache hits locally from the replicated hot block
+                ix_m = jax.lax.dynamic_slice_in_dim(ix, m * bs, bs, axis=0)
+                mk_m = jax.lax.dynamic_slice_in_dim(mk, m * bs, bs, axis=0)
+                hits_m = hc_mod.pooled_hits_of(hot_rows, slot_of, ix_m,
+                                               mk_m).astype(emb_dtype)
+            else:
+                pooled = apply_emb(tables, ix, mk, backend)
+                hits_m = jnp.zeros((bs, 0, 0), emb_dtype)  # empty side slot
+            payload = a2a_mod.encode_wire(pooled, wire)
             # member m's dense rows of microbatch j (matches a2a delivery)
             dm = jax.lax.dynamic_slice_in_dim(d, m * bs, bs, axis=0)
             z0 = apply_mlp(bot, dm)                   # (bs, s)
-            return pooled, z0
+            return payload, (z0, hits_m)
 
-        def collective(pooled):
-            # butterfly: batch split / table concat  -> (bs, t_pad, s)
-            return jax.lax.all_to_all(pooled, "model", split_axis=0,
-                                      concat_axis=1, tiled=True)
+        def collective(payload):
+            # butterfly: batch split / table concat  -> (bs, t_pad, s);
+            # the quantized codebook (and per-row scales) IS the wire format
+            return jax.tree.map(
+                lambda a: jax.lax.all_to_all(a, "model", split_axis=0,
+                                             concat_axis=1, tiled=True),
+                payload)
 
-        def stage_b(emb_all, z0):
+        def stage_b(recv, side):
+            z0, hits = side
+            emb_all = a2a_mod.decode_wire(recv, emb_dtype)
+            if use_cache:
+                emb_all = emb_all + hits              # pooled-hit correction
             t = cfg.n_tables
             z = jnp.concatenate([z0[:, None, :], emb_all[:, :t]], axis=1)
             inter = dot_interaction(z)
@@ -191,17 +272,24 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                                        bound, unroll=unroll)
         return outs  # (mb, bs)
 
-    out = jax.shard_map(
+    sparse_spec = (P(baxes if baxes else None, None, None) if use_cache
+                   else P(baxes if baxes else None, "model", None))
+    in_specs = [P("model", None, None),
+                jax.tree.map(lambda _: P(), params["bot"]),
+                jax.tree.map(lambda _: P(), params["top"]),
+                P(baxes if baxes else None, None),
+                sparse_spec,
+                sparse_spec]
+    args = [params["tables"], params["bot"], params["top"], dense, idx, mask]
+    if use_cache:
+        in_specs += [P(), P()]              # hot block replicated everywhere
+        args += [cache.hot_rows, cache.slot_of]
+    out = compat.shard_map(
         shard_fn, mesh=mesh,
-        in_specs=(P("model", None, None),
-                  jax.tree.map(lambda _: P(), params["bot"]),
-                  jax.tree.map(lambda _: P(), params["top"]),
-                  P(baxes if baxes else None, None),
-                  P(baxes if baxes else None, "model", None),
-                  P(baxes if baxes else None, "model", None)),
+        in_specs=tuple(in_specs),
         out_specs=P(None, baxes + ("model",) if baxes else "model"),
         check_vma=False,
-    )(params["tables"], params["bot"], params["top"], dense, idx, mask)
+    )(*args)
     # out: (mb, B/mb) where each row of size B/mb is laid out
     # [data-row, member, bs]; input order within a data row is
     # [microbatch, member, bs].

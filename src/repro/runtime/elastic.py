@@ -31,11 +31,11 @@ def pick_mesh_shape(n_devices: int, model: int = 0) -> tuple:
 
 
 def make_mesh_from(devices, model: int = 0) -> Mesh:
+    from repro import compat
     shape = pick_mesh_shape(len(devices), model)
     import numpy as np
     arr = np.asarray(devices)[:shape[0] * shape[1]].reshape(shape)
-    return Mesh(arr, ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.mesh_from(arr, ("data", "model"))
 
 
 def reshard(tree, shardings):

@@ -35,28 +35,72 @@ class ServeStats:
 
 
 class DLRMEngine:
-    """Fixed-batch CTR serving with the BLS-enabled step."""
+    """Fixed-batch CTR serving with the BLS-enabled step.
+
+    ``wire_dtype`` (default: cfg.wire_dtype) selects the exchange codec;
+    ``cache`` (a serving/hot_cache.HotCache over the full table stack) or a
+    calibrated one via :meth:`calibrate_cache` turns the skewed head of the
+    access stream into local pooling (DESIGN.md: the fused sparse hot path).
+    """
 
     def __init__(self, params, cfg: DLRMConfig, *, batch_size: int = 512,
-                 bound: int = 0, microbatches: int = 1):
+                 bound: int = 0, microbatches: int = 1,
+                 wire_dtype: Optional[str] = None, cache=None):
         self.params, self.cfg = params, cfg
         self.batch_size = batch_size
         self.bound, self.microbatches = bound, microbatches
+        self.wire_dtype = wire_dtype or cfg.wire_dtype
+        self.cache = cache
         self.monitor = StragglerMonitor()
         self.stats = ServeStats()
         self._pending: list = []
         self._step = jax.jit(self._make_step(bound, microbatches))
 
-    def _make_step(self, bound, microbatches):
-        cfg = self.cfg
+    def calibrate_cache(self, idx: np.ndarray, mask: np.ndarray,
+                        cache_rows: Optional[int] = None):
+        """Build the hot-row cache from an observed (idx, mask) sample and
+        re-jit the step around it.  cache_rows defaults to cfg.cache_rows."""
+        from repro.serving import hot_cache as HC
+        rows = cache_rows if cache_rows is not None else self.cfg.cache_rows
+        self.cache = HC.build_from_batch(self.params["tables"], idx, mask,
+                                         rows)
+        self._step = jax.jit(self._make_step(self.bound, self.microbatches))
+        return self.cache
 
-        def step(params, dense, idx, mask):
+    def _make_step(self, bound, microbatches):
+        cfg, wire = self.cfg, self.wire_dtype
+
+        if self.cache is None:
+            def step(params, dense, idx, mask):
+                logits = dlrm_mod.forward_distributed(
+                    params, cfg, dense, idx, mask, bound=bound,
+                    microbatches=microbatches, wire_dtype=wire)
+                return jax.nn.sigmoid(logits)
+            return step
+
+        from repro.serving.hot_cache import HotCache
+
+        # cache arrays ride as jit ARGUMENTS (like params), not closure
+        # constants — a closure would duplicate the (T,R) slot map into
+        # the executable's constant pool and re-embed it on every
+        # calibration re-trace; hot_ids only names the cached rows and is
+        # not needed by the forward path
+        def step(params, dense, idx, mask, hot_rows, slot_of):
+            c = HotCache(hot_ids=None, hot_rows=hot_rows,
+                         slot_of=slot_of)
             logits = dlrm_mod.forward_distributed(
                 params, cfg, dense, idx, mask, bound=bound,
-                microbatches=microbatches)
+                microbatches=microbatches, cache=c, wire_dtype=wire)
             return jax.nn.sigmoid(logits)
 
         return step
+
+    def _step_args(self, d, i, m):
+        base = (self.params, jnp.asarray(d), jnp.asarray(i),
+                jnp.asarray(m))
+        if self.cache is None:
+            return base
+        return base + (self.cache.hot_rows, self.cache.slot_of)
 
     def submit(self, dense: np.ndarray, idx: np.ndarray, mask: np.ndarray):
         """Queue one request (row).  Returns CTRs when a batch fills."""
@@ -78,8 +122,7 @@ class DLRMEngine:
                      [self._pending[-1][2]] * pad)
         self._pending.clear()
         t0 = time.perf_counter()
-        out = np.asarray(self._step(self.params, jnp.asarray(d),
-                                    jnp.asarray(i), jnp.asarray(m)))
+        out = np.asarray(self._step(*self._step_args(d, i, m)))
         el = time.perf_counter() - t0
         self.monitor.observe(el)
         self.stats.batches += 1

@@ -32,7 +32,9 @@ class HotCache:
 
     @property
     def cache_rows(self) -> int:
-        return self.hot_ids.shape[1]
+        # derived from hot_rows so a cache rebuilt from just
+        # (hot_rows, slot_of) — e.g. inside a jitted step — works too
+        return self.hot_rows.shape[1]
 
 
 def build(tables: jnp.ndarray, counts: np.ndarray, cache_rows: int
@@ -50,34 +52,67 @@ def build(tables: jnp.ndarray, counts: np.ndarray, cache_rows: int
                     slot_of=jnp.asarray(slot))
 
 
+def _hit_flags(slot_of: jnp.ndarray, idx: jnp.ndarray, mask: jnp.ndarray):
+    """slot_of (T,R), idx/mask (B,T,hot) -> (slots, hit) both (B,T,hot)."""
+    t = idx.shape[1]
+    tix = jnp.arange(t)[None, :, None]
+    slots = slot_of[tix, jnp.clip(idx, 0, slot_of.shape[1] - 1)]
+    hit = (slots >= 0) & (mask > 0)
+    return slots, hit
+
+
+def miss_mask_of(slot_of: jnp.ndarray, idx: jnp.ndarray, mask: jnp.ndarray):
+    """The residual mask after cache hits are removed — what still has to
+    ride the distributed exchange.  Usable on a table SLICE inside
+    shard_map (pass the shard's slot_of rows)."""
+    _, hit = _hit_flags(slot_of, idx, mask)
+    return mask * (~hit).astype(mask.dtype)
+
+
+def pooled_hits_of(hot_rows: jnp.ndarray, slot_of: jnp.ndarray,
+                   idx: jnp.ndarray, mask: jnp.ndarray):
+    """hot_rows (T,C,s), slot_of (T,R), idx/mask (B,T,hot) -> (B,T,s)
+    locally-pooled cache hits.  C == 0 (cache disabled) is a static
+    degenerate case returning zeros."""
+    b, t, hot = idx.shape
+    c, s = hot_rows.shape[1], hot_rows.shape[2]
+    if c == 0:
+        return jnp.zeros((b, t, s), hot_rows.dtype)
+    slots, hit = _hit_flags(slot_of, idx, mask)
+    tix = jnp.arange(t)[None, :, None]
+    rows = hot_rows[tix, jnp.clip(slots, 0, c - 1)]
+    return jnp.sum(rows * hit[..., None].astype(rows.dtype), axis=2)
+
+
 def lookup(cache: HotCache, idx: jnp.ndarray, mask: jnp.ndarray):
     """idx/mask: (B, T, hot).  Returns (pooled_hits (B,T,s),
     miss_mask (B,T,hot)) — misses keep their original mask and go through
     the distributed path; hits are pooled locally."""
-    b, t, hot = idx.shape
-    tix = jnp.arange(t)[None, :, None]
-    slots = cache.slot_of[tix, jnp.clip(idx, 0, cache.slot_of.shape[1] - 1)]
-    hit = (slots >= 0) & (mask > 0)
-    rows = cache.hot_rows[tix, jnp.clip(slots, 0, cache.cache_rows - 1)]
-    pooled_hits = jnp.sum(
-        rows * hit[..., None].astype(rows.dtype), axis=2)
-    miss_mask = mask * (~hit).astype(mask.dtype)
-    return pooled_hits, miss_mask
+    pooled_hits = pooled_hits_of(cache.hot_rows, cache.slot_of, idx, mask)
+    return pooled_hits, miss_mask_of(cache.slot_of, idx, mask)
 
 
 def hit_rate(cache: HotCache, idx, mask) -> float:
-    b, t, hot = idx.shape
-    tix = jnp.arange(t)[None, :, None]
-    slots = cache.slot_of[tix, jnp.clip(idx, 0, cache.slot_of.shape[1] - 1)]
-    hit = (slots >= 0) & (mask > 0)
+    _, hit = _hit_flags(cache.slot_of, idx, mask)
     total = jnp.maximum(jnp.sum(mask > 0), 1)
     return float(jnp.sum(hit) / total)
 
 
+def build_from_batch(tables: jnp.ndarray, idx, mask, cache_rows: int
+                     ) -> HotCache:
+    """Calibrate a cache from one observed batch (the serving engine's
+    warm-up path): observe frequencies, keep the head."""
+    counts = observe(np.zeros(tables.shape[:2]), np.asarray(idx),
+                     np.asarray(mask))
+    return build(tables, counts, cache_rows)
+
+
 def observe(counts: np.ndarray, idx: np.ndarray, mask: np.ndarray
             ) -> np.ndarray:
-    """Accumulate access frequencies (host-side, between refreshes)."""
-    t = counts.shape[0]
+    """Accumulate access frequencies (host-side, between refreshes).
+    counts may cover a PADDED table stack (T_pad >= idx.shape[1]); padding
+    tables simply stay cold."""
+    t = min(counts.shape[0], idx.shape[1])
     for ti in range(t):
         sel = idx[:, ti][mask[:, ti] > 0]
         np.add.at(counts[ti], sel, 1)

@@ -55,8 +55,8 @@ def test_alltoallv_raw_roundtrip_multidevice():
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.core.alltoallv import alltoallv_raw, pack_ragged
-mesh = jax.make_mesh((8,), ("model",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro import compat
+mesh = compat.make_mesh((8,), ("model",))
 
 def shard_fn(rows, dest):
     buf, counts = pack_ragged(rows, dest, n_dest=8, cap=16)
@@ -68,7 +68,7 @@ def shard_fn(rows, dest):
 
 rows = jnp.arange(8 * 32 * 4.0).reshape(8 * 32, 4)
 dest = jnp.asarray(np.random.default_rng(0).integers(0, 8, 8 * 32))
-total = jax.jit(jax.shard_map(shard_fn, mesh=mesh,
+total = jax.jit(compat.shard_map(shard_fn, mesh=mesh,
     in_specs=(P("model"), P("model")), out_specs=P("model"),
     check_vma=False))(rows, dest)
 assert jnp.allclose(total[0], rows.sum()), (float(total[0]), float(rows.sum()))
@@ -86,14 +86,14 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.core.bls import bls_pipeline, reference_loop
 from repro.models import moe as M
+from repro import compat
 
 cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=32,
                   n_heads=4, n_kv_heads=4, d_ff=64, vocab_size=64,
                   moe=MoEConfig(n_experts=8, experts_per_token=2, d_expert=16,
                                 capacity_factor=8.0),
                   dtype="float32")
-mesh = jax.make_mesh((8,), ("model",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("model",))
 params = M.init_moe(jax.random.PRNGKey(0), cfg, n_shards=8)
 moe, e_pad, e_loc = cfg.moe, 8, 1
 d = cfg.d_model
@@ -156,7 +156,7 @@ def make(bound):
         out, _ = bls_pipeline(stage_a, coll, stage_b, xs, bound)
         return out
 
-    return jax.jit(jax.shard_map(shard_fn, mesh=mesh,
+    return jax.jit(compat.shard_map(shard_fn, mesh=mesh,
         in_specs=(P(), P("model", None, None), P("model", None, None),
                   P("model", None, None), P(None, "model", None)),
         out_specs=P(None, "model", None), check_vma=False))

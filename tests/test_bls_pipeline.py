@@ -3,7 +3,7 @@ and hypothesis property tests."""
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.bls import BLSStats, bls_pipeline, reference_loop
 

@@ -31,8 +31,8 @@ from repro.sharding import partition
 cfg = DLRMConfig(name="t", table_sizes=(100, 50, 80, 60, 90, 40),
                  embed_dim=16, bottom_mlp=(32, 16), top_mlp=(32, 1),
                  max_hot=4)
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro import compat
+mesh = compat.make_mesh((2, 4), ("data", "model"))
 params = D.init_dlrm(jax.random.PRNGKey(0), cfg, n_shards=4)
 b = S.make_batch(cfg, 64, mode="hetero", t_pad=D.padded_tables(cfg, 4), seed=1)
 dense, idx, mask = map(jnp.asarray, (b.dense, b.idx, b.mask))
@@ -52,8 +52,8 @@ def test_bls_pipeline_with_real_all_to_all():
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.core.bls import bls_pipeline, reference_loop
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro import compat
+mesh = compat.make_mesh((2, 4), ("data", "model"))
 def run(bound):
     def shard_fn(x):
         a = lambda xj: (xj * 1.0, xj.sum(axis=(1, 2)))
@@ -63,7 +63,7 @@ def run(bound):
             return reference_loop(a, c, b, x)
         out, _ = bls_pipeline(a, c, b, x, bound)
         return out
-    return jax.jit(jax.shard_map(shard_fn, mesh=mesh,
+    return jax.jit(compat.shard_map(shard_fn, mesh=mesh,
         in_specs=P(None, "data", "model", None),
         out_specs=P(None, ("data", "model")), check_vma=False))
 x = jax.random.normal(jax.random.PRNGKey(0), (5, 8, 4, 6))
@@ -87,8 +87,8 @@ cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=32,
                   moe=MoEConfig(n_experts=8, experts_per_token=2, d_expert=16,
                                 capacity_factor=8.0),
                   dtype="float32")
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro import compat
+mesh = compat.make_mesh((2, 4), ("data", "model"))
 params = M.init_moe(jax.random.PRNGKey(0), cfg, n_shards=4)
 x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 32))
 ref, _ = M.moe_ref_dense(params, cfg, x)
@@ -113,8 +113,8 @@ tree = {"w": jnp.arange(64.0).reshape(8, 8), "b": jnp.ones((8,))}
 with tempfile.TemporaryDirectory() as d:
     C.save(d, 3, tree)
     # restore onto a 2x4 mesh with model sharding (elastic re-mesh)
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro import compat
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
     shardings = {"w": NamedSharding(mesh, P("data", "model")),
                  "b": NamedSharding(mesh, P("model"))}
     restored, step = C.restore(d, tree, shardings=shardings)

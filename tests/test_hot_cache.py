@@ -41,12 +41,20 @@ def test_powerlaw_hit_rate_beats_uniform():
 
 
 def test_exchange_payload_shrinks_by_hit_rate():
+    """The acceptance invariant of the cache-aware exchange: the miss
+    residual payload is at most the (1 - hit_rate) fraction of the full
+    payload.  Exact equality is wrong for fractional hit rates — hit_rate
+    is a float32 ratio, so allow one-ulp slack instead of ==."""
     tables, cache, idx, mask = _setup()
     _, miss_mask = HC.lookup(cache, idx, mask)
     before = float(jnp.sum(mask > 0))
     after = float(jnp.sum(miss_mask > 0))
     hr = HC.hit_rate(cache, idx, mask)
-    assert after == before * (1 - hr)
+    assert hr > 0.0
+    slack = before * 1e-5
+    assert after <= before * (1 - hr) + slack, (after, before, hr)
+    # and the residual is never smaller than the exact integer count
+    assert after >= before - float(jnp.sum(mask > 0)) * hr - slack
 
 
 def test_cache_larger_than_table_is_safe():

@@ -3,7 +3,7 @@ ref.py pure-jnp oracles (interpret=True executes the kernel body on CPU)."""
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
 
