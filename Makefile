@@ -1,13 +1,19 @@
 # CI entry points.  `make test` is the tier-1 verify command from ROADMAP.md;
 # `make bench` runs the full benchmark harness and appends the DLRM payload
-# to BENCH_dlrm.json keyed by the current git SHA.
+# to BENCH_dlrm.json keyed by the current git SHA; `make bench-smoke` is the
+# tiny-scale perf gate (.github/workflows/ci.yml): it fails if the ragged
+# exchange physically moves more bytes than the dense butterfly at a >= 0.9
+# cache hit rate, or if the autotuned cap drops rows.
 
 PY ?= python
 
-.PHONY: test bench
+.PHONY: test bench bench-smoke
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
 
 bench:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/run.py
+
+bench-smoke:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/bench_dlrm.py --smoke

@@ -43,7 +43,7 @@ def bench_pack_sizes(csv=True):
         cap = int(rows_per_dest * 1.5)
         packed = jax.jit(lambda x, de: pack_ragged(x, de, n_dest, cap))
         us = _timeit(packed, data, dest)
-        buf, counts = packed(data, dest)
+        buf, counts, _ = packed(data, dest)
         st = dispatch_stats(counts, cap, d * 4)
         rows.append((rows_per_dest, us, st.padding_fraction))
         if csv:

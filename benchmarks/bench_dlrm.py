@@ -44,6 +44,25 @@ def _timeit(fn, *args, reps=10):
     return (time.perf_counter() - t0) / reps
 
 
+def _best(fn, *args, reps=5, trials=3):
+    """min-of-trials: the standard microbenchmark noise filter — scheduler
+    hiccups only ever ADD time, so the minimum is the honest estimate."""
+    return min(_timeit(fn, *args, reps=reps) for _ in range(trials))
+
+
+def _best_paired(fns: dict, *args, reps=5, trials=6):
+    """min-of-trials with the candidates INTERLEAVED, so a load spike taxes
+    every candidate equally instead of biasing whichever ran under it —
+    the honest way to compare two stages on a shared host."""
+    for fn in fns.values():
+        fn(*args)                       # compile outside the clock
+    best = {k: float("inf") for k in fns}
+    for _ in range(trials):
+        for k, fn in fns.items():
+            best[k] = min(best[k], _timeit(fn, *args, reps=reps))
+    return best
+
+
 def measure_stages(batch=512):
     cfg = cb.get_arch("dlrm-kaggle").smoke()
     params = D.init_dlrm(jax.random.PRNGKey(0), cfg, n_shards=1)
@@ -100,7 +119,7 @@ def measure_fused(batch=256, cache_rows=16, csv=True):
         kernel_backend: jax.jit(
             lambda i, m: D.apply_emb(tables, i, m, kernel_backend)),
     }
-    stage_times = {name: _timeit(fn, idx, mask, reps=5)
+    stage_times = {name: _best(fn, idx, mask)
                    for name, fn in lookups.items()}
 
     # --- the fused stage: miss residual lookup + wire codec + hit add ---
@@ -111,8 +130,35 @@ def measure_fused(batch=256, cache_rows=16, csv=True):
         hits = HC.pooled_hits_of(cache.hot_rows, cache.slot_of, i, m)
         return emb + hits.astype(emb.dtype)
 
-    stage_times["fused_cache_bf16"] = _timeit(
-        jax.jit(fused), idx, mask, jnp.asarray(miss_mask), reps=5)
+    mm = jnp.asarray(miss_mask)
+
+    # --- the ragged stage (DESIGN.md §6): pack the live rows, pool ONLY
+    # what ships, codec, scatter back.  On one device the alltoallv is the
+    # identity, so the stage time covers the per-member pack + pooled
+    # lookup of O(cap) rows + codec + receive-side scatter; exchanged
+    # bytes are exact.  The cap is what the serving autotuner would pick
+    # from the observed live counts.
+    from repro.runtime.straggler import CapAutotuner
+    dense_rows = batch * t
+    tuner = CapAutotuner()
+    tuner.observe(int(np.asarray((miss_mask > 0).any(-1)).sum()), 0)
+    cap = tuner.recommend(dense_rows=dense_rows).cap
+
+    def ragged(i, m, mm):
+        payload, drops = D.ragged_exchange_pack(tables, i, mm, n_dest=1,
+                                                cap=cap, wire="bfloat16")
+        emb = D.ragged_exchange_unpack(payload, t_loc=t, bs=batch,
+                                       out_dtype=tables.dtype)
+        hits = HC.pooled_hits_of(cache.hot_rows, cache.slot_of, i, m)
+        return emb + hits.astype(emb.dtype), drops
+
+    stage_times.update(_best_paired(
+        {"fused_cache_bf16": jax.jit(fused),
+         "ragged_cache_bf16": jax.jit(ragged)}, idx, mask, mm))
+    out_ragged, drops = jax.jit(ragged)(idx, mask, mm)
+    out_fused = jax.jit(fused)(idx, mask, mm)
+    assert np.allclose(np.asarray(out_ragged), np.asarray(out_fused),
+                       atol=1e-5), "ragged stage diverged from fused stage"
 
     # --- exchanged payload bytes per configuration ---
     wires = {
@@ -122,6 +168,14 @@ def measure_fused(batch=256, cache_rows=16, csv=True):
         "cache_int8": A2A.wire_stats(miss_mask, s, "int8"),
     }
     ref_bytes = wires["ref_f32"].ref_bytes
+    # size the REAL payload pytree (per-leaf, via the ring accounting) so
+    # the recorded bytes can never drift from what the pack builds; the
+    # analytic helper is cross-checked against it
+    from repro.core.bls import ring_slot_bytes
+    real_payload, _ = D.ragged_exchange_pack(tables, idx, mm, n_dest=1,
+                                             cap=cap, wire="bfloat16")
+    ragged_bytes = ring_slot_bytes(real_payload)
+    assert ragged_bytes == A2A.ragged_wire_bytes(1, cap, s, "bfloat16")
     payload = {
         "batch": batch, "cache_rows": cache_rows,
         "hit_rate": float(hit_rate),
@@ -131,6 +185,24 @@ def measure_fused(batch=256, cache_rows=16, csv=True):
                      "reduction_vs_ref": w.reduction_vs_ref}
                  for k, w in wires.items()},
         "ref_exchange_bytes": ref_bytes,
+        # the live-byte win REALIZED on the wire (vs merely accounted)
+        "ragged": {
+            "cap": cap, "drops": int(drops),
+            "exchanged_bytes": ragged_bytes,
+            "live_bytes": wires["cache_bf16"].live_bytes,
+            "dense_bytes": wires["cache_bf16"].dense_bytes,
+            "bytes_vs_live": ragged_bytes /
+            max(wires["cache_bf16"].live_bytes, 1),
+        },
+        # what exchange="auto" statically resolves to at this scale
+        "auto_exchange": {
+            "cache": "ragged" if D.resolve_exchange(
+                "auto", use_cache=True, cap=cap,
+                dense_rows=dense_rows)[0] else "dense",
+            "cache0": "ragged" if D.resolve_exchange(
+                "auto", use_cache=False, cap=0,
+                dense_rows=dense_rows)[0] else "dense",
+        },
     }
     if csv:
         for k, v in stage_times.items():
@@ -140,6 +212,10 @@ def measure_fused(batch=256, cache_rows=16, csv=True):
         for k, w in wires.items():
             print(f"dlrm/wire_{k},{w.live_bytes},"
                   f"reduction={w.reduction_vs_ref:.2f}")
+        r = payload["ragged"]
+        print(f"dlrm/ragged_exchanged_bytes,{r['exchanged_bytes']},"
+              f"cap={cap} x{r['bytes_vs_live']:.2f}_of_live "
+              f"drops={r['drops']}")
     return payload
 
 
@@ -208,8 +284,35 @@ def run(csv=True):
     }
 
 
-def main():
-    write_bench_json(run())
+def smoke(batch=64, cache_rows=16):
+    """CI gate (``make bench-smoke``): at tiny scale the ragged exchange
+    must (a) drop nothing at the autotuned cap, (b) physically move fewer
+    bytes than the dense butterfly whenever the hot cache absorbs >= 90%
+    of lookups, and (c) resolve ``auto`` to dense when the cache is off."""
+    p = measure_fused(batch=batch, cache_rows=cache_rows, csv=False)
+    r = p["ragged"]
+    assert r["drops"] == 0, f"autotuned cap dropped rows: {r}"
+    if p["hit_rate"] >= 0.9:
+        assert r["exchanged_bytes"] < r["dense_bytes"], (
+            f"ragged moved {r['exchanged_bytes']}B >= dense "
+            f"{r['dense_bytes']}B at hit rate {p['hit_rate']:.2f}")
+    assert p["auto_exchange"]["cache0"] == "dense", p["auto_exchange"]
+    print(f"bench-smoke OK: hit_rate={p['hit_rate']:.2f} cap={r['cap']} "
+          f"ragged_bytes={r['exchanged_bytes']} "
+          f"dense_bytes={r['dense_bytes']} "
+          f"(x{r['bytes_vs_live']:.2f} of live)")
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-scale CI gate instead of the full run")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        smoke()
+    else:
+        write_bench_json(run())
 
 
 if __name__ == "__main__":

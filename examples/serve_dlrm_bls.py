@@ -7,6 +7,11 @@ bound, and cross-checks BLS-on vs BLS-off outputs bit-for-bit.
 Run:  PYTHONPATH=src python examples/serve_dlrm_bls.py [--batches 20]
       [--batch-size 256] [--bound 4] [--microbatches 8]
       [--wire-dtype float32|bfloat16|int8] [--cache-rows N]
+      [--exchange dense|ragged|auto] [--ragged-cap N]
+
+With --cache-rows > 0 and --exchange auto, the engine starts on the dense
+butterfly and the cap autotuner flips it to the ragged miss-residual
+exchange (DESIGN.md §6) once the observed live counts justify a cap.
 """
 import argparse
 
@@ -36,6 +41,11 @@ def main():
                     choices=sorted(WIRE_TOL))
     ap.add_argument("--cache-rows", type=int, default=0,
                     help="hot-row cache rows per table (0 = off)")
+    ap.add_argument("--exchange", default="auto",
+                    choices=("dense", "ragged", "auto"),
+                    help="pooled-exchange collective (DESIGN.md §6)")
+    ap.add_argument("--ragged-cap", type=int, default=0,
+                    help="rows per destination bucket (0 = autotuned)")
     args = ap.parse_args()
 
     cfg = cb.get_arch("dlrm-kaggle").smoke()
@@ -58,7 +68,8 @@ def main():
                                 bound=0, microbatches=1),
         f"bls(k={args.bound})": DLRMEngine(
             params, cfg, batch_size=args.batch_size, bound=args.bound,
-            microbatches=args.microbatches, wire_dtype=args.wire_dtype),
+            microbatches=args.microbatches, wire_dtype=args.wire_dtype,
+            exchange=args.exchange, ragged_cap=args.ragged_cap),
     }
     if args.cache_rows > 0:
         # calibrate the BLS engine's hot cache on the first preloaded batch
@@ -97,8 +108,15 @@ def main():
     print(f"max |CTR(sync) - CTR(bls)| = {diff:.2e} (tol {tol:.0e}; paper "
           f"§III-C: accuracy fully preserved, wire codec adds bounded noise)")
     assert diff < tol
-    rec = engines[names[1]].recommend_bound()
-    print(f"straggler monitor: {rec.reason}")
+    eng = engines[names[1]]
+    rec = eng.recommend_bound()
+    print(f"straggler monitor: {rec.reason} "
+          f"(ring slot = {eng.slot_bytes()} B)")
+    cap_rec = eng.retune_cap()
+    if cap_rec is not None:
+        print(f"cap autotuner: {cap_rec.reason} "
+              f"({eng.stats.retunes} retunes, cap in service = "
+              f"{eng.ragged_cap or 'dense-equivalent'})")
 
 
 if __name__ == "__main__":

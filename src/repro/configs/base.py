@@ -113,6 +113,14 @@ class DLRMConfig:
     sparse_backend: str = "auto"    # ref | pallas | interpret | auto
     wire_dtype: str = "float32"     # exchange codec: float32 | bfloat16 | int8
     cache_rows: int = 0             # hot-row cache rows per table (0 = off)
+    # --- ragged miss-residual exchange (DESIGN.md §6) ---
+    # dense:  equal-split butterfly of the full pooled buffer (reference)
+    # ragged: cap-padded per-destination buckets of live rows (alltoallv)
+    # auto:   ragged iff a cache is active AND the cap beats the dense
+    #         buffer (cap * P < B * T); the serving autotuner drives the cap
+    exchange: str = "auto"
+    ragged_cap: int = 0             # rows per destination bucket (0 = dense-
+                                    # equivalent cap, i.e. lossless / auto)
 
     @property
     def n_tables(self) -> int:

@@ -13,10 +13,19 @@ Two flavours used by DLRM (models/dlrm.py):
 
 Wire codecs (``encode_wire`` / ``decode_wire``) compress the butterfly
 payload: bf16 halves the exchanged bytes, int8 with a per-row (per pooled
-vector) scale quarters them — the inference-side analogue of
+vector) bf16 scale quarters them — the inference-side analogue of
 train/grad_compression.py's data-parallel codecs (no error feedback needed:
 each exchanged value is consumed once, not accumulated).  ``wire_stats``
 does the byte accounting the cache-aware path is judged on.
+
+The ragged pooled exchange (DESIGN.md §6) composes the pieces: live pooled
+rows are packed into cap-padded per-destination buckets
+(``pack_ragged_tree``), codec-encoded, shipped with their counts
+(``alltoallv_ragged``), and scattered back into a dense layout on the
+receive side (``unpack_ragged``) — the exchanged bytes become the
+``wire_stats.live_bytes`` number instead of the dense buffer.  Overflowing
+a bucket drops rows; every packing path returns the drop count so parity
+tests can assert zero and the serving cap autotuner can react.
 """
 from __future__ import annotations
 
@@ -53,6 +62,8 @@ def butterfly_pooled(x, axis: str = "model", wire_dtype: str = "float32"):
 # ---------------------------------------------------------------------------
 
 WIRE_ITEMSIZE = {"float32": 4, "bfloat16": 2, "int8": 1}
+# bytes of per-row side data: int8 ships one bf16 scale per pooled vector
+WIRE_SCALE_BYTES = {"float32": 0, "bfloat16": 0, "int8": 2}
 _WIRE_ALIASES = {None: "float32", "f32": "float32", "bf16": "bfloat16"}
 
 
@@ -68,10 +79,12 @@ def encode_wire(x, wire_dtype: str = "float32"):
     """x (..., D) -> codec pytree whose leaves all keep the leading axes of
     ``x`` (so any batch-split collective maps straight over the leaves).
 
-    int8 carries one f32 scale per pooled vector (per (sample, table) row),
+    int8 carries one bf16 scale per pooled vector (per (sample, table) row),
     the grad_compression idiom at per-row granularity: pooled embedding
     magnitudes vary by orders of magnitude across tables, so a per-tensor
-    scale would crush the cold tables' precision.
+    scale would crush the cold tables' precision.  The scale is nudged up
+    by one bf16 ulp before the down-cast so quantizing against the stored
+    (coarser) scale can never push |q| past 127.
     """
     wire = canon_wire(wire_dtype)
     if wire == "float32":
@@ -81,14 +94,17 @@ def encode_wire(x, wire_dtype: str = "float32"):
     xf = x.astype(jnp.float32)
     scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1, keepdims=True),
                         1e-12) / 127.0
-    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    scale = (scale * (1.0 + 2.0 ** -7)).astype(jnp.bfloat16)
+    q = jnp.clip(jnp.round(xf / scale.astype(jnp.float32)),
+                 -127, 127).astype(jnp.int8)
     return {"q": q, "scale": scale}
 
 
 def decode_wire(payload, out_dtype=jnp.float32):
     q = payload["q"]
     if "scale" in payload:
-        return (q.astype(jnp.float32) * payload["scale"]).astype(out_dtype)
+        return (q.astype(jnp.float32) *
+                payload["scale"].astype(jnp.float32)).astype(out_dtype)
     return q.astype(out_dtype)
 
 
@@ -120,7 +136,7 @@ def wire_stats(miss_mask, embed_dim: int,
     rows_total = int(miss_mask.shape[0] * miss_mask.shape[1])
     rows_live = int((miss_mask > 0).any(axis=-1).sum())
     item = WIRE_ITEMSIZE[wire]
-    scale_bytes = 4 if wire == "int8" else 0
+    scale_bytes = WIRE_SCALE_BYTES[wire]
     return WireStats(
         dense_bytes=rows_total * (embed_dim * item + scale_bytes),
         live_bytes=rows_live * (embed_dim * item + scale_bytes),
@@ -136,31 +152,125 @@ def alltoallv_raw(send, counts, axis: str = "model"):
 
     recv[q] holds the rows source q sent to this shard, of which
     recv_counts[q] are valid.  Semantically MPI_Alltoallv with bucket
-    padding; the counts exchange is the (tiny) analogue of the paper's
-    request-size negotiation.
+    padding; the single-array form of :func:`alltoallv_ragged`.
     """
-    recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0,
-                              tiled=True)
+    return alltoallv_ragged(send, counts, axis)
+
+
+def pack_ragged_tree(rows_tree, dest, n_dest: int, cap: int):
+    """Scatter a pytree of row arrays (N, ...) sharing the leading axis into
+    per-destination buckets (n_dest, cap, ...) + counts + drop count.
+
+    dest (N,) int32; rows with dest outside [0, n_dest) are *excluded* (the
+    caller's way of marking dead rows) and never counted as drops.  Rows
+    with a valid destination whose bucket is already full ARE drops — the
+    static-shape price of raggedness; the returned scalar is the signal the
+    parity tests assert zero and the serving cap autotuner consumes.
+    """
+    n = dest.shape[0]
+    order = jnp.argsort(dest, stable=True)
+    ds = dest[order]
+    # bucket d owns sorted positions [bounds[d], bounds[d+1]); excluded
+    # rows (dest < 0 / >= n_dest) sort outside every bucket's range.
+    # Bucket slots then GATHER their source row — a scatter formulation is
+    # semantically identical but serializes on CPU/TPU scatter units.
+    bounds = jnp.searchsorted(ds, jnp.arange(n_dest + 1))
+    count_all = bounds[1:] - bounds[:-1]
+    counts = jnp.minimum(count_all, cap).astype(jnp.int32)
+    drops = jnp.sum(count_all - counts).astype(jnp.int32)
+    slot = jnp.arange(cap)[None, :]
+    src = jnp.where(slot < counts[:, None],
+                    bounds[:-1, None] + slot, n)       # n -> zero pad row
+    # compose the sort permutation into the gather indices instead of
+    # materializing sorted N-row copies of every leaf: only the
+    # <= n_dest*cap rows that actually ship are ever touched
+    src = jnp.where(src < n, order[jnp.minimum(src, n - 1)], n)
+    return _gather_padded(rows_tree, src, n), counts, drops
+
+
+def _gather_padded(rows_tree, src, n: int):
+    """Gather rows ``src`` from every (N, ...) leaf, with index ``n``
+    reading a zero pad row (the empty-bucket-slot encoding)."""
+
+    def take(a):
+        a_s = jnp.concatenate(
+            [a, jnp.zeros((1,) + a.shape[1:], a.dtype)])
+        return a_s[src]                                # (*src.shape, ...)
+
+    return jax.tree.map(take, rows_tree)
+
+
+def pack_ragged(rows, dest, n_dest: int, cap: int):
+    """Single-array convenience wrapper around :func:`pack_ragged_tree`:
+    rows (N, D) -> (buckets (n_dest, cap, D), counts (n_dest,), drops)."""
+    return pack_ragged_tree(rows, dest, n_dest, cap)
+
+
+def pack_ragged_segments(rows_tree, live, n_dest: int, cap: int):
+    """:func:`pack_ragged_tree` specialized to destination-grouped rows:
+    row n belongs to destination n // (N / n_dest) and ships iff
+    ``live[n]``.  The pooled miss-residual exchange has exactly this
+    layout (destination = sample // bs is non-decreasing in the flattened
+    (sample, table) order), which lets the pack skip the argsort — the
+    dominant pack cost — for a prefix sum + vectorized binary search over
+    the live flags.  Same contract: (buckets, counts, drops)."""
+    n = live.shape[0]
+    l = live.astype(jnp.int32)
+    csum = jnp.cumsum(l)
+    count_all = l.reshape(n_dest, n // n_dest).sum(axis=1)
+    starts = jnp.cumsum(count_all) - count_all
+    counts = jnp.minimum(count_all, cap).astype(jnp.int32)
+    drops = jnp.sum(count_all - counts).astype(jnp.int32)
+    slot = jnp.arange(cap)[None, :]
+    valid = slot < counts[:, None]
+    # flat index of the g-th live row = first n with cumsum(live) == g+1
+    g = starts[:, None] + slot
+    src = jnp.where(valid, jnp.searchsorted(csum, g + 1), n)
+    return _gather_padded(rows_tree, src, n), counts, drops
+
+
+def alltoallv_ragged(payload, counts, axis: str = "model"):
+    """Tree-shaped alltoallv: every leaf of ``payload`` is a (P, cap, ...)
+    per-destination bucket stack; counts (P,) int32 valid rows per bucket.
+    Returns (recv pytree, recv_counts) where recv leaf [q] holds what source
+    q sent here, of which recv_counts[q] rows are valid.  The counts
+    exchange is the (tiny) analogue of the paper's request-size
+    negotiation."""
+    recv = jax.tree.map(
+        lambda a: jax.lax.all_to_all(a, axis, split_axis=0, concat_axis=0,
+                                     tiled=True), payload)
     recv_counts = jax.lax.all_to_all(counts.reshape(-1, 1), axis, 0, 0,
                                      tiled=True).reshape(-1)
     return recv, recv_counts
 
 
-def pack_ragged(rows, dest, n_dest: int, cap: int):
-    """Scatter rows (N, D) with destinations dest (N,) into per-destination
-    buckets (n_dest, cap, D) + counts.  Rows beyond cap are dropped (the
-    static-shape price of raggedness; count the drops in tests)."""
-    n, d = rows.shape
-    order = jnp.argsort(dest, stable=True)
-    ds, rs = dest[order], rows[order]
-    starts = jnp.searchsorted(ds, jnp.arange(n_dest), side="left")
-    pos = jnp.arange(n) - starts[jnp.clip(ds, 0, n_dest - 1)]
-    valid = (ds >= 0) & (ds < n_dest) & (pos < cap)
-    buf = jnp.zeros((n_dest, cap, d), rows.dtype)
-    buf = buf.at[jnp.where(valid, ds, n_dest),
-                 jnp.where(valid, pos, 0)].set(rs, mode="drop")
-    counts = jnp.bincount(jnp.where(valid, ds, n_dest), length=n_dest + 1)
-    return buf, counts[:n_dest].astype(jnp.int32)
+def unpack_ragged(rows, slot_ids, counts, n_slots: int):
+    """Scatter received bucket rows back into a dense row layout.
+
+    rows (P, cap, D); slot_ids (P, cap) int32 flat target slots; counts
+    (P,) valid rows per source bucket.  Entries beyond a bucket's count are
+    dropped.  Slots nothing was sent for stay exactly zero — for the pooled
+    miss-residual exchange those are the all-hit (or empty) bags, which
+    pool to an exact zero in the dense exchange too, so the scatter is
+    lossless.  Returns (n_slots, D)."""
+    p, cap = slot_ids.shape
+    valid = jnp.arange(cap)[None, :] < counts[:, None]
+    tgt = jnp.where(valid, slot_ids, n_slots)          # OOB -> dropped
+    flat = rows.reshape(p * cap, *rows.shape[2:])
+    out = jnp.zeros((n_slots,) + flat.shape[1:], rows.dtype)
+    return out.at[tgt.reshape(-1)].set(flat, mode="drop")
+
+
+def ragged_wire_bytes(n_dest: int, cap: int, embed_dim: int,
+                      wire_dtype: str = "float32") -> int:
+    """Bytes ONE member physically moves through the ragged exchange: the
+    cap-padded pooled rows (+ per-row scales for int8) plus the int32 row
+    ids and per-destination counts.  Compare against
+    ``wire_stats(...).live_bytes`` (the information-theoretic floor) and
+    ``dense_bytes`` (what the equal-split butterfly moves)."""
+    wire = canon_wire(wire_dtype)
+    row = embed_dim * WIRE_ITEMSIZE[wire] + WIRE_SCALE_BYTES[wire]
+    return n_dest * cap * (row + 4) + n_dest * 4
 
 
 def dispatch_stats(counts, cap: int, row_bytes: int) -> A2AVStats:

@@ -26,6 +26,14 @@ overhead: O(k · bytes(payload + side)) per device, independent of table sizes.
 consumed in the same iteration (same-iteration overlap only), semantically
 equal to a synchronous alltoallv.
 
+Ring slots are arbitrary pytrees and may be dtype-HETEROGENEOUS: the ragged
+miss-residual exchange buffers {int8/bf16 codebook, bf16 scales, int32 row
+ids, int32 counts} per slot, shrinking the PAYLOAD part of bound-k memory
+from O(k · B·T·s) to O(k · P·cap·s).  Side data still rides the ring at its
+own size (with a cache the buffered pooled-hit correction stays
+(bs, T_pad, s) per slot) — ``ring_slot_bytes`` does the honest per-leaf
+accounting either way.
+
 The drain loop (paper Listing 2's ``while unfinished > 0``) is the epilogue
 over the final ``k`` ring slots.
 """
@@ -52,6 +60,16 @@ class BLSStats:
 def _tree_bytes(tree: Pytree) -> int:
     return sum(x.size * x.dtype.itemsize
                for x in jax.tree.leaves(tree) if hasattr(x, "dtype"))
+
+
+def ring_slot_bytes(recv_shape: Pytree, side_shape: Pytree = ()) -> int:
+    """Bytes ONE ring slot buffers for a (collective output, side data)
+    pair.  The ring is dtype-heterogeneous by construction — a slot may mix
+    int8 codebooks, bf16 scales and int32 row ids/counts (the ragged
+    exchange's wire format) — so the honest number is summed per leaf from
+    shapes/ShapeDtypeStructs, never ``rows * 4``.  This is the
+    ``slot_bytes`` a memory-budget -> bound recommendation must use."""
+    return _tree_bytes(recv_shape) + _tree_bytes(side_shape)
 
 
 def _stack_zeros_like(tree: Pytree, k: int) -> Pytree:

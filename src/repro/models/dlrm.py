@@ -126,6 +126,112 @@ def apply_emb(tables, idx, mask, backend: str = "ref"):
     return embedding_bag_stacked_ref(tables, idx, mask)
 
 
+@dataclasses.dataclass
+class ExchangeDiag:
+    """Per-step exchange diagnostics (the cap autotuner's observation).
+    ``live_max``/``drops`` are traced scalars; the exchange decision and
+    its static geometry ride as pytree metadata so the whole object can
+    cross a jit boundary."""
+    live_max: object        # int32 scalar: max per-(microbatch, dest) live rows
+    drops: object           # int32 scalar: rows the cap dropped (0 when dense)
+    exchange: str = "dense"  # resolved decision: dense | ragged | local
+    cap: int = 0
+    dense_rows: int = 0     # what the dense butterfly moves per destination
+
+
+jax.tree_util.register_pytree_node(
+    ExchangeDiag,
+    lambda d: ((d.live_max, d.drops), (d.exchange, d.cap, d.dense_rows)),
+    lambda meta, leaves: ExchangeDiag(*leaves, *meta))
+
+
+def apply_emb_rows(tables, tid, idx, mask):
+    """Row-wise embedding bags: tables (T,R,s), tid (N,), idx/mask (N,hot)
+    -> (N,s) masked sums.  The packed-ragged analogue of ``apply_emb``: it
+    pools ONLY the rows that ride the exchange, so the lookup work shrinks
+    from O(B·T·hot) to O(P·cap·hot) gathers along with the wire bytes.
+    OOB ids clip exactly like kernels/ref.py so the paths agree."""
+    rows = tables[tid[:, None], jnp.clip(idx, 0, tables.shape[1] - 1)]
+    return jnp.sum(rows * mask[..., None].astype(rows.dtype), axis=1)
+
+
+def resolve_exchange(exchange: str, *, use_cache: bool, cap: int,
+                     dense_rows: int) -> tuple[bool, int]:
+    """Static (trace-time) exchange selection -> (use_ragged, cap).
+
+    ``dense_rows`` (= bs · t_loc) is what the equal-split butterfly moves
+    per destination; ``cap`` 0 means dense-equivalent (lossless, never
+    drops).  The ``auto`` policy goes ragged only when a cache is shrinking
+    the live set AND the cap actually undercuts the dense buffer
+    (cap · P < B · T per shard): with no cache nearly every row is live, a
+    zero-drop cap degenerates to the dense buffer, and the butterfly's
+    simpler wire format wins."""
+    if exchange not in ("dense", "ragged", "auto"):
+        raise ValueError(f"unknown exchange {exchange!r}")
+    cap = max(1, min(int(cap), dense_rows)) if cap else dense_rows
+    if exchange == "dense":
+        return False, cap
+    if exchange == "ragged":
+        return True, cap
+    return bool(use_cache) and cap < dense_rows, cap
+
+
+def ragged_exchange_pack(tables, idx, miss_mask, *, n_dest: int, cap: int,
+                         wire: str = "float32"):
+    """Stage-a half of the ragged miss-residual exchange for ONE member.
+
+    idx/miss_mask (B_mb, t_loc, hot) cover this member's LOCAL tables for
+    every destination's batch slice (B_mb = n_dest · bs).  Live rows (>=1
+    surviving index) are packed into cap-padded per-destination buckets
+    BEFORE pooling, only the packed rows are bag-pooled, and the pooled
+    vectors are codec-encoded.  Returns (payload, drops) with payload
+    {"q" (n_dest, cap, s) [, "scale"], "ids" (n_dest, cap) int32,
+    "counts" (n_dest,) int32}; an id encodes
+    sample-within-slice · t_loc + local_table, so the receiver rebuilds the
+    dense layout knowing only the source rank."""
+    b_mb, t_loc, hot = idx.shape
+    bs = b_mb // n_dest
+    live = (miss_mask > 0).any(axis=-1)                    # (B_mb, t_loc)
+    samp = jnp.arange(b_mb, dtype=jnp.int32)[:, None]
+    lt = jnp.arange(t_loc, dtype=jnp.int32)[None, :]
+    ids = (samp % bs) * t_loc + lt                         # (B_mb, t_loc)
+    rows = {"idx": idx.reshape(b_mb * t_loc, hot).astype(jnp.int32),
+            "mask": miss_mask.reshape(b_mb * t_loc, hot),
+            "ids": ids.reshape(-1)}
+    # flattened (sample, table) order is destination-grouped (destination
+    # = sample // bs), so the sort-free segment pack applies
+    packed, counts, drops = a2a_mod.pack_ragged_segments(
+        rows, live.reshape(-1), n_dest, cap)
+    # dead slots carry ids 0 / mask 0 and pool to an exact zero
+    tid = packed["ids"] % t_loc
+    pooled = apply_emb_rows(tables, tid.reshape(-1),
+                            packed["idx"].reshape(n_dest * cap, hot),
+                            packed["mask"].reshape(n_dest * cap, hot))
+    payload = a2a_mod.encode_wire(
+        pooled.reshape(n_dest, cap, -1), wire)
+    payload.update(ids=packed["ids"], counts=counts)
+    return payload, drops
+
+
+def ragged_exchange_unpack(recv, *, t_loc: int, bs: int,
+                           out_dtype=jnp.float32):
+    """Stage-b half: decode + scatter the received buckets back into the
+    dense (bs, t_pad, s) layout the interaction expects.  Bucket q came
+    from source rank q, which owns global tables [q·t_loc, (q+1)·t_loc);
+    rows nobody sent (all-hit / empty bags) stay exactly zero, matching
+    what they pool to in the dense exchange."""
+    n_dest, cap = recv["ids"].shape
+    t_pad = n_dest * t_loc
+    rows = a2a_mod.decode_wire(
+        {k: v for k, v in recv.items() if k in ("q", "scale")}, out_dtype)
+    src = jnp.arange(n_dest, dtype=jnp.int32)[:, None]
+    samp = recv["ids"] // t_loc
+    table = src * t_loc + recv["ids"] % t_loc
+    flat = samp * t_pad + table
+    out = a2a_mod.unpack_ragged(rows, flat, recv["counts"], bs * t_pad)
+    return out.reshape(bs, t_pad, rows.shape[-1])
+
+
 def dot_interaction(z):
     """z:(B,F,s) -> (B, F(F-1)/2) lower-triangle pairwise dots (the
     reference's interact_features; kernels/dot_interaction.py = Pallas)."""
@@ -160,7 +266,10 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                         bound: int = 0, microbatches: int = 1,
                         unroll: Optional[int] = None,
                         restore_order: bool = True,
-                        cache=None, wire_dtype: Optional[str] = None):
+                        cache=None, wire_dtype: Optional[str] = None,
+                        exchange: Optional[str] = None,
+                        ragged_cap: Optional[int] = None,
+                        return_diag: bool = False):
     """dense:(B, n_dense) idx/mask:(B, T_pad, hot); batch B sharded over
     (pod, data) [dense replicated across ``model`` within a data row, as the
     reference's data loader scatters it]; tables over ``model``.  bound>0
@@ -179,6 +288,16 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
     (up to fp summation order).  ``wire_dtype`` (default cfg.wire_dtype)
     applies core/alltoallv's codec to the exchanged payload; 'float32' is
     bit-identical to the reference exchange.
+
+    ``exchange`` (default cfg.exchange) selects the collective:  'dense'
+    is the equal-split butterfly of the full pooled buffer; 'ragged' packs
+    only the live (>=1-miss) rows into ``ragged_cap``-padded
+    per-destination buckets and ships them through a counts-aware
+    alltoallv (DESIGN.md §6) — the exchanged bytes AND the BLS ring slots
+    shrink from O(B·T) to O(P·cap); 'auto' resolves per
+    :func:`resolve_exchange`.  ``return_diag=True`` additionally returns
+    {live_max, drops, exchange, cap, dense_rows} — the signal the serving
+    cap autotuner consumes.
     """
     mesh = partition.current_mesh()
     if mesh is None or "model" not in mesh.axis_names:
@@ -189,7 +308,10 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                 "falling back to forward_local; cache/wire_dtype are "
                 "inactive (install one via partition.axis_rules)",
                 stacklevel=2)
-        return forward_local(params, cfg, dense, idx, mask)
+        logits = forward_local(params, cfg, dense, idx, mask)
+        if return_diag:
+            return logits, ExchangeDiag(jnp.int32(0), jnp.int32(0), "local")
+        return logits
     n_shards = mesh.shape["model"]
     baxes = _batch_axes(mesh)
     mb = microbatches
@@ -202,6 +324,19 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
             f"{idx.shape[1]} (padded) — build the cache over the full "
             f"(T_pad, R, s) stack")
     emb_dtype = params["tables"].dtype
+    # static exchange selection: per-destination rows of the dense
+    # butterfly vs the requested bucket cap
+    n_data = 1
+    for a in baxes:
+        n_data *= mesh.shape[a]
+    t_loc_g = idx.shape[1] // n_shards
+    bs_g = dense.shape[0] // (n_data * mb * n_shards)
+    dense_rows = bs_g * t_loc_g
+    use_ragged, cap = resolve_exchange(
+        exchange if exchange is not None else cfg.exchange,
+        use_cache=use_cache,
+        cap=ragged_cap if ragged_cap is not None else cfg.ragged_cap,
+        dense_rows=dense_rows)
 
     def shard_fn(tables, bot, top, dense_s, idx_s, mask_s, *cache_args):
         # per-shard shapes: tables (t_loc,R,s); dense (B_row, n_dense)
@@ -213,19 +348,24 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
         b_row = dense_s.shape[0]
         bs = b_row // (mb * n_shards)  # rows per (microbatch, member)
 
+        def local_miss(ix, mk):
+            """This member's local-table (idx, residual mask) slice."""
+            if not use_cache:
+                return ix, mk
+            _, slot_of = cache_args
+            ix_loc = jax.lax.dynamic_slice_in_dim(ix, m * t_loc, t_loc,
+                                                  axis=1)
+            mk_loc = jax.lax.dynamic_slice_in_dim(mk, m * t_loc, t_loc,
+                                                  axis=1)
+            slot_loc = jax.lax.dynamic_slice_in_dim(slot_of, m * t_loc,
+                                                    t_loc, axis=0)
+            return ix_loc, hc_mod.miss_mask_of(slot_loc, ix_loc, mk_loc)
+
         def stage_a(x):
             j, d, ix, mk = x
+            ix_loc, miss_mk = local_miss(ix, mk)
             if use_cache:
                 hot_rows, slot_of = cache_args
-                # local-table slice for the miss path
-                ix_loc = jax.lax.dynamic_slice_in_dim(ix, m * t_loc, t_loc,
-                                                      axis=1)
-                mk_loc = jax.lax.dynamic_slice_in_dim(mk, m * t_loc, t_loc,
-                                                      axis=1)
-                slot_loc = jax.lax.dynamic_slice_in_dim(slot_of, m * t_loc,
-                                                        t_loc, axis=0)
-                miss_mk = hc_mod.miss_mask_of(slot_loc, ix_loc, mk_loc)
-                pooled = apply_emb(tables, ix_loc, miss_mk, backend)
                 # member m's own batch slice over ALL tables: pool the
                 # cache hits locally from the replicated hot block
                 ix_m = jax.lax.dynamic_slice_in_dim(ix, m * bs, bs, axis=0)
@@ -233,15 +373,30 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                 hits_m = hc_mod.pooled_hits_of(hot_rows, slot_of, ix_m,
                                                mk_m).astype(emb_dtype)
             else:
-                pooled = apply_emb(tables, ix, mk, backend)
                 hits_m = jnp.zeros((bs, 0, 0), emb_dtype)  # empty side slot
-            payload = a2a_mod.encode_wire(pooled, wire)
+            if use_ragged:
+                # pack the live rows first, pool only what ships
+                payload, _ = ragged_exchange_pack(
+                    tables, ix_loc, miss_mk, n_dest=n_shards, cap=cap,
+                    wire=wire)
+            else:
+                pooled = apply_emb(tables, ix_loc, miss_mk, backend)
+                payload = a2a_mod.encode_wire(pooled, wire)
             # member m's dense rows of microbatch j (matches a2a delivery)
             dm = jax.lax.dynamic_slice_in_dim(d, m * bs, bs, axis=0)
             z0 = apply_mlp(bot, dm)                   # (bs, s)
             return payload, (z0, hits_m)
 
         def collective(payload):
+            if use_ragged:
+                # counts-aware alltoallv over cap-padded buckets — the
+                # wire moves O(P·cap) rows instead of the dense buffer
+                bucket = {k: v for k, v in payload.items() if k != "counts"}
+                recv, rcounts = a2a_mod.alltoallv_ragged(bucket,
+                                                         payload["counts"],
+                                                         "model")
+                recv["counts"] = rcounts
+                return recv
             # butterfly: batch split / table concat  -> (bs, t_pad, s);
             # the quantized codebook (and per-row scales) IS the wire format
             return jax.tree.map(
@@ -251,7 +406,11 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
 
         def stage_b(recv, side):
             z0, hits = side
-            emb_all = a2a_mod.decode_wire(recv, emb_dtype)
+            if use_ragged:
+                emb_all = ragged_exchange_unpack(recv, t_loc=t_loc, bs=bs,
+                                                 out_dtype=emb_dtype)
+            else:
+                emb_all = a2a_mod.decode_wire(recv, emb_dtype)
             if use_cache:
                 emb_all = emb_all + hits              # pooled-hit correction
             t = cfg.n_tables
@@ -263,14 +422,31 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
         def split(a):  # (B_row, ...) -> (mb, B_row/mb, ...)
             return a.reshape(mb, a.shape[0] // mb, *a.shape[1:])
 
+        # live-count / drop diagnostics for the serving cap autotuner:
+        # elementwise work independent of the pipeline schedule, reduced to
+        # replicated scalars (max per-(microbatch, destination) live rows
+        # seen anywhere; rows the cap would drop).  Only traced when the
+        # caller asked — the re-probe and the two collectives are pure
+        # overhead on the training / parity paths.
+        diag = ()
+        if return_diag:
+            axes_all = ("model",) + baxes
+            _, miss_all = local_miss(idx_s, mask_s)
+            cnt = (miss_all > 0).any(-1).reshape(mb, n_shards, bs, t_loc) \
+                .sum((2, 3)).astype(jnp.int32)
+            live_max = jax.lax.pmax(jnp.max(cnt), axes_all)
+            drops_l = jnp.sum(jnp.maximum(cnt - cap, 0)) if use_ragged \
+                else jnp.int32(0)
+            diag = (live_max, jax.lax.psum(drops_l, axes_all))
+
         js = jnp.arange(mb, dtype=jnp.int32)
         xs = (js, split(dense_s), split(idx_s), split(mask_s))
         if bound == 0 and mb == 1:
             payload, side = stage_a(jax.tree.map(lambda a: a[0], xs))
-            return stage_b(collective(payload), side)[None]
+            return (stage_b(collective(payload), side)[None],) + diag
         outs, _ = bls_mod.bls_pipeline(stage_a, collective, stage_b, xs,
                                        bound, unroll=unroll)
-        return outs  # (mb, bs)
+        return (outs,) + diag  # (mb, bs) [, scalar, scalar]
 
     sparse_spec = (P(baxes if baxes else None, None, None) if use_cache
                    else P(baxes if baxes else None, "model", None))
@@ -284,23 +460,27 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
     if use_cache:
         in_specs += [P(), P()]              # hot block replicated everywhere
         args += [cache.hot_rows, cache.slot_of]
-    out = compat.shard_map(
+    out_spec = P(None, baxes + ("model",) if baxes else "model")
+    out_specs = (out_spec, P(), P()) if return_diag else (out_spec,)
+    out, *diag_out = compat.shard_map(
         shard_fn, mesh=mesh,
         in_specs=tuple(in_specs),
-        out_specs=P(None, baxes + ("model",) if baxes else "model"),
+        out_specs=out_specs,
         check_vma=False,
     )(*args)
     # out: (mb, B/mb) where each row of size B/mb is laid out
     # [data-row, member, bs]; input order within a data row is
     # [microbatch, member, bs].
     if not restore_order:
-        return out.reshape(-1)
-    n_data = 1
-    for a in baxes:
-        n_data *= mesh.shape[a]
-    bs = dense.shape[0] // (n_data * mb * n_shards)
-    o = out.reshape(mb, n_data, n_shards, bs)
-    return o.transpose(1, 0, 2, 3).reshape(-1)
+        logits = out.reshape(-1)
+    else:
+        o = out.reshape(mb, n_data, n_shards, bs_g)
+        logits = o.transpose(1, 0, 2, 3).reshape(-1)
+    if return_diag:
+        return logits, ExchangeDiag(
+            *diag_out, "ragged" if use_ragged else "dense",
+            cap, dense_rows)
+    return logits
 
 
 # ---------------------------------------------------------------------------

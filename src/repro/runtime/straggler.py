@@ -1,10 +1,19 @@
-"""Straggler detection + mitigation policy.
+"""Straggler detection + mitigation policy, and the ragged-exchange cap
+autotuner.
 
 For inference the BLS bound IS the mitigation: a bound of k absorbs any
 transient per-host delay up to k iterations of slack (paper §IV).  The
 policy below closes the loop: observe per-step latency jitter, recommend the
 smallest k whose absorption window covers the tail, and cap it by the memory
-budget (ring bytes are linear in k — core/bls.BLSStats)."""
+budget (ring bytes are linear in k — core/bls.BLSStats).
+
+``CapAutotuner`` plays the same observe->recommend game for the ragged
+miss-residual exchange (DESIGN.md §6): the bucket cap trades padding waste
+(cap too big) against dropped rows (cap too small).  It watches the
+per-destination live-row counts and drop events each serving flush and
+recommends the smallest cap with zero drops at a target quantile; when that
+cap no longer undercuts the dense butterfly's per-destination rows, ragged
+is unprofitable and the recommendation is to fall back to dense."""
 from __future__ import annotations
 
 import collections
@@ -52,6 +61,75 @@ class StragglerMonitor:
         reason = (f"p99-p50 jitter {jitter*1e3:.2f} ms over median "
                   f"{p50*1e3:.2f} ms -> k={k}")
         return BoundRecommendation(k, reason, p50, p99)
+
+
+@dataclasses.dataclass(frozen=True)
+class CapRecommendation:
+    cap: int          # smallest safe per-destination bucket cap
+    ragged: bool      # does that cap still undercut the dense exchange?
+    live_q: int       # the live-count quantile the cap covers
+    drops: int        # drops observed since the last recommendation
+    reason: str
+
+
+class CapAutotuner:
+    """Windowed quantile tracker for per-destination live-row counts.
+
+    observe() takes the ``live_max`` / ``drops`` diagnostics a
+    ``forward_distributed(..., return_diag=True)`` step emits.  recommend()
+    picks the smallest cap (rounded up to ``round_to`` rows, with
+    ``headroom`` slack for drift) that covers the target quantile with zero
+    drops; observed drops mean the cap in use was too small, so the
+    recommendation at least doubles it.  ``ragged`` flips False when the
+    safe cap reaches the dense exchange's per-destination rows (cap·P >=
+    B·T) — at that point padding eats the live-byte win and the dense
+    butterfly's simpler wire format is the right call."""
+
+    def __init__(self, window: int = 128, quantile: float = 0.99,
+                 headroom: float = 1.25, round_to: int = 8):
+        self.live = collections.deque(maxlen=window)
+        self.quantile = quantile
+        self.headroom = headroom
+        self.round_to = round_to
+        self.drops = 0          # since last recommend()
+        self.total_drops = 0
+
+    def observe(self, live_max: int, drops: int = 0) -> None:
+        self.live.append(int(live_max))
+        self.drops += int(drops)
+        self.total_drops += int(drops)
+
+    def __len__(self) -> int:
+        return len(self.live)
+
+    def recommend(self, *, dense_rows: int,
+                  current_cap: Optional[int] = None,
+                  peek: bool = False) -> CapRecommendation:
+        """dense_rows: rows the dense butterfly moves per destination
+        (bs · t_loc) — the profitability bar and the lossless ceiling.
+        ``peek=True`` reads without consuming the since-last-recommendation
+        drop counter (for diagnostic callers that won't act on it)."""
+        if not self.live:
+            return CapRecommendation(dense_rows, False, 0, 0,
+                                     "no observations yet -> dense")
+        xs = sorted(self.live)
+        q = xs[min(len(xs) - 1, int(self.quantile * len(xs)))]
+        cap = int(q * self.headroom)
+        cap = -(-max(cap, 1) // self.round_to) * self.round_to  # ceil round
+        drops = self.drops
+        if not peek:
+            self.drops = 0
+        if drops and current_cap:
+            # the cap in service proved too small: grow geometrically
+            # rather than re-learning from the (stale) window
+            cap = max(cap, 2 * current_cap)
+        cap = min(cap, dense_rows)
+        ragged = cap < dense_rows
+        reason = (f"live p{int(self.quantile * 100)}={q} rows/dest, "
+                  f"headroom x{self.headroom} -> cap={cap} "
+                  f"({'ragged' if ragged else 'dense: cap*P >= B*T'}"
+                  f"{f', {drops} drops seen' if drops else ''})")
+        return CapRecommendation(cap, ragged, q, drops, reason)
 
 
 def detect_stragglers(per_host_latencies: dict, threshold: float = 1.5

@@ -18,8 +18,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import DLRMConfig, ModelConfig
+from repro.core import alltoallv as a2a_mod
+from repro.core import bls as bls_mod
 from repro.models import api, dlrm as dlrm_mod
-from repro.runtime.straggler import StragglerMonitor
+from repro.runtime.straggler import CapAutotuner, StragglerMonitor
 from repro.train import steps as steps_mod
 
 
@@ -28,6 +30,7 @@ class ServeStats:
     batches: int = 0
     requests: int = 0
     total_s: float = 0.0
+    retunes: int = 0          # cap-autotuner re-jits
 
     @property
     def throughput_rps(self) -> float:
@@ -41,17 +44,31 @@ class DLRMEngine:
     ``cache`` (a serving/hot_cache.HotCache over the full table stack) or a
     calibrated one via :meth:`calibrate_cache` turns the skewed head of the
     access stream into local pooling (DESIGN.md: the fused sparse hot path).
+
+    ``exchange`` / ``ragged_cap`` (defaults: cfg) select the collective
+    (DESIGN.md §6).  Under ``exchange='auto'`` the engine runs the cap
+    autotuner: every flush feeds the step's live-count/drop diagnostics to
+    a ``CapAutotuner``; every ``retune_every`` batches it adopts the
+    recommended cap (re-jitting the step), switching between the ragged
+    alltoallv and the dense butterfly as profitability flips.
     """
 
     def __init__(self, params, cfg: DLRMConfig, *, batch_size: int = 512,
                  bound: int = 0, microbatches: int = 1,
-                 wire_dtype: Optional[str] = None, cache=None):
+                 wire_dtype: Optional[str] = None, cache=None,
+                 exchange: Optional[str] = None,
+                 ragged_cap: Optional[int] = None, retune_every: int = 8):
         self.params, self.cfg = params, cfg
         self.batch_size = batch_size
         self.bound, self.microbatches = bound, microbatches
         self.wire_dtype = wire_dtype or cfg.wire_dtype
         self.cache = cache
+        self.exchange = exchange or cfg.exchange
+        self.ragged_cap = ragged_cap if ragged_cap is not None \
+            else cfg.ragged_cap
+        self.retune_every = retune_every
         self.monitor = StragglerMonitor()
+        self.cap_tuner = CapAutotuner()
         self.stats = ServeStats()
         self._pending: list = []
         self._step = jax.jit(self._make_step(bound, microbatches))
@@ -69,13 +86,28 @@ class DLRMEngine:
 
     def _make_step(self, bound, microbatches):
         cfg, wire = self.cfg, self.wire_dtype
+        ex, cap = self.exchange, self.ragged_cap
+        # diagnostics cost a full-batch miss re-probe + two collectives:
+        # trace them only when something consumes them — drop monitoring
+        # (explicit ragged) or the autotuner (auto WITH a cache; cacheless
+        # auto can never resolve to ragged, and skipping the observations
+        # also keeps pre-calibration full-live counts out of the window)
+        diag_on = ex == "ragged" or (ex == "auto" and
+                                     self.cache is not None)
+
+        def _finish(out):
+            if not diag_on:
+                logits = out
+                return (jax.nn.sigmoid(logits),)
+            logits, diag = out
+            return jax.nn.sigmoid(logits), diag.live_max, diag.drops
 
         if self.cache is None:
             def step(params, dense, idx, mask):
-                logits = dlrm_mod.forward_distributed(
+                return _finish(dlrm_mod.forward_distributed(
                     params, cfg, dense, idx, mask, bound=bound,
-                    microbatches=microbatches, wire_dtype=wire)
-                return jax.nn.sigmoid(logits)
+                    microbatches=microbatches, wire_dtype=wire,
+                    exchange=ex, ragged_cap=cap, return_diag=diag_on))
             return step
 
         from repro.serving.hot_cache import HotCache
@@ -88,10 +120,10 @@ class DLRMEngine:
         def step(params, dense, idx, mask, hot_rows, slot_of):
             c = HotCache(hot_ids=None, hot_rows=hot_rows,
                          slot_of=slot_of)
-            logits = dlrm_mod.forward_distributed(
+            return _finish(dlrm_mod.forward_distributed(
                 params, cfg, dense, idx, mask, bound=bound,
-                microbatches=microbatches, cache=c, wire_dtype=wire)
-            return jax.nn.sigmoid(logits)
+                microbatches=microbatches, cache=c, wire_dtype=wire,
+                exchange=ex, ragged_cap=cap, return_diag=diag_on))
 
         return step
 
@@ -122,19 +154,104 @@ class DLRMEngine:
                      [self._pending[-1][2]] * pad)
         self._pending.clear()
         t0 = time.perf_counter()
-        out = np.asarray(self._step(*self._step_args(d, i, m)))
+        out, *diag = self._step(*self._step_args(d, i, m))
+        out = np.asarray(out)
         el = time.perf_counter() - t0
         self.monitor.observe(el)
+        if diag:
+            self.cap_tuner.observe(int(diag[0]), int(diag[1]))
         self.stats.batches += 1
         self.stats.requests += n
         self.stats.total_s += el
+        if self.exchange == "auto" and \
+                self.stats.batches % self.retune_every == 0:
+            self.retune_cap()
         return out[:n]
 
-    def recommend_bound(self, memory_budget: int = 64 << 20):
+    # -- ragged-exchange cap autotuning ------------------------------------
+
+    def _exchange_geometry(self):
+        """(P, t_pad, bs, dense_rows) under the installed mesh, where bs is
+        the per-(member, microbatch) batch slice and dense_rows = bs·t_loc
+        is what the dense butterfly moves per destination."""
+        from repro.sharding import partition
+        mesh = partition.current_mesh()
+        if mesh is not None and "model" in mesh.axis_names:
+            p = mesh.shape["model"]
+            n_data = 1
+            for a in dlrm_mod._batch_axes(mesh):   # same source of truth
+                n_data *= mesh.shape[a]            # as forward_distributed
+        else:
+            p, n_data = 1, 1
+        t_pad = dlrm_mod.padded_tables(self.cfg, p)
+        bs = max(1, self.batch_size // (n_data * self.microbatches * p))
+        return p, t_pad, bs, bs * (t_pad // p)
+
+    def retune_cap(self):
+        """Under ``exchange='auto'``: adopt the autotuner's cap
+        recommendation, re-jitting the step when it differs enough to
+        matter — growth (drops seen, or the live tail drifted up) is
+        adopted immediately, shrinks only past 25% to avoid re-trace
+        thrash.  Under a forced exchange this is a PURE read (peeked
+        recommendation, no state mutated, no re-jit).  Returns the
+        recommendation (or None before any observations)."""
+        if not len(self.cap_tuner):
+            return None
+        _, _, _, dense_rows = self._exchange_geometry()
+        cur = self.ragged_cap or dense_rows
+        rec = self.cap_tuner.recommend(dense_rows=dense_rows,
+                                       current_cap=self.ragged_cap or None,
+                                       peek=self.exchange != "auto")
+        if self.exchange != "auto":
+            return rec
+        grow = rec.cap > cur
+        shrink = rec.cap * 4 <= cur * 3
+        if grow or shrink:
+            self.ragged_cap = rec.cap
+            self.stats.retunes += 1
+            self._step = jax.jit(self._make_step(self.bound,
+                                                 self.microbatches))
+        return rec
+
+    def slot_bytes(self) -> int:
+        """Bytes ONE BLS ring slot buffers under the current engine
+        configuration, summed from the shapes/dtypes the ring actually
+        holds: the wire codec's itemsize (+ bf16 scales for int8), the
+        cap-bounded ragged buckets (+ int32 ids/counts) when the ragged
+        exchange is active, and the buffered side activations."""
         cfg = self.cfg
-        slot = (self.batch_size * cfg.n_tables * cfg.embed_dim * 4 +
-                self.batch_size * cfg.embed_dim * 4)
-        return self.monitor.recommend_bound(slot_bytes=slot,
+        p, t_pad, bs, dense_rows = self._exchange_geometry()
+        wire = a2a_mod.canon_wire(self.wire_dtype)
+        qdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+               "int8": jnp.int8}[wire]
+        s = cfg.embed_dim
+        use_cache = self.cache is not None and self.cache.cache_rows > 0
+        use_ragged, cap = dlrm_mod.resolve_exchange(
+            self.exchange, use_cache=use_cache, cap=self.ragged_cap,
+            dense_rows=dense_rows)
+        if use_ragged:
+            recv = {"q": jax.ShapeDtypeStruct((p, cap, s), qdt),
+                    "ids": jax.ShapeDtypeStruct((p, cap), jnp.int32),
+                    "counts": jax.ShapeDtypeStruct((p,), jnp.int32)}
+            if wire == "int8":
+                recv["scale"] = jax.ShapeDtypeStruct((p, cap, 1),
+                                                     jnp.bfloat16)
+        else:
+            recv = {"q": jax.ShapeDtypeStruct((bs, t_pad, s), qdt)}
+            if wire == "int8":
+                recv["scale"] = jax.ShapeDtypeStruct((bs, t_pad, 1),
+                                                     jnp.bfloat16)
+        side = [jax.ShapeDtypeStruct((bs, s), jnp.dtype(cfg.dtype))]
+        if use_cache:
+            side.append(jax.ShapeDtypeStruct(
+                (bs, t_pad, s), self.params["tables"].dtype))
+        return bls_mod.ring_slot_bytes(recv, side)
+
+    def recommend_bound(self, memory_budget: int = 64 << 20):
+        """Memory-budget -> bound recommendation, with slot_bytes from
+        :meth:`slot_bytes` — what the ring actually buffers, not a dense
+        f32 estimate."""
+        return self.monitor.recommend_bound(slot_bytes=self.slot_bytes(),
                                             memory_budget=memory_budget)
 
 

@@ -18,8 +18,9 @@ class TestPackRagged:
     def test_roundtrip_and_counts(self):
         rows = jnp.arange(24.0).reshape(12, 2)
         dest = jnp.asarray([0, 0, 1, 2, 2, 2, 3, 3, 3, 3, 0, 1])
-        buf, counts = pack_ragged(rows, dest, n_dest=4, cap=8)
+        buf, counts, drops = pack_ragged(rows, dest, n_dest=4, cap=8)
         assert counts.tolist() == [3, 2, 3, 4]
+        assert int(drops) == 0
         # every valid row lands in its destination bucket
         for d in range(4):
             want = np.asarray(rows)[np.asarray(dest) == d]
@@ -29,9 +30,19 @@ class TestPackRagged:
     def test_capacity_drop(self):
         rows = jnp.ones((10, 2))
         dest = jnp.zeros((10,), jnp.int32)
-        buf, counts = pack_ragged(rows, dest, n_dest=2, cap=4)
+        buf, counts, drops = pack_ragged(rows, dest, n_dest=2, cap=4)
         assert int(counts[0]) == 4  # 6 dropped (static-shape price)
         assert int(counts[1]) == 0
+        assert int(drops) == 6     # ... and the pack says so
+
+    def test_excluded_rows_are_not_drops(self):
+        # dest -1 marks dead rows (the ragged exchange's all-hit bags):
+        # excluded by design, never reported as drops
+        rows = jnp.ones((6, 2))
+        dest = jnp.asarray([-1, 0, -1, 1, -1, 1], jnp.int32)
+        _, counts, drops = pack_ragged(rows, dest, n_dest=2, cap=4)
+        assert counts.tolist() == [1, 2]
+        assert int(drops) == 0
 
     def test_dispatch_stats(self):
         counts = jnp.asarray([3, 2, 3, 4])
@@ -59,7 +70,7 @@ from repro import compat
 mesh = compat.make_mesh((8,), ("model",))
 
 def shard_fn(rows, dest):
-    buf, counts = pack_ragged(rows, dest, n_dest=8, cap=16)
+    buf, counts, _ = pack_ragged(rows, dest, n_dest=8, cap=16)
     recv, rcounts = alltoallv_raw(buf, counts, "model")
     # checksum of valid rows survives the exchange globally
     mask = jnp.arange(16)[None, :] < rcounts[:, None]

@@ -52,6 +52,20 @@ class TestWireCodecs:
         row_max = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
         assert bool(jnp.all(jnp.abs(y - x) <= row_max / 127.0 + 1e-6))
 
+    def test_int8_scale_is_bf16_and_never_saturates(self):
+        # the per-row scale ships as bf16 (2 bytes, not 4); the up-nudged
+        # down-cast must keep quantization against the stored scale inside
+        # [-127, 127] and the roundtrip inside the f32-scale error bound
+        x = self._x((64, 4, 16), seed=3, scale=10.0)
+        p = A2A.encode_wire(x, "int8")
+        assert p["scale"].dtype == jnp.bfloat16
+        raw = jnp.round(x.astype(jnp.float32) /
+                        p["scale"].astype(jnp.float32))
+        assert float(jnp.max(jnp.abs(raw))) <= 127.0
+        y = A2A.decode_wire(p)
+        row_max = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        assert bool(jnp.all(jnp.abs(y - x) <= row_max / 127.0 + 1e-6))
+
     def test_zero_rows_quantize_exactly(self):
         x = jnp.zeros((8, 3, 16))
         for wire in ("float32", "bfloat16", "int8"):
@@ -73,7 +87,7 @@ class TestWireCodecs:
         assert st.live_bytes == 3 * 4 * 2
         assert st.reduction_vs_ref == pytest.approx(1 - 24 / 96)
         st8 = A2A.wire_stats(mask, embed_dim=4, wire_dtype="int8")
-        assert st8.live_bytes == 3 * (4 * 1 + 4)  # + per-row f32 scale
+        assert st8.live_bytes == 3 * (4 * 1 + 2)  # + per-row bf16 scale
 
 
 # ---------------------------------------------------------------------------
