@@ -3,7 +3,9 @@
 # to BENCH_dlrm.json keyed by the current git SHA; `make bench-smoke` is the
 # tiny-scale perf gate (.github/workflows/ci.yml): it fails if the ragged
 # exchange physically moves more bytes than the dense butterfly at a >= 0.9
-# cache hit rate, or if the autotuned cap drops rows.
+# cache hit rate, if the autotuned cap drops rows, or if the DMA-streamed
+# embedding-bag kernel diverges from the VMEM-resident kernel beyond f32
+# tolerance (DESIGN.md §1).
 
 PY ?= python
 

@@ -284,11 +284,40 @@ def run(csv=True):
     }
 
 
+def stream_parity_smoke():
+    """CI gate (``make bench-smoke``): the DMA-streamed embedding-bag
+    kernel must match the VMEM-resident kernel within f32 tolerance —
+    including a non-divisible batch and block-boundary row ids — so the
+    streamed path can't silently diverge, and both must match the jnp
+    reference bit-for-bit in f32 (interpret mode)."""
+    from repro.kernels import ops, ref
+    t, r, s, b, hot, rb = 2, 1000, 16, 37, 3, 192
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    tbl = jax.random.normal(ks[0], (t, r, s))
+    idx = jax.random.randint(ks[1], (b, t, hot), 0, r)
+    # hit the block boundaries: first/last row of a block, last table row
+    idx = idx.at[0, 0, 0].set(0).at[1, 0, 1].set(rb - 1) \
+             .at[2, 1, 0].set(rb).at[3, 1, 2].set(r - 1)
+    mask = (jax.random.uniform(ks[2], (b, t, hot)) < 0.7) \
+        .astype(jnp.float32)
+    want = ref.embedding_bag_stacked_ref(tbl, idx, mask)
+    resident = ops.embedding_bag_stacked_op(tbl, idx, mask, row_block=-1)
+    streamed = ops.embedding_bag_stacked_op(tbl, idx, mask, row_block=rb)
+    d = float(jnp.max(jnp.abs(np.asarray(streamed) - np.asarray(resident))))
+    assert d <= 1e-6, f"streamed kernel diverged from resident by {d}"
+    assert np.array_equal(np.asarray(streamed), np.asarray(want)), \
+        "streamed kernel not bit-identical to the f32 jnp reference"
+    print(f"bench-smoke OK: streamed-vs-resident max|d|={d:.1e} "
+          f"(rows={r} row_block={rb} batch={b})")
+
+
 def smoke(batch=64, cache_rows=16):
     """CI gate (``make bench-smoke``): at tiny scale the ragged exchange
     must (a) drop nothing at the autotuned cap, (b) physically move fewer
     bytes than the dense butterfly whenever the hot cache absorbs >= 90%
-    of lookups, and (c) resolve ``auto`` to dense when the cache is off."""
+    of lookups, and (c) resolve ``auto`` to dense when the cache is off —
+    plus the streamed-vs-resident kernel parity gate
+    (:func:`stream_parity_smoke`)."""
     p = measure_fused(batch=batch, cache_rows=cache_rows, csv=False)
     r = p["ragged"]
     assert r["drops"] == 0, f"autotuned cap dropped rows: {r}"
@@ -301,6 +330,7 @@ def smoke(batch=64, cache_rows=16):
           f"ragged_bytes={r['exchanged_bytes']} "
           f"dense_bytes={r['dense_bytes']} "
           f"(x{r['bytes_vs_live']:.2f} of live)")
+    stream_parity_smoke()
 
 
 def main(argv=None):

@@ -75,10 +75,71 @@ def bench_dot_interaction(csv=True):
         print(f"kernels/dot_interaction_b1024,{t:.0f},xla_ref")
 
 
+def bench_embedding_bag(csv=True, batch=128):
+    """Embedding-bag sweep (rows × s × hot): jnp reference vs the
+    VMEM-resident kernel vs the DMA-streamed kernel (DESIGN.md §1).
+
+    Off-TPU the kernels run in interpret mode, so the wall times are a
+    same-code-path proxy, not TPU numbers — but the sweep pins the perf
+    trajectory: the streamed kernel must stay near the resident kernel at
+    VMEM-resident sizes (no regression where streaming isn't needed) and
+    must RUN at R = 256k, where the resident kernel's table block exceeds
+    the VMEM budget and fails loudly."""
+    from repro.kernels import ops, ref
+    from repro.kernels.embedding_bag import (RESIDENT_VMEM_BYTES,
+                                             auto_row_block, fits_resident)
+    entries = []
+    for rows, s, hot in [(1024, 64, 4), (16384, 64, 1), (16384, 16, 4),
+                         (16384, 64, 4), (262144, 64, 4)]:
+        ks = jax.random.split(jax.random.PRNGKey(rows + hot), 3)
+        tbl = jax.random.normal(ks[0], (1, rows, s))
+        idx = jax.random.randint(ks[1], (batch, 1, hot), 0, rows)
+        mask = (jax.random.uniform(ks[2], (batch, 1, hot)) < 0.8) \
+            .astype(jnp.float32)
+        resident_ok = fits_resident(rows, s, 4)
+        # the streamed kernel at ITS auto block height everywhere: 1-2
+        # blocks at VMEM-resident sizes (streaming's fixed cost where
+        # streaming isn't needed), a real multi-block stream past them
+        rb = auto_row_block(rows, s, 4)
+        fns = {"ref": lambda: ops.embedding_bag_stacked_op(
+                   tbl, idx, mask, impl="ref"),
+               "streamed": lambda: ops.embedding_bag_stacked_op(
+                   tbl, idx, mask, row_block=rb)}
+        if resident_ok:
+            fns["resident"] = lambda: ops.embedding_bag_stacked_op(
+                tbl, idx, mask, row_block=-1)
+        times = {}
+        for name, fn in fns.items():
+            fn()                                   # compile off the clock
+            times[name] = min(_timeit(fn, reps=3) for _ in range(3))
+        entry = {"rows": rows, "s": s, "hot": hot, "row_block": rb,
+                 "us": dict(times)}
+        if resident_ok:
+            entry["streamed_vs_resident"] = times["streamed"] / \
+                times["resident"]
+        else:
+            entry["resident"] = "exceeds_vmem"     # R·s·4 B > budget
+            try:
+                ops.embedding_bag_stacked_op(tbl, idx, mask, row_block=-1)
+                raise AssertionError("resident kernel accepted an "
+                                     "oversized table block")
+            except ValueError:
+                pass
+        entries.append(entry)
+        if csv:
+            tail = (f"streamed/resident={entry['streamed_vs_resident']:.2f}"
+                    if resident_ok else "resident=exceeds_vmem")
+            print(f"kernels/embag_r{rows}_s{s}_h{hot},"
+                  f"{times['streamed']:.0f},{tail}")
+    return {"resident_vmem_bytes": RESIDENT_VMEM_BYTES, "batch": batch,
+            "sweep": entries}
+
+
 def main():
     bench_wkv()
     bench_ssd()
     bench_dot_interaction()
+    return {"embedding_bag": bench_embedding_bag()}
 
 
 if __name__ == "__main__":

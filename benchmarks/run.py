@@ -19,7 +19,8 @@ def main() -> None:
     bench_sim.run()            # paper Figs 7 & 8 (+ straggler control)
     bench_alltoallv.main()     # paper Fig 6 analogue
     dlrm_payload = bench_dlrm.run()   # §VI-B + fused sparse hot path
-    bench_kernels.main()       # kernel-level chunked-vs-recurrent
+    # kernel-level chunked-vs-recurrent + embedding-bag resident/streamed
+    dlrm_payload["kernels"] = bench_kernels.main()
 
     # perf trajectory: BENCH_dlrm.json keyed by git SHA
     path = bench_dlrm.write_bench_json(dlrm_payload)

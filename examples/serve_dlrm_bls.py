@@ -7,11 +7,16 @@ bound, and cross-checks BLS-on vs BLS-off outputs bit-for-bit.
 Run:  PYTHONPATH=src python examples/serve_dlrm_bls.py [--batches 20]
       [--batch-size 256] [--bound 4] [--microbatches 8]
       [--wire-dtype float32|bfloat16|int8] [--cache-rows N]
-      [--exchange dense|ragged|auto] [--ragged-cap N]
+      [--exchange dense|ragged|auto] [--ragged-cap N] [--row-block N]
 
 With --cache-rows > 0 and --exchange auto, the engine starts on the dense
 butterfly and the cap autotuner flips it to the ragged miss-residual
 exchange (DESIGN.md §6) once the observed live counts justify a cap.
+
+--row-block picks the embedding-bag kernel regime (DESIGN.md §1): 0 (auto)
+keeps small table blocks VMEM-resident and switches production-size tables
+to the double-buffered DMA row stream; > 0 forces streaming at that block
+height (useful for A/B-ing the streamed path at small scale).
 """
 import argparse
 
@@ -46,6 +51,9 @@ def main():
                     help="pooled-exchange collective (DESIGN.md §6)")
     ap.add_argument("--ragged-cap", type=int, default=0,
                     help="rows per destination bucket (0 = autotuned)")
+    ap.add_argument("--row-block", type=int, default=0,
+                    help="embedding-bag row streaming (DESIGN.md §1): 0 = "
+                         "auto, > 0 = forced DMA-streamed block height")
     args = ap.parse_args()
 
     cfg = cb.get_arch("dlrm-kaggle").smoke()
@@ -65,11 +73,13 @@ def main():
 
     engines = {
         "sync(k=0)": DLRMEngine(params, cfg, batch_size=args.batch_size,
-                                bound=0, microbatches=1),
+                                bound=0, microbatches=1,
+                                row_block=args.row_block),
         f"bls(k={args.bound})": DLRMEngine(
             params, cfg, batch_size=args.batch_size, bound=args.bound,
             microbatches=args.microbatches, wire_dtype=args.wire_dtype,
-            exchange=args.exchange, ragged_cap=args.ragged_cap),
+            exchange=args.exchange, ragged_cap=args.ragged_cap,
+            row_block=args.row_block),
     }
     if args.cache_rows > 0:
         # calibrate the BLS engine's hot cache on the first preloaded batch

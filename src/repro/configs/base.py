@@ -111,6 +111,11 @@ class DLRMConfig:
     dtype: str = "float32"
     # --- fused sparse hot path (DESIGN.md) ---
     sparse_backend: str = "auto"    # ref | pallas | interpret | auto
+    # embedding-bag row streaming (DESIGN.md §1): 0 = auto (VMEM-resident
+    # table blocks when they fit, double-buffered DMA row streaming
+    # otherwise), > 0 = forced streaming at that block height, -1 = forced
+    # resident (fails loudly when the table block cannot fit VMEM)
+    row_block: int = 0
     wire_dtype: str = "float32"     # exchange codec: float32 | bfloat16 | int8
     cache_rows: int = 0             # hot-row cache rows per table (0 = off)
     # --- ragged miss-residual exchange (DESIGN.md §6) ---

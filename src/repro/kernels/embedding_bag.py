@@ -1,16 +1,48 @@
-"""Pallas TPU kernel: embedding-bag gather + masked pooling (DLRM apply_emb).
+"""Pallas TPU kernels: embedding-bag gather + masked pooling (DLRM apply_emb).
 
 The paper's flame graph (Fig. 5) shows apply_emb dominating DLRM inference;
-this is its TPU form.  Per grid step a whole table block sits in VMEM and a
-``fori_loop`` walks the (sample × hot) index list doing dynamic-slice row
-gathers and a masked accumulate — the HBM->VMEM->VREG path FBGEMM's TBE takes
-on GPU, re-expressed for the TPU memory hierarchy.
+this is its TPU form.  Two regimes, one knob (``row_block``, DESIGN.md §1):
 
-Scope note (recorded in DESIGN.md): the kernel assumes the table block fits
-VMEM (rows <= ~16k at S=64).  Production-size tables stream row *blocks* with
-double-buffered DMA; the smoke/ test sweep sizes exercise the VMEM-resident
-regime, and the distributed layer shards tables so the per-chip residency is
-what the mesh provides.
+* **VMEM-resident** — the whole ``(R, s)`` table block rides a BlockSpec into
+  VMEM and a ``fori_loop`` walks the (sample × hot) index list doing
+  dynamic-slice row gathers into an f32 accumulator: the HBM->VMEM->VREG
+  path FBGEMM's TBE takes on GPU, re-expressed for the TPU memory hierarchy.
+  Only sound while ``R · s · itemsize`` fits the VMEM budget (rows ≲ 16k at
+  s=64 f32).
+
+* **DMA-streamed** — production-size tables (the capacity-driven scale-out
+  regime of PAPERS.md) cannot be resident, so the table stays in HBM
+  (``memory_space=ANY``) and the kernel streams ``row_block``-row chunks
+  through TWO VMEM scratch slots with ``pltpu.make_async_copy``: the copy of
+  block *n+1* is in flight while block *n* is pooled.  Indices are
+  pre-bucketed per row block OUTSIDE the kernel (:func:`_stream_plan`): a
+  sort by row id makes each block's indices a contiguous segment of the
+  sorted list, and empty blocks are compacted away entirely — each grid step
+  DMAs only the blocks its indices actually touch, so a skewed access
+  pattern (the hot-cache regime) streams a small head instead of the whole
+  table.  Total gather work stays one dynamic-slice per (sample, hot) index,
+  exactly like the resident kernel; only the row source moves.
+
+Both regimes stage the weighted rows into an ``(tile, hot, s)`` f32 buffer
+slot-per-index and reduce over ``hot`` at the end, reproducing the reference
+``jnp.sum`` order — the streamed kernel is bit-identical to the jnp oracle
+in f32 no matter which block order the rows arrived in.
+
+Interpret-mode dispatch runs the identical streaming schedule as pure jax
+ops (:func:`_stream_rows_jnp`) by default: this jax version miscompiles
+interpret-mode ``pallas_call`` internals under COMPILED multi-device
+shard_map, so CPU validation inside the distributed forward uses the
+op-level emulation, while the Pallas DMA pipeline itself is validated
+standalone (``dma=True``) and lowers natively on TPU.
+
+Entry points: :func:`embedding_bag` (single table), :func:`embedding_bag_
+stacked` (the (T, R, s) model stack), :func:`embedding_bag_rows` (ragged
+packed rows — the pool half of the ragged miss-residual exchange, DESIGN.md
+§6).  All three pad partial batch tiles internally (no ``B % bt`` crash) and
+accept ``row_block``: ``0`` auto (resident when it fits, streamed
+otherwise), ``> 0`` forced streaming at that block height, ``-1`` forced
+resident (raises when the block cannot fit — the CPU-side stand-in for the
+TPU VMEM OOM).
 """
 from __future__ import annotations
 
@@ -19,6 +51,250 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# VMEM budgets (bytes).  RESIDENT bounds the one (R, s) table block the
+# resident kernel keeps live per grid step (16 MiB VMEM, minus index/out
+# tiles and headroom -> 4 MiB ~ 16k rows at s=64 f32, the DESIGN.md §1
+# number).  STREAM bounds the streamed kernel's two DMA slots TOGETHER, and
+# STAGE bounds the (tile, hot, s) f32 staging accumulator — the wrappers
+# shrink row_block / batch_tile to respect them.
+RESIDENT_VMEM_BYTES = 4 << 20
+STREAM_VMEM_BYTES = 4 << 20
+STAGE_VMEM_BYTES = 2 << 20
+
+
+def fits_resident(rows: int, s: int, itemsize: int) -> bool:
+    """Can one (rows, s) table block sit whole in the resident budget?"""
+    return rows * s * itemsize <= RESIDENT_VMEM_BYTES
+
+
+def auto_row_block(total_rows: int, s: int, itemsize: int) -> int:
+    """Streamed block height: half the stream budget per DMA slot, rounded
+    down to a multiple of 8 rows, clipped to the table."""
+    rb = max(8, (STREAM_VMEM_BYTES // (2 * s * itemsize)) // 8 * 8)
+    return min(total_rows, rb)
+
+
+def resolve_row_block(total_rows: int, s: int, itemsize: int,
+                      row_block: int) -> tuple[bool, int]:
+    """(streamed?, effective row_block) for a table of ``total_rows``.
+
+    row_block 0 = auto (resident iff the block fits RESIDENT_VMEM_BYTES),
+    > 0 = forced streaming at min(row_block, total_rows), -1 = forced
+    resident (raises when the block cannot fit VMEM)."""
+    if row_block == -1:
+        if not fits_resident(total_rows, s, itemsize):
+            raise ValueError(
+                f"resident embedding-bag kernel: table block "
+                f"{total_rows}x{s}x{itemsize}B = "
+                f"{total_rows * s * itemsize} B exceeds the "
+                f"{RESIDENT_VMEM_BYTES} B VMEM budget — use row_block=0 "
+                f"(auto) or > 0 to stream row blocks (DESIGN.md §1)")
+        return False, total_rows
+    if row_block > 0:
+        return True, min(row_block, total_rows)
+    if row_block != 0:
+        raise ValueError(f"row_block must be -1, 0 or positive, "
+                         f"got {row_block}")
+    if fits_resident(total_rows, s, itemsize):
+        return False, total_rows
+    return True, auto_row_block(total_rows, s, itemsize)
+
+
+# ---------------------------------------------------------------------------
+# the streaming core: pre-bucketed indices + double-buffered DMA
+# ---------------------------------------------------------------------------
+
+
+def _stream_plan(gid, w, rb: int, total_rows: int, nbmax: int):
+    """Pre-bucket a tile batch of indices per row block (the XLA half of the
+    streamed kernel).
+
+    gid (tiles, L) int32 flat row ids in [0, total_rows); w (tiles, L) f32
+    weights.  Sorting by row id makes every block's indices one contiguous
+    segment of the sorted list, and blocks nobody indexes vanish from the
+    compacted block list — the kernel DMAs only touched blocks and walks
+    each segment exactly once (total work stays L gathers per tile).
+
+    Returns per-tile arrays: sid (sorted ids), pos (original flat position
+    of each sorted entry — its slot in the staging accumulator), sw (sorted
+    weights), off (clamped HBM start row per compacted block), seg0/seg1
+    (segment bounds into the sorted list per compacted block, (tiles,
+    nbmax)), nblk ((tiles, 1) compacted block count), cum ((tiles, L)
+    compacted block index per sorted position — segments and membership
+    mask are two views of one bucketing).  The last block's DMA start is
+    clamped to ``total_rows - rb`` so a table whose row count is not a
+    multiple of ``rb`` streams an overlapping final block instead of
+    reading out of bounds."""
+    tiles, L = gid.shape
+    order = jnp.argsort(gid, axis=-1).astype(jnp.int32)
+    sid = jnp.take_along_axis(gid, order, axis=-1)
+    sw = jnp.take_along_axis(w.astype(jnp.float32), order, axis=-1)
+    blk = sid // rb                                        # (tiles, L)
+    first = jnp.concatenate(
+        [jnp.ones((tiles, 1), bool), blk[:, 1:] != blk[:, :-1]], axis=-1)
+    cum = jnp.cumsum(first.astype(jnp.int32), axis=-1) - 1  # compact index
+    nblk = cum[:, -1:] + 1                                  # (tiles, 1)
+    jr = jnp.arange(nbmax, dtype=jnp.int32)
+    seg0 = jax.vmap(
+        lambda c: jnp.searchsorted(c, jr, side="left"))(cum)
+    seg1 = jax.vmap(
+        lambda c: jnp.searchsorted(c, jr, side="right"))(cum)
+    bid = jnp.take_along_axis(blk, jnp.minimum(seg0, L - 1), axis=-1)
+    off = jnp.clip(bid * rb, 0, total_rows - rb)
+    valid = jr[None, :] < nblk
+    zero = jnp.zeros((), jnp.int32)
+    return (sid, order, sw,
+            jnp.where(valid, off, zero).astype(jnp.int32),
+            jnp.where(valid, seg0, zero).astype(jnp.int32),
+            jnp.where(valid, seg1, zero).astype(jnp.int32),
+            nblk.astype(jnp.int32), cum)
+
+
+def _stream_kernel(sid_ref, pos_ref, w_ref, off_ref, seg0_ref, seg1_ref,
+                   nb_ref, tbl_ref, out_ref, buf, sem, *, hot: int,
+                   rb: int):
+    """Double-buffered HBM->VMEM row-block streaming (DESIGN.md §1).
+
+    tbl_ref lives in ANY/HBM; buf is (2, rb, s) VMEM.  Block j+1's
+    ``make_async_copy`` is started before block j's rows are pooled, so
+    the copy engine runs a block ahead of the gather loop.  Each compacted
+    block pools exactly its own segment of the pre-sorted index list into
+    the (L, s) f32 staging accumulator (slot-per-index), which reduces
+    over ``hot`` at the end — the reference summation order, independent
+    of block arrival order."""
+    nt, s = out_ref.shape
+    l = sid_ref.shape[1]
+    n_slots = buf.shape[0]          # 2, or 1 when only one block can ship
+    nb = nb_ref[0, 0]
+
+    def dma(slot, j):
+        return pltpu.make_async_copy(
+            tbl_ref.at[pl.ds(off_ref[0, j], rb), :],
+            buf.at[slot], sem.at[slot])
+
+    @pl.when(nb > 0)
+    def _():
+        dma(0, 0).start()
+
+    def blk_body(j, acc):
+        slot = jax.lax.rem(j, n_slots)
+
+        @pl.when(j + 1 < nb)
+        def _():
+            dma(jax.lax.rem(j + 1, n_slots), j + 1).start()   # overlap
+        dma(slot, j).wait()
+
+        def pos_body(p, acc):
+            loc = sid_ref[0, p] - off_ref[0, j]
+            row = pl.load(buf, (pl.dslice(slot, 1), pl.dslice(loc, 1),
+                                slice(None)))[0, 0]
+            v = row.astype(jnp.float32) * w_ref[0, p]
+            return jax.lax.dynamic_update_slice(acc, v[None, :],
+                                                (pos_ref[0, p], 0))
+
+        return jax.lax.fori_loop(seg0_ref[0, j], seg1_ref[0, j], pos_body,
+                                 acc)
+
+    acc = jax.lax.fori_loop(0, nb, blk_body,
+                            jnp.zeros((l, s), jnp.float32))
+    out_ref[...] = acc.reshape(nt, hot, s).sum(axis=1).astype(out_ref.dtype)
+
+
+def _stream_rows_jnp(table_flat, gid, w, *, rb: int, out_dtype):
+    """Pure-jax emulation of the streamed kernel: the SAME plan (sorted
+    ids, compacted blocks, clamped last-block window) driving the same
+    block loop, with the per-block pooling vectorized (gather all
+    positions from the block, mask to the block's own rows).  Every staged
+    position receives exactly one contribution and the final reduction
+    runs over ``hot`` in the reference order, so the result is
+    bit-identical to both the DMA kernel and the jnp oracle in f32.
+
+    This is what ``interpret`` dispatch uses inside jitted multi-device
+    shard_map: this jax version miscompiles interpret-mode ``pallas_call``
+    machinery under compiled SPMD (plain ops are fine, and native Mosaic
+    lowering on TPU is unaffected), so CPU validation of the streamed
+    path runs the schedule as ordinary ops."""
+    total_rows, s = table_flat.shape
+    n, hot = gid.shape
+    L = n * hot
+    nbmax = min(-(-total_rows // rb), L)
+    sid, pos, sw, off, _, _, nblk, cum = _stream_plan(
+        gid.reshape(1, L), w.reshape(1, L), rb, total_rows, nbmax)
+
+    def blk_body(j, acc):
+        block = jax.lax.dynamic_slice(table_flat, (off[0, j], 0), (rb, s))
+        loc = jnp.clip(sid[0] - off[0, j], 0, rb - 1)
+        rows = jnp.take(block, loc, axis=0)                    # (L, s)
+        valid = (cum[0] == j).astype(jnp.float32) * sw[0]
+        return acc + rows.astype(jnp.float32) * valid[:, None]
+
+    acc = jax.lax.fori_loop(0, nblk[0, 0], blk_body,
+                            jnp.zeros((L, s), jnp.float32))
+    inv = jnp.zeros((L,), jnp.int32).at[pos[0]].set(
+        jnp.arange(L, dtype=jnp.int32))
+    staged = jnp.take(acc, inv, axis=0)                        # unsort
+    return staged.reshape(n, hot, s).sum(axis=1).astype(out_dtype)
+
+
+def _stream_rows(table_flat, gid, w, *, row_tile: int, rb: int,
+                 interpret: bool, out_dtype, dma=None):
+    """The streaming core: table_flat (total_rows, s) in HBM, gid (N, hot)
+    int32 pre-clipped flat row ids, w (N, hot) weights -> (N, s) pooled
+    bags.  N is padded to a whole number of row tiles internally (pad rows
+    carry weight 0 and pool to zero).
+
+    ``dma`` None = the async-copy Pallas kernel on native lowering, the
+    pure-jax schedule emulation (:func:`_stream_rows_jnp`) in interpret
+    mode; True forces the Pallas kernel (tests validate the DMA pipeline
+    itself on CPU this way — sound standalone, NOT inside compiled
+    multi-device shard_map); False forces the emulation."""
+    total_rows, s = table_flat.shape
+    n, hot = gid.shape
+    use_dma = dma if dma is not None else not interpret
+    if not use_dma:
+        return _stream_rows_jnp(table_flat, gid, w, rb=rb,
+                                out_dtype=out_dtype)
+    nt = _stage_tile(row_tile, n, hot, s)
+    tiles = -(-n // nt)
+    n_pad = tiles * nt
+    if n_pad != n:
+        gid = jnp.pad(gid, ((0, n_pad - n), (0, 0)))
+        w = jnp.pad(w, ((0, n_pad - n), (0, 0)))
+    L = nt * hot
+    nbmax = min(-(-total_rows // rb), L)
+    n_slots = min(2, nbmax)       # one whole-table block needs no partner
+    sid, pos, sw, off, seg0, seg1, nblk, _ = _stream_plan(
+        gid.reshape(tiles, L), w.reshape(tiles, L), rb, total_rows, nbmax)
+    row_spec = lambda i: (i, 0)                      # noqa: E731
+    out = pl.pallas_call(
+        functools.partial(_stream_kernel, hot=hot, rb=rb),
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((1, L), row_spec),          # sorted row ids
+            pl.BlockSpec((1, L), row_spec),          # original positions
+            pl.BlockSpec((1, L), row_spec),          # sorted weights
+            pl.BlockSpec((1, nbmax), row_spec),      # block DMA start rows
+            pl.BlockSpec((1, nbmax), row_spec),      # segment starts
+            pl.BlockSpec((1, nbmax), row_spec),      # segment ends
+            pl.BlockSpec((1, 1), row_spec),          # compacted block count
+            pl.BlockSpec(memory_space=pltpu.ANY),    # table stays in HBM
+        ],
+        out_specs=pl.BlockSpec((nt, s), row_spec),
+        out_shape=jax.ShapeDtypeStruct((n_pad, s), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((n_slots, rb, s), table_flat.dtype),  # double buffer
+            pltpu.SemaphoreType.DMA((n_slots,)),
+        ],
+        interpret=interpret,
+    )(sid, pos, sw, off, seg0, seg1, nblk, table_flat)
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# VMEM-resident kernels (small tables; the pre-streaming fast path)
+# ---------------------------------------------------------------------------
 
 
 def _kernel(idx_ref, mask_ref, table_ref, out_ref, *, hot: int):
@@ -30,32 +306,61 @@ def _kernel(idx_ref, mask_ref, table_ref, out_ref, *, hot: int):
         row_id = jnp.clip(idx_ref[b, h], 0, r - 1)
         row = pl.load(table_ref, (pl.dslice(row_id, 1), slice(None)))
         w = mask_ref[b, h].astype(jnp.float32)
-        return acc.at[b].add(row[0].astype(jnp.float32) * w)
+        return jax.lax.dynamic_update_slice(
+            acc, (row[0].astype(jnp.float32) * w)[None, None, :], (b, h, 0))
 
-    acc0 = jnp.zeros((bt, table_ref.shape[1]), jnp.float32)
+    acc0 = jnp.zeros((bt, hot, table_ref.shape[1]), jnp.float32)
     acc = jax.lax.fori_loop(0, bt * hot, body, acc0)
-    out_ref[...] = acc.astype(out_ref.dtype)
+    out_ref[...] = acc.sum(axis=1).astype(out_ref.dtype)
+
+
+def _pad_batch(b: int, bt: int, *arrays):
+    """Pad the leading (batch) axis up to a multiple of ``bt`` (masked tail:
+    pad rows pool to zero and are sliced off by the caller)."""
+    b_pad = -(-b // bt) * bt
+    if b_pad == b:
+        return (b_pad,) + arrays
+    return (b_pad,) + tuple(
+        jnp.pad(a, ((0, b_pad - b),) + ((0, 0),) * (a.ndim - 1))
+        for a in arrays)
+
+
+def _stage_tile(tile: int, b: int, hot: int, s: int) -> int:
+    """Clamp a batch/row tile so the (tile, hot, s) f32 staging accumulator
+    every kernel regime carries stays inside STAGE_VMEM_BYTES."""
+    return max(1, min(tile, b, STAGE_VMEM_BYTES // max(hot * s * 4, 1)))
 
 
 def embedding_bag(table, idx, mask, *, batch_tile: int = 64,
-                  interpret: bool = False):
-    """table:(R,S) idx:(B,hot) int32 mask:(B,hot) -> (B,S)."""
+                  row_block: int = 0, interpret: bool = False, dma=None):
+    """table:(R,S) idx:(B,hot) int32 mask:(B,hot) -> (B,S).
+
+    Partial batch tiles are padded internally (any B works); ``row_block``
+    selects the resident vs streamed regime (module docstring)."""
     r, s = table.shape
     b, hot = idx.shape
-    bt = min(batch_tile, b)
-    assert b % bt == 0, (b, bt)
-    return pl.pallas_call(
+    idx = idx.astype(jnp.int32)
+    streamed, rb = resolve_row_block(r, s, jnp.dtype(table.dtype).itemsize,
+                                     row_block)
+    if streamed:
+        return _stream_rows(table, jnp.clip(idx, 0, r - 1), mask,
+                            row_tile=batch_tile, rb=rb, interpret=interpret,
+                            out_dtype=table.dtype, dma=dma)
+    bt = _stage_tile(batch_tile, b, hot, s)
+    b_pad, idx, mask = _pad_batch(b, bt, idx, mask)
+    out = pl.pallas_call(
         functools.partial(_kernel, hot=hot),
-        grid=(b // bt,),
+        grid=(b_pad // bt,),
         in_specs=[
             pl.BlockSpec((bt, hot), lambda i: (i, 0)),
             pl.BlockSpec((bt, hot), lambda i: (i, 0)),
             pl.BlockSpec((r, s), lambda i: (0, 0)),  # table resident
         ],
         out_specs=pl.BlockSpec((bt, s), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, s), table.dtype),
+        out_shape=jax.ShapeDtypeStruct((b_pad, s), table.dtype),
         interpret=interpret,
     )(idx, mask, table)
+    return out[:b]
 
 
 # ---------------------------------------------------------------------------
@@ -74,38 +379,97 @@ def _stacked_kernel(idx_ref, mask_ref, table_ref, out_ref, *, hot: int):
         row = pl.load(table_ref,
                       (pl.dslice(0, 1), pl.dslice(row_id, 1), slice(None)))
         w = mask_ref[b, 0, h].astype(jnp.float32)
-        return acc.at[b].add(row[0, 0].astype(jnp.float32) * w)
+        return jax.lax.dynamic_update_slice(
+            acc, (row[0, 0].astype(jnp.float32) * w)[None, None, :],
+            (b, h, 0))
 
-    acc0 = jnp.zeros((bt, s), jnp.float32)
+    acc0 = jnp.zeros((bt, hot, s), jnp.float32)
     acc = jax.lax.fori_loop(0, bt * hot, body, acc0)
-    out_ref[...] = acc[:, None, :].astype(out_ref.dtype)
+    out_ref[...] = acc.sum(axis=1)[:, None, :].astype(out_ref.dtype)
 
 
 def embedding_bag_stacked(tables, idx, mask, *, batch_tile: int = 64,
-                          interpret: bool = False):
+                          row_block: int = 0, interpret: bool = False,
+                          dma=None):
     """tables:(T,R,s) idx:(B,T,hot) int32 mask:(B,T,hot) -> (B,T,s).
 
-    The model-facing form of ``apply_emb``: one ``pallas_call`` over a
-    (table, batch-tile) grid.  The table dimension is OUTERMOST so each
-    table block stays VMEM-resident across all its batch tiles, and the
-    (B,T,hot,s) broadcast-gather intermediate the pure-jnp reference
-    materializes never exists — rows stream HBM->VMEM->VREG straight into
-    the f32 accumulator.
-    """
+    The model-facing form of ``apply_emb``.  Resident regime: one
+    ``pallas_call`` over a (table, batch-tile) grid, table dimension
+    OUTERMOST so each table block stays VMEM-resident across all its batch
+    tiles, and the (B,T,hot,s) broadcast-gather intermediate the pure-jnp
+    reference materializes never exists.  Streamed regime (``row_block``):
+    the stack is addressed as one flat (T·R, s) row space (global row id =
+    t·R + idx — a free reshape) and pooled through the double-buffered DMA
+    core, so tables of production size run at streaming bandwidth instead
+    of failing the residency assumption.  Partial batch tiles are padded
+    internally (any B works)."""
     t, r, s = tables.shape
     b, t2, hot = idx.shape
     assert t == t2, (t, t2)
-    bt = min(batch_tile, b)
-    assert b % bt == 0, (b, bt)
-    return pl.pallas_call(
+    idx = idx.astype(jnp.int32)
+    item = jnp.dtype(tables.dtype).itemsize
+    # residency is decided per TABLE block (what the resident kernel keeps
+    # live), but the streamed regime addresses the flat (T·R, s) space, so
+    # an explicit block height clips against t*r, not r
+    streamed, _ = resolve_row_block(r, s, item, row_block)
+    if streamed:
+        rb = min(row_block, t * r) if row_block > 0 \
+            else auto_row_block(t * r, s, item)
+        gid = (jnp.arange(t, dtype=jnp.int32)[None, :, None] * r +
+               jnp.clip(idx, 0, r - 1))
+        out = _stream_rows(tables.reshape(t * r, s),
+                           gid.reshape(b * t, hot),
+                           mask.reshape(b * t, hot),
+                           row_tile=batch_tile, rb=rb,
+                           interpret=interpret, out_dtype=tables.dtype,
+                           dma=dma)
+        return out.reshape(b, t, s)
+    bt = _stage_tile(batch_tile, b, hot, s)
+    b_pad, idx, mask = _pad_batch(b, bt, idx, mask)
+    out = pl.pallas_call(
         functools.partial(_stacked_kernel, hot=hot),
-        grid=(t, b // bt),
+        grid=(t, b_pad // bt),
         in_specs=[
             pl.BlockSpec((bt, 1, hot), lambda ti, bi: (bi, ti, 0)),
             pl.BlockSpec((bt, 1, hot), lambda ti, bi: (bi, ti, 0)),
             pl.BlockSpec((1, r, s), lambda ti, bi: (ti, 0, 0)),  # resident
         ],
         out_specs=pl.BlockSpec((bt, 1, s), lambda ti, bi: (bi, ti, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, t, s), tables.dtype),
+        out_shape=jax.ShapeDtypeStruct((b_pad, t, s), tables.dtype),
         interpret=interpret,
     )(idx, mask, tables)
+    return out[:b]
+
+
+# ---------------------------------------------------------------------------
+# ragged-row form: the pool half of the ragged miss-residual exchange
+# ---------------------------------------------------------------------------
+
+
+def embedding_bag_rows(tables, tid, idx, mask, *, row_tile: int = 64,
+                       row_block: int = 0, interpret: bool = False,
+                       dma=None):
+    """tables:(T,R,s) tid:(N,) int32 idx/mask:(N,hot) -> (N,s) masked sums.
+
+    The packed-ragged analogue of :func:`embedding_bag_stacked`: pools ONLY
+    the rows that ride the ragged exchange (DESIGN.md §6), each against its
+    own table.  Runs on the same streaming core — global row id = tid·R +
+    idx flattens the stack into one row space, so a small packed set
+    (≤ P·cap rows) DMAs only the row blocks it actually touches even when
+    the stack is production-size.  ``row_block`` 0/auto streams the whole
+    stack as one block when it fits the VMEM budget (the resident
+    equivalent — a single scratch slot, no partner buffer) and falls back
+    to streamed blocks otherwise."""
+    t, r, s = tables.shape
+    n, hot = idx.shape
+    total = t * r
+    # one resolver with the other entry points: -1 raises past the VMEM
+    # budget, 0 streams the whole stack as a single block when it fits
+    # (the resident equivalent), anything else is validated identically
+    _, rb = resolve_row_block(total, s, jnp.dtype(tables.dtype).itemsize,
+                              row_block)
+    gid = (tid.astype(jnp.int32)[:, None] * r +
+           jnp.clip(idx.astype(jnp.int32), 0, r - 1))
+    return _stream_rows(tables.reshape(total, s), gid, mask,
+                        row_tile=row_tile, rb=rb, interpret=interpret,
+                        out_dtype=tables.dtype, dma=dma)

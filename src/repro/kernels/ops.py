@@ -8,13 +8,13 @@ the oracle (used for A/B in benchmarks).
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 
 from repro.kernels import ref as _ref
 from repro.kernels.dot_interaction import dot_interaction as _dot_pallas
 from repro.kernels.embedding_bag import embedding_bag as _bag_pallas
+from repro.kernels.embedding_bag import embedding_bag_rows as _rows_pallas
 from repro.kernels.embedding_bag import embedding_bag_stacked as _bags_pallas
 from repro.kernels.flash_attention import flash_attention_pallas as _fa_pallas
 from repro.kernels.rwkv6_wkv import wkv_chunked_pallas as _wkv_pallas
@@ -31,24 +31,40 @@ def dot_interaction_op(z, *, impl: str = "auto", batch_tile: int = 128):
     return _dot_pallas(z, batch_tile=batch_tile, interpret=not _on_tpu())
 
 
-@functools.partial(jax.jit, static_argnames=("impl", "batch_tile"))
+@functools.partial(jax.jit, static_argnames=("impl", "batch_tile",
+                                             "row_block"))
 def embedding_bag_op(table, idx, mask, *, impl: str = "auto",
-                     batch_tile: int = 64):
+                     batch_tile: int = 64, row_block: int = 0):
     if impl == "ref":
         return _ref.embedding_bag_ref(table, idx, mask)
     return _bag_pallas(table, idx, mask, batch_tile=batch_tile,
-                       interpret=not _on_tpu())
+                       row_block=row_block, interpret=not _on_tpu())
 
 
-@functools.partial(jax.jit, static_argnames=("impl", "batch_tile"))
+@functools.partial(jax.jit, static_argnames=("impl", "batch_tile",
+                                             "row_block"))
 def embedding_bag_stacked_op(tables, idx, mask, *, impl: str = "auto",
-                             batch_tile: int = 64):
-    """(T,R,s) stacked embedding bags -> (B,T,s); the model hot path."""
+                             batch_tile: int = 64, row_block: int = 0):
+    """(T,R,s) stacked embedding bags -> (B,T,s); the model hot path.
+    ``row_block`` 0 = auto (VMEM-resident when the table block fits, the
+    double-buffered DMA stream otherwise); the kernel pads partial batch
+    tiles internally, so any B works."""
     if impl == "ref":
         return _ref.embedding_bag_stacked_ref(tables, idx, mask)
-    bt = math.gcd(idx.shape[0], batch_tile)  # largest tile dividing B
-    return _bags_pallas(tables, idx, mask, batch_tile=bt,
-                        interpret=not _on_tpu())
+    return _bags_pallas(tables, idx, mask, batch_tile=batch_tile,
+                        row_block=row_block, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "row_tile",
+                                             "row_block"))
+def embedding_bag_rows_op(tables, tid, idx, mask, *, impl: str = "auto",
+                          row_tile: int = 64, row_block: int = 0):
+    """(N, hot) packed ragged rows pooled against their own tables ->
+    (N, s); the pool half of the ragged miss-residual exchange."""
+    if impl == "ref":
+        return _ref.embedding_bag_rows_ref(tables, tid, idx, mask)
+    return _rows_pallas(tables, tid, idx, mask, row_tile=row_tile,
+                        row_block=row_block, interpret=not _on_tpu())
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "chunk"))

@@ -33,6 +33,15 @@ def embedding_bag_stacked_ref(tables, idx, mask):
     return jnp.sum(gathered * mask[..., None].astype(gathered.dtype), axis=2)
 
 
+def embedding_bag_rows_ref(tables, tid, idx, mask):
+    """tables:(T,R,S) tid:(N,) idx/mask:(N,hot) -> (N,S) masked sums, each
+    row pooled against its own table — the packed-ragged form (the pool
+    half of the ragged miss-residual exchange).  OOB ids clip exactly like
+    the stacked reference so every backend agrees."""
+    rows = tables[tid[:, None], jnp.clip(idx, 0, tables.shape[1] - 1)]
+    return jnp.sum(rows * mask[..., None].astype(rows.dtype), axis=1)
+
+
 def rwkv6_wkv_ref(r, k, v, logw, u, state):
     """Exact WKV recurrence.  r,k,logw:(B,S,H,K) v:(B,S,H,V) u:(H,K)
     state:(B,H,K,V) -> (out (B,S,H,V), final state)."""

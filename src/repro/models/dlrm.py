@@ -105,21 +105,25 @@ def resolve_sparse_backend(backend: str) -> str:
     return backend
 
 
-def apply_emb(tables, idx, mask, backend: str = "ref"):
+def apply_emb(tables, idx, mask, backend: str = "ref",
+              row_block: int = 0):
     """Embedding bags.  tables:(T,R,s) idx:(B,T,hot) mask:(B,T,hot)
     -> (B,T,s).  The paper's dominant stage (its Fig. 5 flame graph).
 
     backend 'ref' is the pure-jnp contraction (materializes the
     (B,T,hot,s) broadcast gather); 'pallas'/'interpret' dispatch to the
     stacked-table kernel in kernels/embedding_bag.py, which streams rows
-    through VMEM and never builds that intermediate."""
+    through VMEM and never builds that intermediate.  ``row_block``
+    (cfg.row_block) picks the kernel regime: 0 auto — VMEM-resident table
+    blocks when they fit, double-buffered DMA row streaming otherwise
+    (DESIGN.md §1)."""
     backend = resolve_sparse_backend(backend)
     if backend != "ref":
         # ops owns tile choice + interpret-off-TPU; 'pallas' degrades to
         # interpret mode away from TPU rather than failing at lowering
         from repro.kernels.ops import embedding_bag_stacked_op
         return embedding_bag_stacked_op(tables, idx.astype(jnp.int32),
-                                        mask)
+                                        mask, row_block=row_block)
     # shared with the kernel oracle so every backend clips OOB ids the
     # same way
     from repro.kernels.ref import embedding_bag_stacked_ref
@@ -145,14 +149,27 @@ jax.tree_util.register_pytree_node(
     lambda meta, leaves: ExchangeDiag(*leaves, *meta))
 
 
-def apply_emb_rows(tables, tid, idx, mask):
+def apply_emb_rows(tables, tid, idx, mask, backend: str = "ref",
+                   row_block: int = 0):
     """Row-wise embedding bags: tables (T,R,s), tid (N,), idx/mask (N,hot)
     -> (N,s) masked sums.  The packed-ragged analogue of ``apply_emb``: it
     pools ONLY the rows that ride the exchange, so the lookup work shrinks
     from O(B·T·hot) to O(P·cap·hot) gathers along with the wire bytes.
-    OOB ids clip exactly like kernels/ref.py so the paths agree."""
-    rows = tables[tid[:, None], jnp.clip(idx, 0, tables.shape[1] - 1)]
-    return jnp.sum(rows * mask[..., None].astype(rows.dtype), axis=1)
+    OOB ids clip exactly like kernels/ref.py so the paths agree.
+
+    Dispatches through the SAME :func:`resolve_sparse_backend` as
+    ``apply_emb`` — 'auto'/'interpret'/'pallas' mean the same thing on the
+    dense and ragged paths; the kernel form shares the streaming core of
+    ``embedding_bag_stacked`` (DESIGN.md §1), so packed rows of a
+    production-size stack DMA only the row blocks they touch."""
+    backend = resolve_sparse_backend(backend)
+    if backend != "ref":
+        from repro.kernels.ops import embedding_bag_rows_op
+        return embedding_bag_rows_op(tables, tid.astype(jnp.int32),
+                                     idx.astype(jnp.int32), mask,
+                                     row_block=row_block)
+    from repro.kernels.ref import embedding_bag_rows_ref
+    return embedding_bag_rows_ref(tables, tid, idx, mask)
 
 
 def resolve_exchange(exchange: str, *, use_cache: bool, cap: int,
@@ -177,7 +194,8 @@ def resolve_exchange(exchange: str, *, use_cache: bool, cap: int,
 
 
 def ragged_exchange_pack(tables, idx, miss_mask, *, n_dest: int, cap: int,
-                         wire: str = "float32"):
+                         wire: str = "float32", backend: str = "ref",
+                         row_block: int = 0):
     """Stage-a half of the ragged miss-residual exchange for ONE member.
 
     idx/miss_mask (B_mb, t_loc, hot) cover this member's LOCAL tables for
@@ -206,7 +224,8 @@ def ragged_exchange_pack(tables, idx, miss_mask, *, n_dest: int, cap: int,
     tid = packed["ids"] % t_loc
     pooled = apply_emb_rows(tables, tid.reshape(-1),
                             packed["idx"].reshape(n_dest * cap, hot),
-                            packed["mask"].reshape(n_dest * cap, hot))
+                            packed["mask"].reshape(n_dest * cap, hot),
+                            backend=backend, row_block=row_block)
     payload = a2a_mod.encode_wire(
         pooled.reshape(n_dest, cap, -1), wire)
     payload.update(ids=packed["ids"], counts=counts)
@@ -246,7 +265,7 @@ def forward_local(params, cfg: DLRMConfig, dense, idx, mask):
     t = cfg.n_tables
     z0 = apply_mlp(params["bot"], dense)                       # (B, s)
     emb = apply_emb(params["tables"][:t], idx[:, :t], mask[:, :t],
-                    backend=cfg.sparse_backend)
+                    backend=cfg.sparse_backend, row_block=cfg.row_block)
     z = jnp.concatenate([z0[:, None, :], emb], axis=1)         # (B, T+1, s)
     inter = dot_interaction(z)
     top_in = jnp.concatenate([z0, inter.astype(z0.dtype)], axis=-1)
@@ -269,6 +288,7 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                         cache=None, wire_dtype: Optional[str] = None,
                         exchange: Optional[str] = None,
                         ragged_cap: Optional[int] = None,
+                        row_block: Optional[int] = None,
                         return_diag: bool = False):
     """dense:(B, n_dense) idx/mask:(B, T_pad, hot); batch B sharded over
     (pod, data) [dense replicated across ``model`` within a data row, as the
@@ -295,7 +315,11 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
     per-destination buckets and ships them through a counts-aware
     alltoallv (DESIGN.md §6) — the exchanged bytes AND the BLS ring slots
     shrink from O(B·T) to O(P·cap); 'auto' resolves per
-    :func:`resolve_exchange`.  ``return_diag=True`` additionally returns
+    :func:`resolve_exchange`.  ``row_block`` (default cfg.row_block)
+    selects the embedding-bag kernel regime on BOTH pooling paths
+    (DESIGN.md §1: 0 auto — VMEM-resident table blocks when they fit,
+    double-buffered DMA row streaming otherwise).  ``return_diag=True``
+    additionally returns
     {live_max, drops, exchange, cap, dense_rows} — the signal the serving
     cap autotuner consumes.
     """
@@ -317,6 +341,7 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
     mb = microbatches
     wire = wire_dtype if wire_dtype is not None else cfg.wire_dtype
     backend = cfg.sparse_backend
+    rblk = row_block if row_block is not None else cfg.row_block
     use_cache = cache is not None and cache.cache_rows > 0
     if use_cache and cache.slot_of.shape[0] != idx.shape[1]:
         raise ValueError(
@@ -378,9 +403,10 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                 # pack the live rows first, pool only what ships
                 payload, _ = ragged_exchange_pack(
                     tables, ix_loc, miss_mk, n_dest=n_shards, cap=cap,
-                    wire=wire)
+                    wire=wire, backend=backend, row_block=rblk)
             else:
-                pooled = apply_emb(tables, ix_loc, miss_mk, backend)
+                pooled = apply_emb(tables, ix_loc, miss_mk, backend,
+                                   row_block=rblk)
                 payload = a2a_mod.encode_wire(pooled, wire)
             # member m's dense rows of microbatch j (matches a2a delivery)
             dm = jax.lax.dynamic_slice_in_dim(d, m * bs, bs, axis=0)

@@ -57,7 +57,8 @@ class DLRMEngine:
                  bound: int = 0, microbatches: int = 1,
                  wire_dtype: Optional[str] = None, cache=None,
                  exchange: Optional[str] = None,
-                 ragged_cap: Optional[int] = None, retune_every: int = 8):
+                 ragged_cap: Optional[int] = None, retune_every: int = 8,
+                 row_block: Optional[int] = None):
         self.params, self.cfg = params, cfg
         self.batch_size = batch_size
         self.bound, self.microbatches = bound, microbatches
@@ -67,6 +68,10 @@ class DLRMEngine:
         self.ragged_cap = ragged_cap if ragged_cap is not None \
             else cfg.ragged_cap
         self.retune_every = retune_every
+        # embedding-bag kernel regime (DESIGN.md §1): 0 auto — resident
+        # table blocks when they fit VMEM, DMA row streaming otherwise
+        self.row_block = row_block if row_block is not None \
+            else cfg.row_block
         self.monitor = StragglerMonitor()
         self.cap_tuner = CapAutotuner()
         self.stats = ServeStats()
@@ -87,6 +92,7 @@ class DLRMEngine:
     def _make_step(self, bound, microbatches):
         cfg, wire = self.cfg, self.wire_dtype
         ex, cap = self.exchange, self.ragged_cap
+        rblk = self.row_block
         # diagnostics cost a full-batch miss re-probe + two collectives:
         # trace them only when something consumes them — drop monitoring
         # (explicit ragged) or the autotuner (auto WITH a cache; cacheless
@@ -107,7 +113,8 @@ class DLRMEngine:
                 return _finish(dlrm_mod.forward_distributed(
                     params, cfg, dense, idx, mask, bound=bound,
                     microbatches=microbatches, wire_dtype=wire,
-                    exchange=ex, ragged_cap=cap, return_diag=diag_on))
+                    exchange=ex, ragged_cap=cap, row_block=rblk,
+                    return_diag=diag_on))
             return step
 
         from repro.serving.hot_cache import HotCache
@@ -123,7 +130,8 @@ class DLRMEngine:
             return _finish(dlrm_mod.forward_distributed(
                 params, cfg, dense, idx, mask, bound=bound,
                 microbatches=microbatches, cache=c, wire_dtype=wire,
-                exchange=ex, ragged_cap=cap, return_diag=diag_on))
+                exchange=ex, ragged_cap=cap, row_block=rblk,
+                return_diag=diag_on))
 
         return step
 

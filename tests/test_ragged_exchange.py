@@ -65,7 +65,8 @@ class TestResolveExchange:
 
 
 class TestRaggedMachinery:
-    def test_apply_emb_rows_matches_stacked_ref(self):
+    @pytest.mark.parametrize("backend", ["ref", "interpret"])
+    def test_apply_emb_rows_matches_stacked_ref(self, backend):
         ks = jax.random.split(jax.random.PRNGKey(0), 3)
         tables = jax.random.normal(ks[0], (5, 40, 8))
         idx = jax.random.randint(ks[1], (32, 5, 4), 0, 40)
@@ -74,11 +75,39 @@ class TestRaggedMachinery:
         want = embedding_bag_stacked_ref(tables, idx, mask)
         tid = jnp.tile(jnp.arange(5, dtype=jnp.int32), 32)
         got = D.apply_emb_rows(tables, tid, idx.reshape(-1, 4),
-                               mask.reshape(-1, 4))
+                               mask.reshape(-1, 4), backend=backend)
         assert jnp.allclose(got.reshape(32, 5, 8), want, atol=1e-5)
 
+    def test_apply_emb_rows_shares_the_backend_resolver(self):
+        # one resolver for both paths: 'auto'/'interpret'/'pallas' mean the
+        # same thing on apply_emb and apply_emb_rows, and bogus names fail
+        # identically
+        tables = jnp.zeros((2, 10, 4))
+        tid = jnp.zeros((3,), jnp.int32)
+        idx = jnp.zeros((3, 2), jnp.int32)
+        mask = jnp.ones((3, 2), jnp.float32)
+        out = D.apply_emb_rows(tables, tid, idx, mask, backend="auto")
+        assert out.shape == (3, 4)
+        with pytest.raises(ValueError):
+            D.apply_emb_rows(tables, tid, idx, mask, backend="cuda")
+
+    def test_apply_emb_rows_streamed_matches_ref(self):
+        # rows >> row_block: the packed-row pooling runs the DMA-streamed
+        # core (DESIGN.md §1) and must stay bit-exact with the jnp gather
+        ks = jax.random.split(jax.random.PRNGKey(4), 4)
+        tables = jax.random.normal(ks[0], (3, 5000, 8))
+        tid = jax.random.randint(ks[1], (24,), 0, 3)
+        idx = jax.random.randint(ks[2], (24, 4), 0, 5000)
+        mask = (jax.random.uniform(ks[3], (24, 4)) < 0.5) \
+            .astype(jnp.float32)
+        want = D.apply_emb_rows(tables, tid, idx, mask, backend="ref")
+        got = D.apply_emb_rows(tables, tid, idx, mask, backend="interpret",
+                               row_block=512)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+
     def _emulated_exchange(self, wire, p=4, bs=8, t_loc=3, hot=4, s=16,
-                           r=50, cap=None, mask_density=0.3):
+                           r=50, cap=None, mask_density=0.3,
+                           backend="ref", row_block=0):
         """Run the per-member pack/unpack halves for every member of an
         emulated P-member ring and stitch the exchange by hand."""
         t_pad = p * t_loc
@@ -94,7 +123,7 @@ class TestRaggedMachinery:
             sl = slice(m * t_loc, (m + 1) * t_loc)
             pay, dr = D.ragged_exchange_pack(
                 tables[sl], idx[:, sl], mask[:, sl], n_dest=p, cap=cap,
-                wire=wire)
+                wire=wire, backend=backend, row_block=row_block)
             payloads.append(pay)
             drops.append(int(dr))
         want = embedding_bag_stacked_ref(tables, idx, mask)
@@ -108,11 +137,17 @@ class TestRaggedMachinery:
                 recv, t_loc=t_loc, bs=bs, out_dtype=jnp.float32))
         return jnp.concatenate(outs), want, sum(drops)
 
+    @pytest.mark.parametrize("backend", ["ref", "interpret"])
     @pytest.mark.parametrize("wire,tol", [("float32", 1e-5),
                                           ("bfloat16", 3e-2),
                                           ("int8", 6e-2)])
-    def test_emulated_roundtrip_matches_dense_pool(self, wire, tol):
-        got, want, drops = self._emulated_exchange(wire)
+    def test_emulated_roundtrip_matches_dense_pool(self, wire, tol,
+                                                   backend):
+        # the kernel backend streams row blocks (row_block=16 << r) and
+        # must agree with the jnp pack-then-pool path codec-for-codec
+        got, want, drops = self._emulated_exchange(
+            wire, backend=backend,
+            row_block=16 if backend != "ref" else 0)
         assert drops == 0
         assert float(jnp.max(jnp.abs(got - want))) < tol * float(
             jnp.max(jnp.abs(want)) + 1)
@@ -263,6 +298,26 @@ with partition.axis_rules(mesh):
                 if rows == 100:
                     assert err < 1e-4, (bound, wire, rows, err)
                     assert int(diag.live_max) == 0, (bound, wire)
+    # the same bound x codec grid with the KERNEL pooling the packed rows:
+    # sparse_backend='interpret' runs apply_emb_rows through the
+    # DMA-streamed embedding-bag core (row_block << R) inside shard_map
+    cfg_i = cfg.replace(sparse_backend="interpret", row_block=32)
+    cache = caches[40]
+    for bound, mb in [(0, 1), (2, 4)]:
+        for wire, tol in TOL.items():
+            out, diag = jax.jit(lambda p, d, i, m, bound=bound, mb=mb,
+                                w=wire:
+                                D.forward_distributed(p, cfg_i, d, i, m,
+                                                      bound=bound,
+                                                      microbatches=mb,
+                                                      cache=cache,
+                                                      wire_dtype=w,
+                                                      exchange="ragged",
+                                                      return_diag=True)
+                                )(params, dense, idx, mask)
+            assert int(diag.drops) == 0, (bound, wire)
+            err = float(jnp.max(jnp.abs(out - ref)))
+            assert err < tol, ("interpret", bound, wire, err)
 print("OK")
 """)
 
