@@ -108,10 +108,15 @@ def bench_embedding_bag(csv=True, batch=128):
         if resident_ok:
             fns["resident"] = lambda: ops.embedding_bag_stacked_op(
                 tbl, idx, mask, row_block=-1)
-        times = {}
-        for name, fn in fns.items():
+        for fn in fns.values():
             fn()                                   # compile off the clock
-            times[name] = min(_timeit(fn, reps=3) for _ in range(3))
+        # interleaved min-of-trials (the bench_dlrm._best_paired idea): a
+        # load spike taxes every candidate equally instead of biasing
+        # whichever ran under it
+        times = {name: float("inf") for name in fns}
+        for _ in range(4):
+            for name, fn in fns.items():
+                times[name] = min(times[name], _timeit(fn, reps=3))
         entry = {"rows": rows, "s": s, "hot": hot, "row_block": rb,
                  "us": dict(times)}
         if resident_ok:
