@@ -3,9 +3,11 @@
 # to BENCH_dlrm.json keyed by the current git SHA; `make bench-smoke` is the
 # tiny-scale perf gate (.github/workflows/ci.yml): it fails if the ragged
 # exchange physically moves more bytes than the dense butterfly at a >= 0.9
-# cache hit rate, if the autotuned cap drops rows, or if the DMA-streamed
+# cache hit rate, if the autotuned cap drops rows, if the DMA-streamed
 # embedding-bag kernel diverges from the VMEM-resident kernel beyond f32
-# tolerance (DESIGN.md §1).
+# tolerance, or if the vector pool mismatches the scalar pool in f32 /
+# regresses past 1.2x its stage time — streamed and resident both
+# (DESIGN.md §1).
 
 PY ?= python
 

@@ -63,6 +63,17 @@ def _best_paired(fns: dict, *args, reps=5, trials=6):
     return best
 
 
+def _stage_throughput(batch: int, t: int, hot: int, s: int,
+                      seconds: float) -> dict:
+    """Scale-independent stage throughput: request rows/s plus the pooled
+    embedding GB/s the stage moved (B·T·hot weighted (row, s) f32 tiles) —
+    so cross-SHA BENCH_dlrm.json comparisons survive shape changes."""
+    if not seconds:
+        return {"rows_per_s": 0.0, "pooled_gb_per_s": 0.0}
+    return {"rows_per_s": batch / seconds,
+            "pooled_gb_per_s": batch * t * hot * s * 4 / seconds / 1e9}
+
+
 def measure_stages(batch=512):
     cfg = cb.get_arch("dlrm-kaggle").smoke()
     params = D.init_dlrm(jax.random.PRNGKey(0), cfg, n_shards=1)
@@ -88,7 +99,12 @@ def measure_stages(batch=512):
     t_top = _timeit(top, params, z0, e)
     full = jax.jit(lambda p, d, i, m: D.forward_local(p, cfg, d, i, m))
     t_full = _timeit(full, params, dense, idx, mask)
-    return {"t_emb": t_emb, "t_bot": t_bot, "t_top": t_top, "t_full": t_full}
+    t, hot, s = cfg.n_tables, cfg.max_hot, cfg.embed_dim
+    return {"t_emb": t_emb, "t_bot": t_bot, "t_top": t_top,
+            "t_full": t_full,
+            "throughput": {
+                k: _stage_throughput(batch, t, hot, s, v)
+                for k, v in [("t_emb", t_emb), ("t_full", t_full)]}}
 
 
 def measure_fused(batch=256, cache_rows=16, csv=True):
@@ -180,6 +196,11 @@ def measure_fused(batch=256, cache_rows=16, csv=True):
         "batch": batch, "cache_rows": cache_rows,
         "hit_rate": float(hit_rate),
         "stage_us": {k: v * 1e6 for k, v in stage_times.items()},
+        # rows/s + pooled GB/s next to every stage ms, so cross-SHA entry
+        # comparisons are scale-independent
+        "stage_throughput": {
+            k: _stage_throughput(batch, t, cfg.max_hot, s, v)
+            for k, v in stage_times.items()},
         "wire": {k: {"dense_bytes": w.dense_bytes,
                      "live_bytes": w.live_bytes,
                      "reduction_vs_ref": w.reduction_vs_ref}
@@ -206,7 +227,10 @@ def measure_fused(batch=256, cache_rows=16, csv=True):
     }
     if csv:
         for k, v in stage_times.items():
-            print(f"dlrm/fused_stage_{k},{v*1e6:.1f},lookup+exchange")
+            th = payload["stage_throughput"][k]
+            print(f"dlrm/fused_stage_{k},{v*1e6:.1f},lookup+exchange "
+                  f"rows/s={th['rows_per_s']:.0f} "
+                  f"gb/s={th['pooled_gb_per_s']:.3f}")
         print(f"dlrm/fused_hit_rate,{hit_rate:.3f},"
               f"powerlaw_hetero cache_rows={cache_rows}")
         for k, w in wires.items():
@@ -247,9 +271,14 @@ def write_bench_json(payload: dict, path: str = "BENCH_dlrm.json") -> str:
 
 def run(csv=True):
     st = measure_stages()
+    st_thru = st.pop("throughput")
     if csv:
         for k, v in st.items():
-            print(f"dlrm/stage_{k},{v*1e6:.1f},measured")
+            tail = "measured"
+            if k in st_thru:
+                tail += (f" rows/s={st_thru[k]['rows_per_s']:.0f}"
+                         f" gb/s={st_thru[k]['pooled_gb_per_s']:.3f}")
+            print(f"dlrm/stage_{k},{v*1e6:.1f},{tail}")
     # drive the paper's experiments with the measured stage times
     rng_wire = st["t_emb"] * 0.5  # exchange ~ half the lookup time
     rows = []
@@ -277,6 +306,7 @@ def run(csv=True):
     fused = measure_fused(csv=csv)
     return {
         "stages_us": {k: v * 1e6 for k, v in st.items()},
+        "stages_throughput": st_thru,
         "sim": [{"setting": s_, "bound": k, "mean_latency_us": lat * 1e6,
                  "throughput": thr} for s_, k, lat, thr in rows],
         "ring_bytes_per_k": per_k,
@@ -311,13 +341,63 @@ def stream_parity_smoke():
           f"(rows={r} row_block={rb} batch={b})")
 
 
+def vector_pool_smoke():
+    """CI gate (``make bench-smoke``): the vector pool (DESIGN.md §1) must
+    match the scalar pool bit-for-bit in f32 — resident kernel AND the
+    streamed DMA pipeline — and must not regress past 1.2x the scalar
+    stage time at the smoke size (it should be well under 1x: the scalar
+    walk is one row per iteration)."""
+    from repro.kernels import ops, ref
+    from repro.kernels import embedding_bag as eb
+    # large enough that the pooling loop (not fixed call overhead)
+    # dominates the stage time, so the ratio gate measures the loops
+    t, r, s, b, hot, rb = 2, 1000, 32, 129, 8, 192
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    tbl = jax.random.normal(ks[0], (t, r, s))
+    idx = jax.random.randint(ks[1], (b, t, hot), 0, r)
+    idx = idx.at[0, 0, 0].set(0).at[1, 0, 1].set(rb - 1) \
+             .at[2, 1, 0].set(rb).at[3, 1, 2].set(r - 1)
+    mask = (jax.random.uniform(ks[2], (b, t, hot)) < 0.7) \
+        .astype(jnp.float32)
+    want = ref.embedding_bag_stacked_ref(tbl, idx, mask)
+    fns = {
+        "resident_scalar": jax.jit(lambda i, m: ops.embedding_bag_stacked_op(
+            tbl, i, m, row_block=-1, pool_mode="scalar")),
+        "resident_vector": jax.jit(lambda i, m: ops.embedding_bag_stacked_op(
+            tbl, i, m, row_block=-1, pool_mode="vector")),
+        # the real DMA pipeline in both pool modes (interpret machinery
+        # executes the async-copy schedule standalone)
+        "streamed_scalar": lambda i, m: eb.embedding_bag_stacked(
+            tbl, i, m, row_block=rb, pool_mode="scalar", interpret=True,
+            dma=True),
+        "streamed_vector": lambda i, m: eb.embedding_bag_stacked(
+            tbl, i, m, row_block=rb, pool_mode="vector", interpret=True,
+            dma=True),
+    }
+    for name, fn in fns.items():
+        got = np.asarray(fn(idx, mask))
+        assert np.array_equal(got, np.asarray(want)), \
+            f"{name} pool diverged from the f32 jnp reference"
+    times = _best_paired(fns, idx, mask, reps=2, trials=4)
+    for form in ("resident", "streamed"):
+        ratio = times[f"{form}_vector"] / times[f"{form}_scalar"]
+        assert ratio <= 1.2, (
+            f"vector pool regressed past 1.2x scalar on the {form} "
+            f"kernel: {ratio:.2f}x "
+            f"({times[f'{form}_vector']*1e6:.0f}us vs "
+            f"{times[f'{form}_scalar']*1e6:.0f}us)")
+        print(f"bench-smoke OK: {form} vector pool bit-exact, "
+              f"{ratio:.2f}x scalar stage time")
+
+
 def smoke(batch=64, cache_rows=16):
     """CI gate (``make bench-smoke``): at tiny scale the ragged exchange
     must (a) drop nothing at the autotuned cap, (b) physically move fewer
     bytes than the dense butterfly whenever the hot cache absorbs >= 90%
     of lookups, and (c) resolve ``auto`` to dense when the cache is off —
     plus the streamed-vs-resident kernel parity gate
-    (:func:`stream_parity_smoke`)."""
+    (:func:`stream_parity_smoke`) and the scalar-vs-vector pool parity +
+    regression gate (:func:`vector_pool_smoke`)."""
     p = measure_fused(batch=batch, cache_rows=cache_rows, csv=False)
     r = p["ragged"]
     assert r["drops"] == 0, f"autotuned cap dropped rows: {r}"
@@ -331,6 +411,7 @@ def smoke(batch=64, cache_rows=16):
           f"dense_bytes={r['dense_bytes']} "
           f"(x{r['bytes_vs_live']:.2f} of live)")
     stream_parity_smoke()
+    vector_pool_smoke()
 
 
 def main(argv=None):

@@ -75,16 +75,28 @@ def bench_dot_interaction(csv=True):
         print(f"kernels/dot_interaction_b1024,{t:.0f},xla_ref")
 
 
+def _pool_throughput(batch: int, hot: int, s: int, us: float) -> dict:
+    """Scale-independent pooled-lookup throughput: gathered rows/s and the
+    GB/s those weighted (row, s) f32 tiles amount to — so cross-SHA entry
+    comparisons survive batch/shape changes."""
+    gathered = batch * hot
+    sec = us / 1e6
+    return {"rows_per_s": gathered / sec if sec else 0.0,
+            "pooled_gb_per_s": gathered * s * 4 / sec / 1e9 if sec else 0.0}
+
+
 def bench_embedding_bag(csv=True, batch=128):
     """Embedding-bag sweep (rows × s × hot): jnp reference vs the
-    VMEM-resident kernel vs the DMA-streamed kernel (DESIGN.md §1).
+    VMEM-resident kernel (scalar AND vector pool, DESIGN.md §1) vs the
+    DMA-streamed kernel.
 
     Off-TPU the kernels run in interpret mode, so the wall times are a
     same-code-path proxy, not TPU numbers — but the sweep pins the perf
-    trajectory: the streamed kernel must stay near the resident kernel at
-    VMEM-resident sizes (no regression where streaming isn't needed) and
-    must RUN at R = 256k, where the resident kernel's table block exceeds
-    the VMEM budget and fails loudly."""
+    trajectory: the vector pool must stay at or under the scalar walk at
+    resident sizes, the streamed kernel must stay near the resident kernel
+    at VMEM-resident sizes (no regression where streaming isn't needed)
+    and must RUN at R = 256k, where the resident kernel's table block
+    exceeds the VMEM budget and fails loudly."""
     from repro.kernels import ops, ref
     from repro.kernels.embedding_bag import (RESIDENT_VMEM_BYTES,
                                              auto_row_block, fits_resident)
@@ -106,8 +118,13 @@ def bench_embedding_bag(csv=True, batch=128):
                "streamed": lambda: ops.embedding_bag_stacked_op(
                    tbl, idx, mask, row_block=rb)}
         if resident_ok:
+            # resident kernel in BOTH pool modes: the scalar-vs-vector
+            # A/B the pool_mode knob exists for ('resident' = vector,
+            # what 'auto' dispatches)
             fns["resident"] = lambda: ops.embedding_bag_stacked_op(
-                tbl, idx, mask, row_block=-1)
+                tbl, idx, mask, row_block=-1, pool_mode="vector")
+            fns["resident_scalar"] = lambda: ops.embedding_bag_stacked_op(
+                tbl, idx, mask, row_block=-1, pool_mode="scalar")
         for fn in fns.values():
             fn()                                   # compile off the clock
         # interleaved min-of-trials (the bench_dlrm._best_paired idea): a
@@ -118,10 +135,14 @@ def bench_embedding_bag(csv=True, batch=128):
             for name, fn in fns.items():
                 times[name] = min(times[name], _timeit(fn, reps=3))
         entry = {"rows": rows, "s": s, "hot": hot, "row_block": rb,
-                 "us": dict(times)}
+                 "us": dict(times),
+                 "throughput": {name: _pool_throughput(batch, hot, s, t)
+                                for name, t in times.items()}}
         if resident_ok:
             entry["streamed_vs_resident"] = times["streamed"] / \
                 times["resident"]
+            entry["vector_vs_scalar"] = times["resident"] / \
+                times["resident_scalar"]
         else:
             entry["resident"] = "exceeds_vmem"     # R·s·4 B > budget
             try:
@@ -133,18 +154,56 @@ def bench_embedding_bag(csv=True, batch=128):
         entries.append(entry)
         if csv:
             tail = (f"streamed/resident={entry['streamed_vs_resident']:.2f}"
+                    f" vector/scalar={entry['vector_vs_scalar']:.2f}"
                     if resident_ok else "resident=exceeds_vmem")
+            gbs = entry["throughput"]["streamed"]["pooled_gb_per_s"]
             print(f"kernels/embag_r{rows}_s{s}_h{hot},"
-                  f"{times['streamed']:.0f},{tail}")
+                  f"{times['streamed']:.0f},{tail} gb_per_s={gbs:.3f}")
     return {"resident_vmem_bytes": RESIDENT_VMEM_BYTES, "batch": batch,
             "sweep": entries}
+
+
+def bench_stream_plan(csv=True):
+    """Stream-plan construction: the argsort builder vs the counting-sort
+    builder (DESIGN.md §1) at L >= 8k indices — the plan sizes where the
+    build cost matters.  The counting sort's O(L · nb) histogram +
+    hierarchical rank must undercut the O(L log L) comparison sort."""
+    from repro.kernels import embedding_bag as eb
+    total = 262144
+    entries = []
+    for L, rb in [(8192, 8192), (8192, 4096), (32768, 8192)]:
+        nbmax = min(-(-total // rb), L)
+        gid = jax.random.randint(jax.random.PRNGKey(L + rb), (1, L), 0,
+                                 total, dtype=jnp.int32)
+        fns = {m: jax.jit(lambda g, m=m, rb=rb, nbmax=nbmax:
+                          eb._stream_plan(g, rb, total, nbmax, m))
+               for m in ("sort", "count")}
+        for fn in fns.values():
+            fn(gid)                                # compile off the clock
+        times = {m: float("inf") for m in fns}
+        for _ in range(6):                         # interleaved min-of-trials
+            for m, fn in fns.items():
+                times[m] = min(times[m], _timeit(fn, gid, reps=3))
+        entry = {"L": L, "row_block": rb,
+                 "n_buckets": -(-total // rb),
+                 "sort_us": times["sort"], "count_us": times["count"],
+                 "count_vs_sort": times["count"] / times["sort"],
+                 "auto_resolves": eb._resolve_plan_method(
+                     "auto", L, -(-total // rb))}
+        entries.append(entry)
+        if csv:
+            print(f"kernels/stream_plan_L{L}_nb{entry['n_buckets']},"
+                  f"{times['count']:.0f},"
+                  f"count/sort={entry['count_vs_sort']:.2f}")
+    return {"total_rows": total, "sweep": entries}
 
 
 def main():
     bench_wkv()
     bench_ssd()
     bench_dot_interaction()
-    return {"embedding_bag": bench_embedding_bag()}
+    return {"embedding_bag": bench_embedding_bag(),
+            "stream_plan": bench_stream_plan()}
 
 
 if __name__ == "__main__":

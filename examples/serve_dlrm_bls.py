@@ -8,6 +8,7 @@ Run:  PYTHONPATH=src python examples/serve_dlrm_bls.py [--batches 20]
       [--batch-size 256] [--bound 4] [--microbatches 8]
       [--wire-dtype float32|bfloat16|int8] [--cache-rows N]
       [--exchange dense|ragged|auto] [--ragged-cap N] [--row-block N]
+      [--pool-mode auto|vector|scalar]
 
 With --cache-rows > 0 and --exchange auto, the engine starts on the dense
 butterfly and the cap autotuner flips it to the ragged miss-residual
@@ -17,6 +18,11 @@ exchange (DESIGN.md §6) once the observed live counts justify a cap.
 keeps small table blocks VMEM-resident and switches production-size tables
 to the double-buffered DMA row stream; > 0 forces streaming at that block
 height (useful for A/B-ing the streamed path at small scale).
+
+--pool-mode picks the kernel's pooling loop (DESIGN.md §1): 'vector' (what
+'auto' resolves to) gathers whole lane-width row tiles per step, 'scalar'
+keeps the one-row-per-iteration walk — both bit-identical in f32, so the
+flag exists purely for A/B timing.
 """
 import argparse
 
@@ -54,6 +60,11 @@ def main():
     ap.add_argument("--row-block", type=int, default=0,
                     help="embedding-bag row streaming (DESIGN.md §1): 0 = "
                          "auto, > 0 = forced DMA-streamed block height")
+    ap.add_argument("--pool-mode", default="auto",
+                    choices=("auto", "vector", "scalar"),
+                    help="embedding-bag pooling loop (DESIGN.md §1): "
+                         "chunked vector gather ('auto'/'vector') vs the "
+                         "scalar one-row walk — bit-identical, for A/B")
     args = ap.parse_args()
 
     cfg = cb.get_arch("dlrm-kaggle").smoke()
@@ -74,12 +85,13 @@ def main():
     engines = {
         "sync(k=0)": DLRMEngine(params, cfg, batch_size=args.batch_size,
                                 bound=0, microbatches=1,
-                                row_block=args.row_block),
+                                row_block=args.row_block,
+                                pool_mode=args.pool_mode),
         f"bls(k={args.bound})": DLRMEngine(
             params, cfg, batch_size=args.batch_size, bound=args.bound,
             microbatches=args.microbatches, wire_dtype=args.wire_dtype,
             exchange=args.exchange, ragged_cap=args.ragged_cap,
-            row_block=args.row_block),
+            row_block=args.row_block, pool_mode=args.pool_mode),
     }
     if args.cache_rows > 0:
         # calibrate the BLS engine's hot cache on the first preloaded batch

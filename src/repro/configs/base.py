@@ -116,6 +116,12 @@ class DLRMConfig:
     # otherwise), > 0 = forced streaming at that block height, -1 = forced
     # resident (fails loudly when the table block cannot fit VMEM)
     row_block: int = 0
+    # embedding-bag pooling loop (DESIGN.md §1): 'vector' pools indices in
+    # lane-width chunks (whole (chunk, s) row tiles gathered and reduced
+    # under a validity mask), 'scalar' keeps the one-row-per-iteration
+    # dynamic-slice walk for A/B; 'auto' = vector.  Both are bit-identical
+    # to the jnp oracle in f32.
+    pool_mode: str = "auto"
     wire_dtype: str = "float32"     # exchange codec: float32 | bfloat16 | int8
     cache_rows: int = 0             # hot-row cache rows per table (0 = off)
     # --- ragged miss-residual exchange (DESIGN.md §6) ---

@@ -35,19 +35,27 @@ def _kernel(z_ref, cols_ref, out_ref, *, f: int):
 
 
 def dot_interaction(z, *, batch_tile: int = 128, interpret: bool = False):
-    """z: (B, F, S) -> (B, F(F-1)/2)."""
+    """z: (B, F, S) -> (B, F(F-1)/2).
+
+    Partial batch tiles are padded internally (mirroring the embedding-bag
+    kernels, DESIGN.md §1), so serving batch sizes that aren't multiples
+    of ``batch_tile`` run instead of crashing the dense stage; pad rows
+    are zeros, interact to zeros, and are sliced off."""
     b, f, s = z.shape
     n_out = f * (f - 1) // 2
     bt = min(batch_tile, b)
-    assert b % bt == 0, (b, bt)
+    b_pad = -(-b // bt) * bt
+    if b_pad != b:
+        z = jnp.pad(z, ((0, b_pad - b), (0, 0), (0, 0)))
     ii, jj = np.tril_indices(f, k=-1)
     cols = jnp.asarray(ii * f + jj, jnp.int32)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_kernel, f=f),
-        grid=(b // bt,),
+        grid=(b_pad // bt,),
         in_specs=[pl.BlockSpec((bt, f, s), lambda i: (i, 0, 0)),
                   pl.BlockSpec((n_out,), lambda i: (0,))],
         out_specs=pl.BlockSpec((bt, n_out), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, n_out), z.dtype),
+        out_shape=jax.ShapeDtypeStruct((b_pad, n_out), z.dtype),
         interpret=interpret,
     )(z, cols)
+    return out[:b]

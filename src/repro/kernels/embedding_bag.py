@@ -4,29 +4,51 @@ The paper's flame graph (Fig. 5) shows apply_emb dominating DLRM inference;
 this is its TPU form.  Two regimes, one knob (``row_block``, DESIGN.md §1):
 
 * **VMEM-resident** — the whole ``(R, s)`` table block rides a BlockSpec into
-  VMEM and a ``fori_loop`` walks the (sample × hot) index list doing
-  dynamic-slice row gathers into an f32 accumulator: the HBM->VMEM->VREG
-  path FBGEMM's TBE takes on GPU, re-expressed for the TPU memory hierarchy.
-  Only sound while ``R · s · itemsize`` fits the VMEM budget (rows ≲ 16k at
-  s=64 f32).
+  VMEM and the (sample × hot) index list is pooled straight out of it: the
+  HBM->VMEM->VREG path FBGEMM's TBE takes on GPU, re-expressed for the TPU
+  memory hierarchy.  Only sound while ``R · s · itemsize`` fits the VMEM
+  budget (rows ≲ 16k at s=64 f32).
 
 * **DMA-streamed** — production-size tables (the capacity-driven scale-out
   regime of PAPERS.md) cannot be resident, so the table stays in HBM
   (``memory_space=ANY``) and the kernel streams ``row_block``-row chunks
   through TWO VMEM scratch slots with ``pltpu.make_async_copy``: the copy of
   block *n+1* is in flight while block *n* is pooled.  Indices are
-  pre-bucketed per row block OUTSIDE the kernel (:func:`_stream_plan`): a
-  sort by row id makes each block's indices a contiguous segment of the
-  sorted list, and empty blocks are compacted away entirely — each grid step
-  DMAs only the blocks its indices actually touch, so a skewed access
+  pre-bucketed per row block OUTSIDE the kernel (:func:`_stream_plan`):
+  grouping by block id makes each block's indices a contiguous segment of
+  the planned list, and empty blocks are compacted away entirely — each grid
+  step DMAs only the blocks its indices actually touch, so a skewed access
   pattern (the hot-cache regime) streams a small head instead of the whole
-  table.  Total gather work stays one dynamic-slice per (sample, hot) index,
-  exactly like the resident kernel; only the row source moves.
+  table.
 
-Both regimes stage the weighted rows into an ``(tile, hot, s)`` f32 buffer
-slot-per-index and reduce over ``hot`` at the end, reproducing the reference
-``jnp.sum`` order — the streamed kernel is bit-identical to the jnp oracle
-in f32 no matter which block order the rows arrived in.
+Each regime pools in one of two **pool modes** (``pool_mode``):
+
+* ``scalar`` — a ``fori_loop`` walks every (sample, hot) index doing a
+  one-row dynamic-slice gather (the PR 3 form, kept for A/B and fallback);
+* ``vector`` (the default under ``auto``) — indices are processed in
+  ``POOL_CHUNK``-wide chunks that gather whole ``(chunk, s)`` row tiles in
+  one vector gather and weight them under a validity mask (chunk tail +
+  empty-bag mask folded into the weights), so the staging accumulator fills
+  at vector width instead of one row per iteration.
+
+Both modes and both regimes stage the weighted rows into a ``(tile, hot,
+s)``-equivalent f32 buffer slot-per-index and reduce over ``hot`` at the
+end, reproducing the reference ``jnp.sum`` order — every kernel form is
+bit-identical to the jnp oracle in f32 no matter which block order the rows
+arrived in or how wide the gather ran.
+
+The **stream plan** itself (:func:`_stream_plan`) has two builders behind
+one ``plan_method`` knob: ``sort`` (the PR 3 ``O(L log L)`` argsort by row
+id) and ``count`` (a counting sort keyed by block id: one histogram over
+``nb`` buckets whose prefix sum IS the segment-offset table — ``O(L · nb)``
+vectorized work, no comparison sort); ``auto`` picks ``count`` while
+``L · nb`` stays under :data:`PLAN_COUNT_WORK` and falls back to ``sort``
+past it.  Plans are plain pytrees (:class:`StreamPlan`), so they can be
+built OFF the critical path — :func:`build_stream_plan` /
+:func:`stacked_stream_plan` construct one outside the kernel call and every
+entry point accepts ``plan=`` to consume it, which is how
+``forward_distributed`` / ``DLRMEngine`` overlap plan construction with
+stage_a compute (DESIGN.md §1).
 
 Interpret-mode dispatch runs the identical streaming schedule as pure jax
 ops (:func:`_stream_rows_jnp`) by default: this jax version miscompiles
@@ -47,6 +69,7 @@ TPU VMEM OOM).
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -62,6 +85,30 @@ from jax.experimental.pallas import tpu as pltpu
 RESIDENT_VMEM_BYTES = 4 << 20
 STREAM_VMEM_BYTES = 4 << 20
 STAGE_VMEM_BYTES = 2 << 20
+
+# Vector-pool gather width: one (POOL_CHUNK, s) row tile is gathered and
+# weighted per step — the lane width of the pooling inner loop.  Chunk
+# tails past a segment/tile end ride along with weight 0 (validity folded
+# into the weights), so nothing is gathered twice and staging slots still
+# receive exactly one contribution each (bit-exactness is preserved).
+POOL_CHUNK = 128
+
+
+def _stream_pool_chunk(L: int, nbmax: int) -> int:
+    """Chunk width for the STREAMED vector pool: the streamed kernel walks
+    per-block segments averaging L / nbmax positions, so a full POOL_CHUNK
+    would gather mostly masked-off tail lanes when blocks are many.  Clamp
+    the chunk to the expected segment length (rounded up to 8 sublanes) —
+    skew only makes hot-block segments longer, which the fori over chunks
+    absorbs."""
+    seg = -(-L // max(nbmax, 1))
+    return max(8, min(POOL_CHUNK, -(-seg // 8) * 8))
+
+# Counting-sort plan budget: the count method materializes a
+# (tiles, L, nb) one-hot running sum to rank indices within their block
+# bucket; past this many TOTAL cells the argsort plan (O(tiles · L) peak
+# memory) is the better trade, so ``auto`` falls back.
+PLAN_COUNT_WORK = 4 << 20
 
 
 def fits_resident(rows: int, s: int, itemsize: int) -> bool:
@@ -102,35 +149,95 @@ def resolve_row_block(total_rows: int, s: int, itemsize: int,
     return True, auto_row_block(total_rows, s, itemsize)
 
 
+def resolve_pool_mode(pool_mode: str) -> str:
+    """'auto' -> the vectorized chunked-gather pool (the fast path);
+    'scalar' keeps the one-row-per-iteration walk for A/B."""
+    if pool_mode == "auto":
+        return "vector"
+    if pool_mode not in ("scalar", "vector"):
+        raise ValueError(f"pool_mode must be 'scalar', 'vector' or 'auto', "
+                         f"got {pool_mode!r}")
+    return pool_mode
+
+
 # ---------------------------------------------------------------------------
-# the streaming core: pre-bucketed indices + double-buffered DMA
+# the stream plan: per-block index bucketing, built on or off the hot path
 # ---------------------------------------------------------------------------
 
 
-def _stream_plan(gid, w, rb: int, total_rows: int, nbmax: int):
-    """Pre-bucket a tile batch of indices per row block (the XLA half of the
-    streamed kernel).
+class StreamPlan(NamedTuple):
+    """Pre-bucketed indices for the streamed kernel — a pytree whose array
+    leaves ride through jit/shard_map while ``rb``/``total_rows`` travel
+    as STATIC metadata (see the pytree registration below), so it can be
+    built ahead of time (jitted separately, shipped through shard_map) and
+    handed to any entry point via ``plan=`` — and a plan built for a
+    different block height or table cannot be consumed silently.
 
-    gid (tiles, L) int32 flat row ids in [0, total_rows); w (tiles, L) f32
-    weights.  Sorting by row id makes every block's indices one contiguous
-    segment of the sorted list, and blocks nobody indexes vanish from the
-    compacted block list — the kernel DMAs only touched blocks and walks
-    each segment exactly once (total work stays L gathers per tile).
+    All array leaves are int32.  sid/pos/inv/cum are (tiles, L);
+    off/seg0/seg1 are (tiles, nbmax); nblk is (tiles, 1).  ``pos[p]`` is
+    the original flat position of planned entry ``p`` (its staging slot),
+    ``inv`` is the inverse permutation (``inv[pos[p]] == p``), ``cum`` the
+    compacted block index owning each planned position.  Weights are NOT
+    part of the plan — they are permuted with ``pos`` at consumption time,
+    so a plan built from indices alone (before cache miss-masks exist)
+    stays valid."""
+    sid: jax.Array     # planned (block-grouped) flat row ids
+    pos: jax.Array     # original position of each planned entry
+    inv: jax.Array     # planned position of each original entry
+    off: jax.Array     # clamped HBM start row per compacted block
+    seg0: jax.Array    # segment start per compacted block
+    seg1: jax.Array    # segment end per compacted block
+    nblk: jax.Array    # compacted (touched) block count
+    cum: jax.Array     # compacted block index per planned position
+    rb: int = 0           # static: block height the plan bucketed for
+    total_rows: int = 0   # static: flat row-space height
 
-    Returns per-tile arrays: sid (sorted ids), pos (original flat position
-    of each sorted entry — its slot in the staging accumulator), sw (sorted
-    weights), off (clamped HBM start row per compacted block), seg0/seg1
-    (segment bounds into the sorted list per compacted block, (tiles,
-    nbmax)), nblk ((tiles, 1) compacted block count), cum ((tiles, L)
-    compacted block index per sorted position — segments and membership
-    mask are two views of one bucketing).  The last block's DMA start is
-    clamped to ``total_rows - rb`` so a table whose row count is not a
-    multiple of ``rb`` streams an overlapping final block instead of
-    reading out of bounds."""
+
+N_PLAN_LEAVES = 8          # array fields above; rb/total_rows are aux
+
+# rb/total_rows are STATIC aux data, not traced leaves: tree transforms
+# (vmap over microbatches, shard_map redistribution, scan slicing) map the
+# eight index arrays and carry the geometry alongside, and _check_plan can
+# raise at trace time when a plan meets a call with a different
+# row_block/table — shapes alone cannot always tell them apart (nbmax
+# clamps to L for any sufficiently tall table).
+jax.tree_util.register_pytree_node(
+    StreamPlan,
+    lambda p: (tuple(p[:N_PLAN_LEAVES]), (p.rb, p.total_rows)),
+    lambda aux, leaves: StreamPlan(*leaves, *aux))
+
+
+def _resolve_plan_method(plan_method: str, L: int, nb_total: int,
+                         tiles: int = 1) -> str:
+    if plan_method == "auto":
+        return "count" if tiles * L * nb_total <= PLAN_COUNT_WORK \
+            else "sort"
+    if plan_method not in ("sort", "count"):
+        raise ValueError(f"plan_method must be 'sort', 'count' or 'auto', "
+                         f"got {plan_method!r}")
+    return plan_method
+
+
+def _inverse_perm(perm):
+    """Invert a batch of permutations with ONE flat 1-D scatter (XLA's 2-D
+    indexed scatter path is measurably slower on the hosts that build
+    plans)."""
+    tiles, L = perm.shape
+    flat = (perm + jnp.arange(tiles, dtype=jnp.int32)[:, None] * L) \
+        .reshape(-1)
+    arL = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32),
+                           (tiles, L)).reshape(-1)
+    return jnp.zeros((tiles * L,), jnp.int32).at[flat].set(arL) \
+        .reshape(tiles, L)
+
+
+def _plan_sort(gid, rb: int, total_rows: int, nbmax: int) -> StreamPlan:
+    """The comparison-sort plan builder (PR 3): argsort by full row id,
+    segments recovered by searchsorted over the block-change prefix sum."""
     tiles, L = gid.shape
-    order = jnp.argsort(gid, axis=-1).astype(jnp.int32)
-    sid = jnp.take_along_axis(gid, order, axis=-1)
-    sw = jnp.take_along_axis(w.astype(jnp.float32), order, axis=-1)
+    pos = jnp.argsort(gid, axis=-1).astype(jnp.int32)
+    sid = jnp.take_along_axis(gid, pos, axis=-1)
+    inv = _inverse_perm(pos)
     blk = sid // rb                                        # (tiles, L)
     first = jnp.concatenate(
         [jnp.ones((tiles, 1), bool), blk[:, 1:] != blk[:, :-1]], axis=-1)
@@ -145,22 +252,175 @@ def _stream_plan(gid, w, rb: int, total_rows: int, nbmax: int):
     off = jnp.clip(bid * rb, 0, total_rows - rb)
     valid = jr[None, :] < nblk
     zero = jnp.zeros((), jnp.int32)
-    return (sid, order, sw,
-            jnp.where(valid, off, zero).astype(jnp.int32),
-            jnp.where(valid, seg0, zero).astype(jnp.int32),
-            jnp.where(valid, seg1, zero).astype(jnp.int32),
-            nblk.astype(jnp.int32), cum)
+    return StreamPlan(
+        sid, pos, inv,
+        jnp.where(valid, off, zero).astype(jnp.int32),
+        jnp.where(valid, seg0, zero).astype(jnp.int32),
+        jnp.where(valid, seg1, zero).astype(jnp.int32),
+        nblk.astype(jnp.int32), cum, rb=rb, total_rows=total_rows)
+
+
+# chunk length of the hierarchical running count below: shortening the
+# scan axis from L to RANK_CHUNK turns XLA's sequential cumsum into wide
+# vector steps (the scan runs over the chunk axis with (L/chunk)·nb-wide
+# element ops), which is where the counting plan's build-time win over the
+# argsort plan comes from.
+RANK_CHUNK = 128
+
+
+def _bucket_rank(key, nb_total: int):
+    """(stable within-bucket rank, bucket histogram) for ``key`` (tiles, L)
+    int32 in [0, nb_total).  The running count is hierarchical: per-chunk
+    one-hot cumsum (short scan axis, wide ops) + an exclusive chunk-offset
+    cumsum over the chunk counts."""
+    tiles, L = key.shape
+    c = min(RANK_CHUNK, L)
+    Lp = -(-L // c) * c
+    kp = jnp.pad(key, ((0, 0), (0, Lp - L)), constant_values=nb_total)
+    oh = (kp.reshape(tiles, Lp // c, c)[..., None] ==
+          jnp.arange(nb_total, dtype=jnp.int32)).astype(jnp.int32)
+    within = jnp.cumsum(oh, axis=2)               # (tiles, C, c, nb)
+    per = within[:, :, -1, :]                     # (tiles, C, nb)
+    coff = jnp.cumsum(per, axis=1) - per          # exclusive chunk offsets
+    run = (within + coff[:, :, None, :]).reshape(tiles, Lp, nb_total)
+    rank = jnp.take_along_axis(run[:, :L], key[..., None],
+                               axis=2)[..., 0] - 1
+    hist = coff[:, -1] + per[:, -1]               # (tiles, nb)
+    return rank, hist
+
+
+def _plan_count(gid, rb: int, total_rows: int, nbmax: int) -> StreamPlan:
+    """The counting-sort plan builder: bucket by block id (``nb_total``
+    buckets).  One histogram's prefix sum IS the segment-offset table, and
+    the stable within-bucket rank comes from the hierarchical one-hot
+    running count — no comparison sort anywhere.  Within a block the
+    planned order is original (stable) order rather than row-id order;
+    nothing downstream depends on within-block order (each staging slot is
+    keyed by original position), so the pooled output is bit-identical to
+    the sort plan's."""
+    tiles, L = gid.shape
+    nb_total = -(-total_rows // rb)
+    key = gid // rb                                       # (tiles, L)
+    rank, hist = _bucket_rank(key, nb_total)
+    excl = jnp.cumsum(hist, axis=-1) - hist               # segment offsets
+    dest = jnp.take_along_axis(excl, key, axis=-1) + rank  # (tiles, L)
+    pos = _inverse_perm(dest)
+    sid = jnp.take_along_axis(gid, pos, axis=-1)
+    inv = dest.astype(jnp.int32)
+    ne = hist > 0
+    nblk = ne.sum(axis=-1, keepdims=True).astype(jnp.int32)
+    cidx = jnp.cumsum(ne.astype(jnp.int32), axis=-1) - 1
+    # compacted-slot scatter, flat 1-D with a global OOB sentinel so empty
+    # buckets drop instead of colliding with the next tile's slot 0
+    ti = jnp.arange(tiles, dtype=jnp.int32)[:, None]
+    cflat = jnp.where(ne, ti * nbmax + cidx, tiles * nbmax).reshape(-1)
+    zB = jnp.zeros((tiles * nbmax,), jnp.int32)
+    arB = jnp.broadcast_to(jnp.arange(nb_total, dtype=jnp.int32),
+                           (tiles, nb_total)).reshape(-1)
+    bid = zB.at[cflat].set(arB, mode="drop").reshape(tiles, nbmax)
+    seg0 = zB.at[cflat].set(excl.astype(jnp.int32).reshape(-1),
+                            mode="drop").reshape(tiles, nbmax)
+    seg1 = zB.at[cflat].set((excl + hist).astype(jnp.int32).reshape(-1),
+                            mode="drop").reshape(tiles, nbmax)
+    jr = jnp.arange(nbmax, dtype=jnp.int32)
+    valid = jr[None, :] < nblk
+    zero = jnp.zeros((), jnp.int32)
+    off = jnp.where(valid, jnp.clip(bid * rb, 0, total_rows - rb), zero)
+    cum = jnp.take_along_axis(cidx, sid // rb, axis=-1)
+    return StreamPlan(sid, pos, inv, off.astype(jnp.int32),
+                      jnp.where(valid, seg0, zero),
+                      jnp.where(valid, seg1, zero),
+                      nblk, cum.astype(jnp.int32),
+                      rb=rb, total_rows=total_rows)
+
+
+def _stream_plan(gid, rb: int, total_rows: int, nbmax: int,
+                 plan_method: str = "auto") -> StreamPlan:
+    """Pre-bucket a tile batch of indices per row block (the XLA half of
+    the streamed kernel).
+
+    gid (tiles, L) int32 flat row ids in [0, total_rows).  Grouping by
+    block id makes every block's indices one contiguous segment of the
+    planned list, and blocks nobody indexes vanish from the compacted block
+    list — the kernel DMAs only touched blocks and walks each segment
+    exactly once (total work stays L gathers per tile).  The last block's
+    DMA start is clamped to ``total_rows - rb`` so a table whose row count
+    is not a multiple of ``rb`` streams an overlapping final block instead
+    of reading out of bounds.
+
+    ``plan_method``: 'sort' (argsort by row id, O(L log L)), 'count'
+    (counting sort keyed by block id, O(L · nb) vectorized), 'auto' (count
+    under :data:`PLAN_COUNT_WORK`, sort past it)."""
+    tiles, L = gid.shape
+    nb_total = -(-total_rows // rb)
+    method = _resolve_plan_method(plan_method, L, nb_total, tiles)
+    build = _plan_count if method == "count" else _plan_sort
+    return build(gid, rb, total_rows, nbmax)
+
+
+def _stream_geometry(total_rows: int, s: int, n: int, hot: int,
+                     row_tile: int, rb: int):
+    """(nt, tiles, n_pad, L, nbmax, n_slots) — the one tiling both the
+    Pallas kernels and the jnp emulation (and any precomputed plan) share,
+    so a plan built outside can never disagree with the executor."""
+    nt = _stage_tile(row_tile, n, hot, s)
+    tiles = -(-n // nt)
+    n_pad = tiles * nt
+    L = nt * hot
+    nbmax = min(-(-total_rows // rb), L)
+    n_slots = min(2, nbmax)       # one whole-table block needs no partner
+    return nt, tiles, n_pad, L, nbmax, n_slots
+
+
+def build_stream_plan(total_rows: int, s: int, gid, *, row_tile: int,
+                      rb: int, plan_method: str = "auto") -> StreamPlan:
+    """Build a :class:`StreamPlan` for ``gid`` (n, hot) pre-clipped flat
+    row ids OUTSIDE the kernel call — the off-critical-path half of the
+    plan/compute overlap (DESIGN.md §1).  The tiling geometry is exactly
+    what :func:`_stream_rows` derives, so the plan drops in via ``plan=``."""
+    n, hot = gid.shape
+    nt, tiles, n_pad, L, nbmax, _ = _stream_geometry(
+        total_rows, s, n, hot, row_tile, rb)
+    if n_pad != n:
+        gid = jnp.pad(gid, ((0, n_pad - n), (0, 0)))
+    return _stream_plan(gid.reshape(tiles, L).astype(jnp.int32), rb,
+                        total_rows, nbmax, plan_method)
+
+
+def _check_plan(plan: StreamPlan, tiles: int, L: int, nbmax: int,
+                rb: int, total_rows: int):
+    # rb/total_rows ride the plan as static metadata: leaf shapes alone
+    # cannot always distinguish two block heights (nbmax clamps to L for
+    # any sufficiently tall table), and consuming a plan bucketed for a
+    # different rb would gather silently-wrong rows
+    want = {"sid": (tiles, L), "pos": (tiles, L), "inv": (tiles, L),
+            "off": (tiles, nbmax), "seg0": (tiles, nbmax),
+            "seg1": (tiles, nbmax), "nblk": (tiles, 1), "cum": (tiles, L),
+            "rb": rb, "total_rows": total_rows}
+    got = {k: tuple(getattr(plan, k).shape)
+           for k in want if k not in ("rb", "total_rows")}
+    got.update(rb=plan.rb, total_rows=plan.total_rows)
+    if got != want:
+        raise ValueError(
+            f"precomputed StreamPlan does not match this call's geometry: "
+            f"want {want}, got {got} — build it with build_stream_plan/"
+            f"stacked_stream_plan at the same batch/row_tile/row_block")
+
+
+# ---------------------------------------------------------------------------
+# the streaming core: pre-bucketed indices + double-buffered DMA
+# ---------------------------------------------------------------------------
 
 
 def _stream_kernel(sid_ref, pos_ref, w_ref, off_ref, seg0_ref, seg1_ref,
                    nb_ref, tbl_ref, out_ref, buf, sem, *, hot: int,
                    rb: int):
-    """Double-buffered HBM->VMEM row-block streaming (DESIGN.md §1).
+    """Double-buffered HBM->VMEM row-block streaming, SCALAR pool.
 
     tbl_ref lives in ANY/HBM; buf is (2, rb, s) VMEM.  Block j+1's
     ``make_async_copy`` is started before block j's rows are pooled, so
     the copy engine runs a block ahead of the gather loop.  Each compacted
-    block pools exactly its own segment of the pre-sorted index list into
+    block pools exactly its own segment of the pre-bucketed index list into
     the (L, s) f32 staging accumulator (slot-per-index), which reduces
     over ``hot`` at the end — the reference summation order, independent
     of block arrival order."""
@@ -202,44 +462,110 @@ def _stream_kernel(sid_ref, pos_ref, w_ref, off_ref, seg0_ref, seg1_ref,
     out_ref[...] = acc.reshape(nt, hot, s).sum(axis=1).astype(out_ref.dtype)
 
 
-def _stream_rows_jnp(table_flat, gid, w, *, rb: int, out_dtype):
-    """Pure-jax emulation of the streamed kernel: the SAME plan (sorted
-    ids, compacted blocks, clamped last-block window) driving the same
-    block loop, with the per-block pooling vectorized (gather all
+def _stream_kernel_vec(sid_ref, inv_ref, w_ref, off_ref, seg0_ref,
+                       seg1_ref, nb_ref, tbl_ref, out_ref, buf, sem, *,
+                       hot: int, rb: int, chunk: int):
+    """Double-buffered streaming, VECTOR pool: each compacted block's
+    segment is walked in ``chunk``-wide steps that gather a whole
+    (chunk, s) row tile from the VMEM slot in one vector gather and weight
+    it under the segment-tail validity mask, so the staging accumulator
+    fills at vector width.  The accumulator is kept in PLANNED order
+    (segments are contiguous, so every chunk store is a contiguous slab);
+    one inverse-permutation gather at the end restores original positions
+    before the reference ``hot`` reduction — staged values are identical
+    to the scalar kernel's slot-per-index buffer, so the output stays
+    bit-exact.  sid/w ride in padded to l + chunk so tail chunk loads
+    never clamp; a chunk overhang past its segment is weighted 0 and
+    overwritten by the owning (later) block's own chunks."""
+    nt, s = out_ref.shape
+    l = nt * hot                    # sid_ref is (1, l + chunk) padded
+    n_slots = buf.shape[0]
+    nb = nb_ref[0, 0]
+
+    def dma(slot, j):
+        return pltpu.make_async_copy(
+            tbl_ref.at[pl.ds(off_ref[0, j], rb), :],
+            buf.at[slot], sem.at[slot])
+
+    @pl.when(nb > 0)
+    def _():
+        dma(0, 0).start()
+
+    sid = sid_ref[...]              # (1, l + chunk)
+    sw = w_ref[...]                 # (1, l + chunk)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, chunk), 1)
+
+    def blk_body(j, acc):
+        slot = jax.lax.rem(j, n_slots)
+
+        @pl.when(j + 1 < nb)
+        def _():
+            dma(jax.lax.rem(j + 1, n_slots), j + 1).start()   # overlap
+        dma(slot, j).wait()
+        block = pl.load(buf, (pl.dslice(slot, 1), slice(None),
+                              slice(None)))[0]                # (rb, s)
+        s0, s1 = seg0_ref[0, j], seg1_ref[0, j]
+        off = off_ref[0, j]
+
+        def chunk_body(c, acc):
+            base = s0 + c * chunk
+            ids = jax.lax.dynamic_slice(sid, (0, base), (1, chunk))
+            wc = jax.lax.dynamic_slice(sw, (0, base), (1, chunk))
+            valid = ((base + lane) < s1).astype(jnp.float32)
+            loc = jnp.clip(ids - off, 0, rb - 1).reshape(chunk)
+            rows = jnp.take(block, loc, axis=0).astype(jnp.float32)
+            vals = rows * (wc * valid).reshape(chunk, 1)
+            return jax.lax.dynamic_update_slice(acc, vals, (base, 0))
+
+        return jax.lax.fori_loop(0, pl.cdiv(s1 - s0, chunk), chunk_body,
+                                 acc)
+
+    acc = jax.lax.fori_loop(0, nb, blk_body,
+                            jnp.zeros((l + chunk, s), jnp.float32))
+    staged = jnp.take(acc, inv_ref[0, :l], axis=0)            # unsort
+    out_ref[...] = staged.reshape(nt, hot, s).sum(axis=1) \
+        .astype(out_ref.dtype)
+
+
+def _stream_rows_jnp(table_flat, plan: StreamPlan, sw, *, nt: int,
+                     hot: int, rb: int, out_dtype):
+    """Pure-jax emulation of the streamed kernel: the SAME plan (block-
+    grouped ids, compacted blocks, clamped last-block windows) driving the
+    same block loop, with the per-block pooling vectorized (gather all
     positions from the block, mask to the block's own rows).  Every staged
-    position receives exactly one contribution and the final reduction
-    runs over ``hot`` in the reference order, so the result is
-    bit-identical to both the DMA kernel and the jnp oracle in f32.
+    position receives exactly one weighted-row contribution and the final
+    reduction runs over ``hot`` in the reference order, so the result is
+    bit-identical to BOTH kernel pool modes and the jnp oracle in f32.
 
     This is what ``interpret`` dispatch uses inside jitted multi-device
     shard_map: this jax version miscompiles interpret-mode ``pallas_call``
     machinery under compiled SPMD (plain ops are fine, and native Mosaic
     lowering on TPU is unaffected), so CPU validation of the streamed
     path runs the schedule as ordinary ops."""
-    total_rows, s = table_flat.shape
-    n, hot = gid.shape
-    L = n * hot
-    nbmax = min(-(-total_rows // rb), L)
-    sid, pos, sw, off, _, _, nblk, cum = _stream_plan(
-        gid.reshape(1, L), w.reshape(1, L), rb, total_rows, nbmax)
+    _, s = table_flat.shape
+    tiles, L = plan.sid.shape
 
-    def blk_body(j, acc):
-        block = jax.lax.dynamic_slice(table_flat, (off[0, j], 0), (rb, s))
-        loc = jnp.clip(sid[0] - off[0, j], 0, rb - 1)
-        rows = jnp.take(block, loc, axis=0)                    # (L, s)
-        valid = (cum[0] == j).astype(jnp.float32) * sw[0]
-        return acc + rows.astype(jnp.float32) * valid[:, None]
+    def one_tile(sid, inv, off, nblk, cum, w):
+        def blk_body(j, acc):
+            block = jax.lax.dynamic_slice(table_flat, (off[j], 0), (rb, s))
+            loc = jnp.clip(sid - off[j], 0, rb - 1)
+            rows = jnp.take(block, loc, axis=0)                # (L, s)
+            valid = (cum == j).astype(jnp.float32) * w
+            return acc + rows.astype(jnp.float32) * valid[:, None]
 
-    acc = jax.lax.fori_loop(0, nblk[0, 0], blk_body,
-                            jnp.zeros((L, s), jnp.float32))
-    inv = jnp.zeros((L,), jnp.int32).at[pos[0]].set(
-        jnp.arange(L, dtype=jnp.int32))
-    staged = jnp.take(acc, inv, axis=0)                        # unsort
-    return staged.reshape(n, hot, s).sum(axis=1).astype(out_dtype)
+        acc = jax.lax.fori_loop(0, nblk[0], blk_body,
+                                jnp.zeros((L, s), jnp.float32))
+        staged = jnp.take(acc, inv, axis=0)                    # unsort
+        return staged.reshape(nt, hot, s).sum(axis=1).astype(out_dtype)
+
+    return jax.vmap(one_tile)(plan.sid, plan.inv, plan.off, plan.nblk,
+                              plan.cum, sw).reshape(tiles * nt, s)
 
 
 def _stream_rows(table_flat, gid, w, *, row_tile: int, rb: int,
-                 interpret: bool, out_dtype, dma=None):
+                 interpret: bool, out_dtype, dma=None,
+                 pool_mode: str = "vector", plan: StreamPlan = None,
+                 plan_method: str = "auto"):
     """The streaming core: table_flat (total_rows, s) in HBM, gid (N, hot)
     int32 pre-clipped flat row ids, w (N, hot) weights -> (N, s) pooled
     bags.  N is padded to a whole number of row tiles internally (pad rows
@@ -249,32 +575,54 @@ def _stream_rows(table_flat, gid, w, *, row_tile: int, rb: int,
     pure-jax schedule emulation (:func:`_stream_rows_jnp`) in interpret
     mode; True forces the Pallas kernel (tests validate the DMA pipeline
     itself on CPU this way — sound standalone, NOT inside compiled
-    multi-device shard_map); False forces the emulation."""
+    multi-device shard_map); False forces the emulation.  ``plan``
+    consumes a precomputed :class:`StreamPlan` (geometry-checked) instead
+    of building one inline; the emulation and both kernel pool modes all
+    execute the same plan, so which executor ran never shows in the
+    output."""
     total_rows, s = table_flat.shape
     n, hot = gid.shape
-    use_dma = dma if dma is not None else not interpret
-    if not use_dma:
-        return _stream_rows_jnp(table_flat, gid, w, rb=rb,
-                                out_dtype=out_dtype)
-    nt = _stage_tile(row_tile, n, hot, s)
-    tiles = -(-n // nt)
-    n_pad = tiles * nt
+    vector = resolve_pool_mode(pool_mode) == "vector"   # validate up front
+    nt, tiles, n_pad, L, nbmax, n_slots = _stream_geometry(
+        total_rows, s, n, hot, row_tile, rb)
     if n_pad != n:
         gid = jnp.pad(gid, ((0, n_pad - n), (0, 0)))
         w = jnp.pad(w, ((0, n_pad - n), (0, 0)))
-    L = nt * hot
-    nbmax = min(-(-total_rows // rb), L)
-    n_slots = min(2, nbmax)       # one whole-table block needs no partner
-    sid, pos, sw, off, seg0, seg1, nblk, _ = _stream_plan(
-        gid.reshape(tiles, L), w.reshape(tiles, L), rb, total_rows, nbmax)
+    if plan is None:
+        plan = _stream_plan(gid.reshape(tiles, L), rb, total_rows, nbmax,
+                            plan_method)
+    else:
+        _check_plan(plan, tiles, L, nbmax, rb, total_rows)
+    # weights are permuted into plan order HERE (an O(L) gather), never
+    # inside the plan — a plan built from indices alone stays valid for
+    # any miss-mask the cache produces at serving time
+    sw = jnp.take_along_axis(w.astype(jnp.float32).reshape(tiles, L),
+                             plan.pos, axis=-1)
+    use_dma = dma if dma is not None else not interpret
+    if not use_dma:
+        return _stream_rows_jnp(table_flat, plan, sw, nt=nt, hot=hot,
+                                rb=rb, out_dtype=out_dtype)[:n]
     row_spec = lambda i: (i, 0)                      # noqa: E731
+    if vector:
+        chunk = _stream_pool_chunk(L, nbmax)
+        # pad the planned id/weight rows by one chunk so segment-tail
+        # chunk loads never clamp backwards (the mask zeroes the overhang)
+        sid_in = jnp.pad(plan.sid, ((0, 0), (0, chunk)))
+        perm_in = plan.inv
+        sw = jnp.pad(sw, ((0, 0), (0, chunk)))
+        l_in = L + chunk
+        kernel = functools.partial(_stream_kernel_vec, hot=hot, rb=rb,
+                                   chunk=chunk)
+    else:
+        sid_in, perm_in, l_in = plan.sid, plan.pos, L
+        kernel = functools.partial(_stream_kernel, hot=hot, rb=rb)
     out = pl.pallas_call(
-        functools.partial(_stream_kernel, hot=hot, rb=rb),
+        kernel,
         grid=(tiles,),
         in_specs=[
-            pl.BlockSpec((1, L), row_spec),          # sorted row ids
-            pl.BlockSpec((1, L), row_spec),          # original positions
-            pl.BlockSpec((1, L), row_spec),          # sorted weights
+            pl.BlockSpec((1, l_in), row_spec),       # planned row ids
+            pl.BlockSpec((1, L), row_spec),          # pos (scalar) / inv
+            pl.BlockSpec((1, l_in), row_spec),       # planned weights
             pl.BlockSpec((1, nbmax), row_spec),      # block DMA start rows
             pl.BlockSpec((1, nbmax), row_spec),      # segment starts
             pl.BlockSpec((1, nbmax), row_spec),      # segment ends
@@ -288,7 +636,8 @@ def _stream_rows(table_flat, gid, w, *, row_tile: int, rb: int,
             pltpu.SemaphoreType.DMA((n_slots,)),
         ],
         interpret=interpret,
-    )(sid, pos, sw, off, seg0, seg1, nblk, table_flat)
+    )(sid_in, perm_in, sw, plan.off, plan.seg0, plan.seg1, plan.nblk,
+      table_flat)
     return out[:n]
 
 
@@ -314,6 +663,37 @@ def _kernel(idx_ref, mask_ref, table_ref, out_ref, *, hot: int):
     out_ref[...] = acc.sum(axis=1).astype(out_ref.dtype)
 
 
+def _chunked_gather_pool(tbl, ids, w, bt: int, hot: int):
+    """The vector pool inner loop shared by both resident kernels: walk the
+    flat (bt·hot) index list in POOL_CHUNK-wide steps, gather a whole
+    (chunk, s) row tile per step and weight it, staging slot-per-index
+    into an f32 accumulator that reduces over ``hot`` at the end — the
+    reference summation order, so the output is bit-identical to the
+    scalar walk.  The chunk-tail overhang is padded with id 0 / weight 0
+    (validity folded into the weights) and sliced off before the reduce."""
+    s = tbl.shape[1]
+    l = bt * hot
+    l_pad = -(-l // POOL_CHUNK) * POOL_CHUNK
+    ids = jnp.pad(ids.reshape(l), (0, l_pad - l))
+    w = jnp.pad(w.reshape(l).astype(jnp.float32), (0, l_pad - l))
+    acc = jnp.zeros((l_pad, s), jnp.float32)
+    for base in range(0, l_pad, POOL_CHUNK):
+        idc = jax.lax.slice(ids, (base,), (base + POOL_CHUNK,))
+        wc = jax.lax.slice(w, (base,), (base + POOL_CHUNK,))
+        rows = jnp.take(tbl, idc, axis=0).astype(jnp.float32)
+        acc = jax.lax.dynamic_update_slice(acc, rows * wc[:, None],
+                                           (base, 0))
+    return acc[:l].reshape(bt, hot, s).sum(axis=1)
+
+
+def _kernel_vec(idx_ref, mask_ref, table_ref, out_ref, *, hot: int):
+    bt = out_ref.shape[0]
+    r = table_ref.shape[0]
+    ids = jnp.clip(idx_ref[...], 0, r - 1)
+    out_ref[...] = _chunked_gather_pool(table_ref[...], ids, mask_ref[...],
+                                        bt, hot).astype(out_ref.dtype)
+
+
 def _pad_batch(b: int, bt: int, *arrays):
     """Pad the leading (batch) axis up to a multiple of ``bt`` (masked tail:
     pad rows pool to zero and are sliced off by the caller)."""
@@ -332,11 +712,15 @@ def _stage_tile(tile: int, b: int, hot: int, s: int) -> int:
 
 
 def embedding_bag(table, idx, mask, *, batch_tile: int = 64,
-                  row_block: int = 0, interpret: bool = False, dma=None):
+                  row_block: int = 0, pool_mode: str = "auto",
+                  interpret: bool = False, dma=None,
+                  plan: StreamPlan = None, plan_method: str = "auto"):
     """table:(R,S) idx:(B,hot) int32 mask:(B,hot) -> (B,S).
 
     Partial batch tiles are padded internally (any B works); ``row_block``
-    selects the resident vs streamed regime (module docstring)."""
+    selects the resident vs streamed regime and ``pool_mode`` the scalar vs
+    vector pooling loop (module docstring).  ``plan`` consumes a
+    precomputed :class:`StreamPlan` (streamed regime only)."""
     r, s = table.shape
     b, hot = idx.shape
     idx = idx.astype(jnp.int32)
@@ -345,11 +729,18 @@ def embedding_bag(table, idx, mask, *, batch_tile: int = 64,
     if streamed:
         return _stream_rows(table, jnp.clip(idx, 0, r - 1), mask,
                             row_tile=batch_tile, rb=rb, interpret=interpret,
-                            out_dtype=table.dtype, dma=dma)
+                            out_dtype=table.dtype, dma=dma,
+                            pool_mode=pool_mode, plan=plan,
+                            plan_method=plan_method)
+    if plan is not None:
+        raise ValueError("plan= only applies to the streamed regime "
+                         "(this call resolved VMEM-resident)")
+    body = _kernel_vec if resolve_pool_mode(pool_mode) == "vector" \
+        else _kernel
     bt = _stage_tile(batch_tile, b, hot, s)
     b_pad, idx, mask = _pad_batch(b, bt, idx, mask)
     out = pl.pallas_call(
-        functools.partial(_kernel, hot=hot),
+        functools.partial(body, hot=hot),
         grid=(b_pad // bt,),
         in_specs=[
             pl.BlockSpec((bt, hot), lambda i: (i, 0)),
@@ -388,9 +779,49 @@ def _stacked_kernel(idx_ref, mask_ref, table_ref, out_ref, *, hot: int):
     out_ref[...] = acc.sum(axis=1)[:, None, :].astype(out_ref.dtype)
 
 
+def _stacked_kernel_vec(idx_ref, mask_ref, table_ref, out_ref, *,
+                        hot: int):
+    bt = out_ref.shape[0]
+    r = table_ref.shape[1]
+    ids = jnp.clip(idx_ref[:, 0, :], 0, r - 1)
+    pooled = _chunked_gather_pool(table_ref[0], ids, mask_ref[:, 0, :],
+                                  bt, hot)
+    out_ref[...] = pooled[:, None, :].astype(out_ref.dtype)
+
+
+def _stacked_gid(t: int, r: int, idx):
+    """Flat (T·R, s) row-space ids for a stacked (B, T, hot) index tensor:
+    global row id = t·R + clip(idx) — a free reshape of the stack."""
+    return (jnp.arange(t, dtype=jnp.int32)[None, :, None] * r +
+            jnp.clip(idx.astype(jnp.int32), 0, r - 1))
+
+
+def stacked_stream_plan(t: int, r: int, s: int, itemsize: int, idx, *,
+                        batch_tile: int = 64, row_block: int = 0,
+                        plan_method: str = "auto"):
+    """Precompute :func:`embedding_bag_stacked`'s StreamPlan from indices
+    alone (weights never enter the plan), or return None when this
+    geometry resolves VMEM-resident (no plan to build).  Built off the
+    critical path by ``DLRMEngine``/``build_forward_plans`` and consumed
+    via ``embedding_bag_stacked(..., plan=...)``."""
+    b, t2, hot = idx.shape
+    assert t == t2, (t, t2)
+    streamed, _ = resolve_row_block(r, s, itemsize, row_block)
+    if not streamed:
+        return None
+    rb = min(row_block, t * r) if row_block > 0 \
+        else auto_row_block(t * r, s, itemsize)
+    gid = _stacked_gid(t, r, idx)
+    return build_stream_plan(t * r, s, gid.reshape(b * t, hot),
+                             row_tile=batch_tile, rb=rb,
+                             plan_method=plan_method)
+
+
 def embedding_bag_stacked(tables, idx, mask, *, batch_tile: int = 64,
-                          row_block: int = 0, interpret: bool = False,
-                          dma=None):
+                          row_block: int = 0, pool_mode: str = "auto",
+                          interpret: bool = False, dma=None,
+                          plan: StreamPlan = None,
+                          plan_method: str = "auto"):
     """tables:(T,R,s) idx:(B,T,hot) int32 mask:(B,T,hot) -> (B,T,s).
 
     The model-facing form of ``apply_emb``.  Resident regime: one
@@ -401,8 +832,10 @@ def embedding_bag_stacked(tables, idx, mask, *, batch_tile: int = 64,
     the stack is addressed as one flat (T·R, s) row space (global row id =
     t·R + idx — a free reshape) and pooled through the double-buffered DMA
     core, so tables of production size run at streaming bandwidth instead
-    of failing the residency assumption.  Partial batch tiles are padded
-    internally (any B works)."""
+    of failing the residency assumption.  ``pool_mode`` picks the scalar
+    walk or the chunked vector gather in BOTH regimes; ``plan`` consumes a
+    :func:`stacked_stream_plan` built off the critical path.  Partial
+    batch tiles are padded internally (any B works)."""
     t, r, s = tables.shape
     b, t2, hot = idx.shape
     assert t == t2, (t, t2)
@@ -415,19 +848,24 @@ def embedding_bag_stacked(tables, idx, mask, *, batch_tile: int = 64,
     if streamed:
         rb = min(row_block, t * r) if row_block > 0 \
             else auto_row_block(t * r, s, item)
-        gid = (jnp.arange(t, dtype=jnp.int32)[None, :, None] * r +
-               jnp.clip(idx, 0, r - 1))
+        gid = _stacked_gid(t, r, idx)
         out = _stream_rows(tables.reshape(t * r, s),
                            gid.reshape(b * t, hot),
                            mask.reshape(b * t, hot),
                            row_tile=batch_tile, rb=rb,
                            interpret=interpret, out_dtype=tables.dtype,
-                           dma=dma)
+                           dma=dma, pool_mode=pool_mode, plan=plan,
+                           plan_method=plan_method)
         return out.reshape(b, t, s)
+    if plan is not None:
+        raise ValueError("plan= only applies to the streamed regime "
+                         "(this call resolved VMEM-resident)")
+    body = _stacked_kernel_vec if resolve_pool_mode(pool_mode) == "vector" \
+        else _stacked_kernel
     bt = _stage_tile(batch_tile, b, hot, s)
     b_pad, idx, mask = _pad_batch(b, bt, idx, mask)
     out = pl.pallas_call(
-        functools.partial(_stacked_kernel, hot=hot),
+        functools.partial(body, hot=hot),
         grid=(t, b_pad // bt),
         in_specs=[
             pl.BlockSpec((bt, 1, hot), lambda ti, bi: (bi, ti, 0)),
@@ -447,8 +885,9 @@ def embedding_bag_stacked(tables, idx, mask, *, batch_tile: int = 64,
 
 
 def embedding_bag_rows(tables, tid, idx, mask, *, row_tile: int = 64,
-                       row_block: int = 0, interpret: bool = False,
-                       dma=None):
+                       row_block: int = 0, pool_mode: str = "auto",
+                       interpret: bool = False, dma=None,
+                       plan_method: str = "auto"):
     """tables:(T,R,s) tid:(N,) int32 idx/mask:(N,hot) -> (N,s) masked sums.
 
     The packed-ragged analogue of :func:`embedding_bag_stacked`: pools ONLY
@@ -459,7 +898,9 @@ def embedding_bag_rows(tables, tid, idx, mask, *, row_tile: int = 64,
     the stack is production-size.  ``row_block`` 0/auto streams the whole
     stack as one block when it fits the VMEM budget (the resident
     equivalent — a single scratch slot, no partner buffer) and falls back
-    to streamed blocks otherwise."""
+    to streamed blocks otherwise; ``pool_mode`` picks the pooling loop as
+    everywhere else.  (No ``plan=``: the packed row set is data-dependent
+    per step, so there is nothing to precompute.)"""
     t, r, s = tables.shape
     n, hot = idx.shape
     total = t * r
@@ -472,4 +913,5 @@ def embedding_bag_rows(tables, tid, idx, mask, *, row_tile: int = 64,
            jnp.clip(idx.astype(jnp.int32), 0, r - 1))
     return _stream_rows(tables.reshape(total, s), gid, mask,
                         row_tile=row_tile, rb=rb, interpret=interpret,
-                        out_dtype=tables.dtype, dma=dma)
+                        out_dtype=tables.dtype, dma=dma,
+                        pool_mode=pool_mode, plan_method=plan_method)

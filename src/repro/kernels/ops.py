@@ -32,39 +32,55 @@ def dot_interaction_op(z, *, impl: str = "auto", batch_tile: int = 128):
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "batch_tile",
-                                             "row_block"))
+                                             "row_block", "pool_mode",
+                                             "plan_method"))
 def embedding_bag_op(table, idx, mask, *, impl: str = "auto",
-                     batch_tile: int = 64, row_block: int = 0):
+                     batch_tile: int = 64, row_block: int = 0,
+                     pool_mode: str = "auto", plan=None,
+                     plan_method: str = "auto"):
     if impl == "ref":
         return _ref.embedding_bag_ref(table, idx, mask)
     return _bag_pallas(table, idx, mask, batch_tile=batch_tile,
-                       row_block=row_block, interpret=not _on_tpu())
+                       row_block=row_block, pool_mode=pool_mode,
+                       plan=plan, plan_method=plan_method,
+                       interpret=not _on_tpu())
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "batch_tile",
-                                             "row_block"))
+                                             "row_block", "pool_mode",
+                                             "plan_method"))
 def embedding_bag_stacked_op(tables, idx, mask, *, impl: str = "auto",
-                             batch_tile: int = 64, row_block: int = 0):
+                             batch_tile: int = 64, row_block: int = 0,
+                             pool_mode: str = "auto", plan=None,
+                             plan_method: str = "auto"):
     """(T,R,s) stacked embedding bags -> (B,T,s); the model hot path.
     ``row_block`` 0 = auto (VMEM-resident when the table block fits, the
-    double-buffered DMA stream otherwise); the kernel pads partial batch
+    double-buffered DMA stream otherwise); ``pool_mode`` scalar walk vs
+    chunked vector gather; ``plan`` a precomputed StreamPlan (streamed
+    regime, built off the critical path); the kernel pads partial batch
     tiles internally, so any B works."""
     if impl == "ref":
         return _ref.embedding_bag_stacked_ref(tables, idx, mask)
     return _bags_pallas(tables, idx, mask, batch_tile=batch_tile,
-                        row_block=row_block, interpret=not _on_tpu())
+                        row_block=row_block, pool_mode=pool_mode,
+                        plan=plan, plan_method=plan_method,
+                        interpret=not _on_tpu())
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "row_tile",
-                                             "row_block"))
+                                             "row_block", "pool_mode",
+                                             "plan_method"))
 def embedding_bag_rows_op(tables, tid, idx, mask, *, impl: str = "auto",
-                          row_tile: int = 64, row_block: int = 0):
+                          row_tile: int = 64, row_block: int = 0,
+                          pool_mode: str = "auto",
+                          plan_method: str = "auto"):
     """(N, hot) packed ragged rows pooled against their own tables ->
     (N, s); the pool half of the ragged miss-residual exchange."""
     if impl == "ref":
         return _ref.embedding_bag_rows_ref(tables, tid, idx, mask)
     return _rows_pallas(tables, tid, idx, mask, row_tile=row_tile,
-                        row_block=row_block, interpret=not _on_tpu())
+                        row_block=row_block, pool_mode=pool_mode,
+                        plan_method=plan_method, interpret=not _on_tpu())
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "chunk"))

@@ -106,7 +106,7 @@ def resolve_sparse_backend(backend: str) -> str:
 
 
 def apply_emb(tables, idx, mask, backend: str = "ref",
-              row_block: int = 0):
+              row_block: int = 0, pool_mode: str = "auto", plan=None):
     """Embedding bags.  tables:(T,R,s) idx:(B,T,hot) mask:(B,T,hot)
     -> (B,T,s).  The paper's dominant stage (its Fig. 5 flame graph).
 
@@ -115,15 +115,23 @@ def apply_emb(tables, idx, mask, backend: str = "ref",
     stacked-table kernel in kernels/embedding_bag.py, which streams rows
     through VMEM and never builds that intermediate.  ``row_block``
     (cfg.row_block) picks the kernel regime: 0 auto — VMEM-resident table
-    blocks when they fit, double-buffered DMA row streaming otherwise
-    (DESIGN.md §1)."""
+    blocks when they fit, double-buffered DMA row streaming otherwise;
+    ``pool_mode`` (cfg.pool_mode) the scalar walk vs the chunked vector
+    gather (DESIGN.md §1).  ``plan`` consumes a precomputed StreamPlan
+    (kernels.embedding_bag.stacked_stream_plan / build_forward_plans) so
+    the index-bucketing sort sits off the critical path; the jnp reference
+    has no plan to consume, so passing one with backend 'ref' raises."""
     backend = resolve_sparse_backend(backend)
     if backend != "ref":
         # ops owns tile choice + interpret-off-TPU; 'pallas' degrades to
         # interpret mode away from TPU rather than failing at lowering
         from repro.kernels.ops import embedding_bag_stacked_op
         return embedding_bag_stacked_op(tables, idx.astype(jnp.int32),
-                                        mask, row_block=row_block)
+                                        mask, row_block=row_block,
+                                        pool_mode=pool_mode, plan=plan)
+    if plan is not None:
+        raise ValueError("apply_emb: a precomputed stream plan only "
+                         "applies to the kernel backends, not 'ref'")
     # shared with the kernel oracle so every backend clips OOB ids the
     # same way
     from repro.kernels.ref import embedding_bag_stacked_ref
@@ -150,7 +158,7 @@ jax.tree_util.register_pytree_node(
 
 
 def apply_emb_rows(tables, tid, idx, mask, backend: str = "ref",
-                   row_block: int = 0):
+                   row_block: int = 0, pool_mode: str = "auto"):
     """Row-wise embedding bags: tables (T,R,s), tid (N,), idx/mask (N,hot)
     -> (N,s) masked sums.  The packed-ragged analogue of ``apply_emb``: it
     pools ONLY the rows that ride the exchange, so the lookup work shrinks
@@ -159,15 +167,17 @@ def apply_emb_rows(tables, tid, idx, mask, backend: str = "ref",
 
     Dispatches through the SAME :func:`resolve_sparse_backend` as
     ``apply_emb`` — 'auto'/'interpret'/'pallas' mean the same thing on the
-    dense and ragged paths; the kernel form shares the streaming core of
-    ``embedding_bag_stacked`` (DESIGN.md §1), so packed rows of a
-    production-size stack DMA only the row blocks they touch."""
+    dense and ragged paths; the kernel form shares the streaming core (and
+    both pool modes) of ``embedding_bag_stacked`` (DESIGN.md §1), so
+    packed rows of a production-size stack DMA only the row blocks they
+    touch."""
     backend = resolve_sparse_backend(backend)
     if backend != "ref":
         from repro.kernels.ops import embedding_bag_rows_op
         return embedding_bag_rows_op(tables, tid.astype(jnp.int32),
                                      idx.astype(jnp.int32), mask,
-                                     row_block=row_block)
+                                     row_block=row_block,
+                                     pool_mode=pool_mode)
     from repro.kernels.ref import embedding_bag_rows_ref
     return embedding_bag_rows_ref(tables, tid, idx, mask)
 
@@ -195,7 +205,7 @@ def resolve_exchange(exchange: str, *, use_cache: bool, cap: int,
 
 def ragged_exchange_pack(tables, idx, miss_mask, *, n_dest: int, cap: int,
                          wire: str = "float32", backend: str = "ref",
-                         row_block: int = 0):
+                         row_block: int = 0, pool_mode: str = "auto"):
     """Stage-a half of the ragged miss-residual exchange for ONE member.
 
     idx/miss_mask (B_mb, t_loc, hot) cover this member's LOCAL tables for
@@ -225,7 +235,8 @@ def ragged_exchange_pack(tables, idx, miss_mask, *, n_dest: int, cap: int,
     pooled = apply_emb_rows(tables, tid.reshape(-1),
                             packed["idx"].reshape(n_dest * cap, hot),
                             packed["mask"].reshape(n_dest * cap, hot),
-                            backend=backend, row_block=row_block)
+                            backend=backend, row_block=row_block,
+                            pool_mode=pool_mode)
     payload = a2a_mod.encode_wire(
         pooled.reshape(n_dest, cap, -1), wire)
     payload.update(ids=packed["ids"], counts=counts)
@@ -265,7 +276,8 @@ def forward_local(params, cfg: DLRMConfig, dense, idx, mask):
     t = cfg.n_tables
     z0 = apply_mlp(params["bot"], dense)                       # (B, s)
     emb = apply_emb(params["tables"][:t], idx[:, :t], mask[:, :t],
-                    backend=cfg.sparse_backend, row_block=cfg.row_block)
+                    backend=cfg.sparse_backend, row_block=cfg.row_block,
+                    pool_mode=cfg.pool_mode)
     z = jnp.concatenate([z0[:, None, :], emb], axis=1)         # (B, T+1, s)
     inter = dot_interaction(z)
     top_in = jnp.concatenate([z0, inter.astype(z0.dtype)], axis=-1)
@@ -289,6 +301,8 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                         exchange: Optional[str] = None,
                         ragged_cap: Optional[int] = None,
                         row_block: Optional[int] = None,
+                        pool_mode: Optional[str] = None,
+                        plan=None,
                         return_diag: bool = False):
     """dense:(B, n_dense) idx/mask:(B, T_pad, hot); batch B sharded over
     (pod, data) [dense replicated across ``model`` within a data row, as the
@@ -318,8 +332,16 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
     :func:`resolve_exchange`.  ``row_block`` (default cfg.row_block)
     selects the embedding-bag kernel regime on BOTH pooling paths
     (DESIGN.md §1: 0 auto — VMEM-resident table blocks when they fit,
-    double-buffered DMA row streaming otherwise).  ``return_diag=True``
-    additionally returns
+    double-buffered DMA row streaming otherwise); ``pool_mode`` (default
+    cfg.pool_mode) the scalar vs chunked-vector pooling loop.
+
+    ``plan`` consumes the per-(member, microbatch) StreamPlans of
+    :func:`build_forward_plans`, built OFF the critical path (the serving
+    engine dispatches flush n+1's plan while flush n pools) — stage_a then
+    pools straight out of the precomputed buckets and the index sort never
+    sits between exchange and pool.  Plans describe the DENSE pooling
+    path; combining one with a ragged exchange (whose packed row set is
+    data-dependent) raises.  ``return_diag=True`` additionally returns
     {live_max, drops, exchange, cap, dense_rows} — the signal the serving
     cap autotuner consumes.
     """
@@ -342,6 +364,7 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
     wire = wire_dtype if wire_dtype is not None else cfg.wire_dtype
     backend = cfg.sparse_backend
     rblk = row_block if row_block is not None else cfg.row_block
+    pool = pool_mode if pool_mode is not None else cfg.pool_mode
     use_cache = cache is not None and cache.cache_rows > 0
     if use_cache and cache.slot_of.shape[0] != idx.shape[1]:
         raise ValueError(
@@ -362,8 +385,15 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
         use_cache=use_cache,
         cap=ragged_cap if ragged_cap is not None else cfg.ragged_cap,
         dense_rows=dense_rows)
+    if plan is not None and use_ragged:
+        raise ValueError(
+            "forward_distributed: precomputed stream plans describe the "
+            "dense pooling path; the ragged exchange packs a data-"
+            "dependent row set per step and plans its own buckets — "
+            "build plans only when the exchange resolves dense")
+    has_plan = plan is not None
 
-    def shard_fn(tables, bot, top, dense_s, idx_s, mask_s, *cache_args):
+    def shard_fn(tables, bot, top, dense_s, idx_s, mask_s, *extra):
         # per-shard shapes: tables (t_loc,R,s); dense (B_row, n_dense)
         # replicated over model; idx/mask (B_row, t_loc, hot) — or
         # (B_row, t_pad, hot) replicated when the cache path needs every
@@ -372,6 +402,10 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
         t_loc = tables.shape[0]
         b_row = dense_s.shape[0]
         bs = b_row // (mb * n_shards)  # rows per (microbatch, member)
+        cache_args = extra[:2] if use_cache else ()
+        # member plan: strip the model-slot axis -> leaves (mb, tiles, ...)
+        plan_s = jax.tree.map(lambda a: a[0], extra[-1]) if has_plan \
+            else None
 
         def local_miss(ix, mk):
             """This member's local-table (idx, residual mask) slice."""
@@ -387,7 +421,8 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
             return ix_loc, hc_mod.miss_mask_of(slot_loc, ix_loc, mk_loc)
 
         def stage_a(x):
-            j, d, ix, mk = x
+            j, d, ix, mk = x[:4]
+            plan_j = x[4] if has_plan else None
             ix_loc, miss_mk = local_miss(ix, mk)
             if use_cache:
                 hot_rows, slot_of = cache_args
@@ -403,10 +438,12 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                 # pack the live rows first, pool only what ships
                 payload, _ = ragged_exchange_pack(
                     tables, ix_loc, miss_mk, n_dest=n_shards, cap=cap,
-                    wire=wire, backend=backend, row_block=rblk)
+                    wire=wire, backend=backend, row_block=rblk,
+                    pool_mode=pool)
             else:
                 pooled = apply_emb(tables, ix_loc, miss_mk, backend,
-                                   row_block=rblk)
+                                   row_block=rblk, pool_mode=pool,
+                                   plan=plan_j)
                 payload = a2a_mod.encode_wire(pooled, wire)
             # member m's dense rows of microbatch j (matches a2a delivery)
             dm = jax.lax.dynamic_slice_in_dim(d, m * bs, bs, axis=0)
@@ -467,6 +504,8 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
 
         js = jnp.arange(mb, dtype=jnp.int32)
         xs = (js, split(dense_s), split(idx_s), split(mask_s))
+        if has_plan:
+            xs = xs + (plan_s,)        # leaves already microbatch-major
         if bound == 0 and mb == 1:
             payload, side = stage_a(jax.tree.map(lambda a: a[0], xs))
             return (stage_b(collective(payload), side)[None],) + diag
@@ -486,6 +525,12 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
     if use_cache:
         in_specs += [P(), P()]              # hot block replicated everywhere
         args += [cache.hot_rows, cache.slot_of]
+    if has_plan:
+        # plan leaves are model-major on axis 0, (data-row, microbatch)-
+        # major on axis 1 — exactly what build_forward_plans emits
+        in_specs += [jax.tree.map(
+            lambda _: P("model", baxes if baxes else None), plan)]
+        args += [plan]
     out_spec = P(None, baxes + ("model",) if baxes else "model")
     out_specs = (out_spec, P(), P()) if return_diag else (out_spec,)
     out, *diag_out = compat.shard_map(
@@ -507,6 +552,95 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
             *diag_out, "ragged" if use_ragged else "dense",
             cap, dense_rows)
     return logits
+
+
+def build_forward_plans(params, cfg: DLRMConfig, idx, *,
+                        microbatches: int = 1, batch_tile: int = 64,
+                        cache=None, exchange: Optional[str] = None,
+                        ragged_cap: Optional[int] = None,
+                        row_block: Optional[int] = None,
+                        plan_method: str = "auto"):
+    """Precompute the per-(member, microbatch) embedding-bag StreamPlans
+    ``forward_distributed(..., plan=...)`` consumes — the serving half of
+    the plan/compute overlap (DESIGN.md §1): ``DLRMEngine`` dispatches this
+    (async) for flush n+1 while flush n's step still occupies the device,
+    so the index-bucketing sort never sits between exchange and pool.
+
+    Returns a StreamPlan pytree whose leaves are model-major on axis 0 and
+    (data-row, microbatch)-major on axis 1 — the exact layout the forward's
+    shard_map redistributes — or None when there is no plan to build: no
+    model-axis mesh, the 'ref' backend (no kernel), a VMEM-resident
+    regime (no streaming), or an exchange that resolves ragged (packed
+    row sets are data-dependent).  Plans are built from indices alone, so
+    a cache's miss masks never invalidate them."""
+    mesh = partition.current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return None
+    if resolve_sparse_backend(cfg.sparse_backend) == "ref":
+        return None
+    from repro.kernels import embedding_bag as eb
+    n_shards = mesh.shape["model"]
+    baxes = _batch_axes(mesh)
+    mb = microbatches
+    rblk = row_block if row_block is not None else cfg.row_block
+    r = params["tables"].shape[1]
+    s = params["tables"].shape[2]
+    item = jnp.dtype(params["tables"].dtype).itemsize
+    try:
+        streamed, _ = eb.resolve_row_block(r, s, item, rblk)
+    except ValueError:
+        return None                 # forward will raise on its own terms
+    if not streamed:
+        return None
+    # mirror the forward's static exchange selection: plans only serve the
+    # dense pooling path
+    use_cache = cache is not None and cache.cache_rows > 0
+    n_data = 1
+    for a in baxes:
+        n_data *= mesh.shape[a]
+    t_loc = idx.shape[1] // n_shards
+    bs_g = idx.shape[0] // (n_data * mb * n_shards)
+    use_ragged, _ = resolve_exchange(
+        exchange if exchange is not None else cfg.exchange,
+        use_cache=use_cache,
+        cap=ragged_cap if ragged_cap is not None else cfg.ragged_cap,
+        dense_rows=bs_g * t_loc)
+    if use_ragged:
+        return None
+
+    # ONE source of truth for gid layout and effective block height: the
+    # same stacked_stream_plan the kernel entry points advertise, applied
+    # to each member's per-microbatch index slice
+    def per_mb(ix):
+        return eb.stacked_stream_plan(t_loc, r, s, item, ix,
+                                      batch_tile=batch_tile,
+                                      row_block=rblk,
+                                      plan_method=plan_method)
+
+    def plan_fn(idx_s):
+        if use_cache:               # idx replicated over model: slice ours
+            m = jax.lax.axis_index("model")
+            idx_s = jax.lax.dynamic_slice_in_dim(idx_s, m * t_loc, t_loc,
+                                                 axis=1)
+        b_row, _, hot = idx_s.shape
+        plans = jax.vmap(per_mb)(
+            idx_s.reshape(mb, b_row // mb, t_loc, hot))
+        return jax.tree.map(lambda a: a[None], plans)   # + model-slot axis
+
+    sparse_spec = (P(baxes if baxes else None, None, None) if use_cache
+                   else P(baxes if baxes else None, "model", None))
+    out_spec = P("model", baxes if baxes else None)
+    # the spec tree must match the output tree INCLUDING the plan's static
+    # rb/total_rows metadata (pytree aux participates in structure
+    # equality) — probe it from per_mb itself rather than re-deriving rb
+    b_mb = idx.shape[0] // (n_data * mb)
+    plan_struct = jax.eval_shape(per_mb, jax.ShapeDtypeStruct(
+        (b_mb, t_loc, idx.shape[2]), jnp.int32))
+    return compat.shard_map(
+        plan_fn, mesh=mesh, in_specs=(sparse_spec,),
+        out_specs=jax.tree.map(lambda _: out_spec, plan_struct),
+        check_vma=False,
+    )(idx.astype(jnp.int32))
 
 
 # ---------------------------------------------------------------------------

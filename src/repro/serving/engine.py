@@ -10,6 +10,7 @@ LM path: synchronous batched greedy decode against a prefill'd KV cache.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Callable, Optional
 
@@ -51,6 +52,18 @@ class DLRMEngine:
     a ``CapAutotuner``; every ``retune_every`` batches it adopts the
     recommended cap (re-jitting the step), switching between the ragged
     alltoallv and the dense butterfly as profitability flips.
+
+    ``plan_pipeline=True`` overlaps the embedding-bag stream-plan build
+    with compute (DESIGN.md §1): each flush asynchronously dispatches the
+    incoming batch's index-bucketing plan (``build_forward_plans``) and
+    the step that consumes it, then returns the PREVIOUS in-flight batch's
+    CTRs — so flush n+1's plan is built while flush n still pools on the
+    device, and the sort never sits between exchange and pool.  Results
+    arrive one flush late; a final ``flush()`` (with an empty queue) or
+    :meth:`drain` harvests the last in-flight batch.  When the
+    configuration has no plan to build (ref backend, resident tables,
+    ragged exchange), the pipeline degenerates to deferred-harvest
+    dispatch with inline planning — outputs are identical either way.
     """
 
     def __init__(self, params, cfg: DLRMConfig, *, batch_size: int = 512,
@@ -58,7 +71,9 @@ class DLRMEngine:
                  wire_dtype: Optional[str] = None, cache=None,
                  exchange: Optional[str] = None,
                  ragged_cap: Optional[int] = None, retune_every: int = 8,
-                 row_block: Optional[int] = None):
+                 row_block: Optional[int] = None,
+                 pool_mode: Optional[str] = None,
+                 plan_pipeline: bool = False):
         self.params, self.cfg = params, cfg
         self.batch_size = batch_size
         self.bound, self.microbatches = bound, microbatches
@@ -72,10 +87,16 @@ class DLRMEngine:
         # table blocks when they fit VMEM, DMA row streaming otherwise
         self.row_block = row_block if row_block is not None \
             else cfg.row_block
+        # pooling loop: chunked vector gather vs scalar walk (DESIGN.md §1)
+        self.pool_mode = pool_mode if pool_mode is not None \
+            else cfg.pool_mode
+        self.plan_pipeline = plan_pipeline
         self.monitor = StragglerMonitor()
         self.cap_tuner = CapAutotuner()
         self.stats = ServeStats()
         self._pending: list = []
+        self._inflight = None          # (out_future, diag, n, t0)
+        self._last_finish_t = 0.0      # end of the last harvested batch
         self._step = jax.jit(self._make_step(bound, microbatches))
 
     def calibrate_cache(self, idx: np.ndarray, mask: np.ndarray,
@@ -92,7 +113,7 @@ class DLRMEngine:
     def _make_step(self, bound, microbatches):
         cfg, wire = self.cfg, self.wire_dtype
         ex, cap = self.exchange, self.ragged_cap
-        rblk = self.row_block
+        rblk, pool = self.row_block, self.pool_mode
         # diagnostics cost a full-batch miss re-probe + two collectives:
         # trace them only when something consumes them — drop monitoring
         # (explicit ragged) or the autotuner (auto WITH a cache; cacheless
@@ -100,6 +121,19 @@ class DLRMEngine:
         # also keeps pre-calibration full-live counts out of the window)
         diag_on = ex == "ragged" or (ex == "auto" and
                                      self.cache is not None)
+        # the plan builder the pipelined flush dispatches ahead of the
+        # step; rebuilt with the step so retuned caps / recalibrated
+        # caches re-resolve whether a plan applies at all
+        if self.plan_pipeline:
+            eng_cache = self.cache
+
+            def plan_fn(params, idx):
+                return dlrm_mod.build_forward_plans(
+                    params, cfg, idx, microbatches=microbatches,
+                    cache=eng_cache, exchange=ex, ragged_cap=cap,
+                    row_block=rblk)
+
+            self._plan_fn = jax.jit(plan_fn)
 
         def _finish(out):
             if not diag_on:
@@ -108,13 +142,20 @@ class DLRMEngine:
             logits, diag = out
             return jax.nn.sigmoid(logits), diag.live_max, diag.drops
 
+        def forward(params, dense, idx, mask, cache, plan):
+            return _finish(dlrm_mod.forward_distributed(
+                params, cfg, dense, idx, mask, bound=bound,
+                microbatches=microbatches, cache=cache, wire_dtype=wire,
+                exchange=ex, ragged_cap=cap, row_block=rblk,
+                pool_mode=pool, plan=plan, return_diag=diag_on))
+
         if self.cache is None:
-            def step(params, dense, idx, mask):
-                return _finish(dlrm_mod.forward_distributed(
-                    params, cfg, dense, idx, mask, bound=bound,
-                    microbatches=microbatches, wire_dtype=wire,
-                    exchange=ex, ragged_cap=cap, row_block=rblk,
-                    return_diag=diag_on))
+            if self.plan_pipeline:
+                def step(params, dense, idx, mask, plan):
+                    return forward(params, dense, idx, mask, None, plan)
+            else:
+                def step(params, dense, idx, mask):
+                    return forward(params, dense, idx, mask, None, None)
             return step
 
         from repro.serving.hot_cache import HotCache
@@ -124,14 +165,16 @@ class DLRMEngine:
         # the executable's constant pool and re-embed it on every
         # calibration re-trace; hot_ids only names the cached rows and is
         # not needed by the forward path
-        def step(params, dense, idx, mask, hot_rows, slot_of):
-            c = HotCache(hot_ids=None, hot_rows=hot_rows,
-                         slot_of=slot_of)
-            return _finish(dlrm_mod.forward_distributed(
-                params, cfg, dense, idx, mask, bound=bound,
-                microbatches=microbatches, cache=c, wire_dtype=wire,
-                exchange=ex, ragged_cap=cap, row_block=rblk,
-                return_diag=diag_on))
+        if self.plan_pipeline:
+            def step(params, dense, idx, mask, hot_rows, slot_of, plan):
+                c = HotCache(hot_ids=None, hot_rows=hot_rows,
+                             slot_of=slot_of)
+                return forward(params, dense, idx, mask, c, plan)
+        else:
+            def step(params, dense, idx, mask, hot_rows, slot_of):
+                c = HotCache(hot_ids=None, hot_rows=hot_rows,
+                             slot_of=slot_of)
+                return forward(params, dense, idx, mask, c, None)
 
         return step
 
@@ -143,15 +186,53 @@ class DLRMEngine:
         return base + (self.cache.hot_rows, self.cache.slot_of)
 
     def submit(self, dense: np.ndarray, idx: np.ndarray, mask: np.ndarray):
-        """Queue one request (row).  Returns CTRs when a batch fills."""
+        """Queue one request (row).  Returns CTRs when a batch fills (the
+        PREVIOUS batch's CTRs under ``plan_pipeline``)."""
         self._pending.append((dense, idx, mask))
         if len(self._pending) >= self.batch_size:
             return self.flush()
         return None
 
-    def flush(self):
-        if not self._pending:
+    def _finish_batch(self, out, diag, n, t0, done_t=None):
+        """Materialize one batch's result and account for it.  ``done_t``
+        (pipelined batches: the watcher thread's device-completion
+        timestamp) keeps the straggler monitor observing dispatch-to-
+        completion step latency rather than harvest-to-harvest wall time;
+        ``total_s`` clips each interval at the previous batch's end so it
+        sums non-overlapping busy time (throughput_rps stays honest even
+        though pipelined steps overlap request accumulation)."""
+        out = np.asarray(out)
+        end = done_t if done_t is not None else time.perf_counter()
+        self.monitor.observe(end - t0)
+        if diag:
+            self.cap_tuner.observe(int(diag[0]), int(diag[1]))
+        self.stats.batches += 1
+        self.stats.requests += n
+        self.stats.total_s += end - max(t0, self._last_finish_t)
+        self._last_finish_t = max(self._last_finish_t, end)
+        if self.exchange == "auto" and \
+                self.stats.batches % self.retune_every == 0:
+            self.retune_cap()
+        return out[:n]
+
+    def _harvest(self):
+        """Materialize the in-flight batch dispatched by a pipelined
+        flush, if any."""
+        if self._inflight is None:
             return None
+        out, diag, n, t0, watcher, done = self._inflight
+        self._inflight = None
+        watcher.join()
+        return self._finish_batch(out, diag, n, t0, done["t"])
+
+    def flush(self):
+        """Run the pending batch.  Inline mode returns its CTRs; under
+        ``plan_pipeline`` the batch's plan + step are DISPATCHED (async)
+        and the previous in-flight batch's CTRs are returned instead —
+        call again with an empty queue (or :meth:`drain`) for the last
+        one."""
+        if not self._pending:
+            return self._harvest()
         n = len(self._pending)
         pad = self.batch_size - n
         d = np.stack([p[0] for p in self._pending] +
@@ -162,19 +243,35 @@ class DLRMEngine:
                      [self._pending[-1][2]] * pad)
         self._pending.clear()
         t0 = time.perf_counter()
-        out, *diag = self._step(*self._step_args(d, i, m))
-        out = np.asarray(out)
-        el = time.perf_counter() - t0
-        self.monitor.observe(el)
-        if diag:
-            self.cap_tuner.observe(int(diag[0]), int(diag[1]))
-        self.stats.batches += 1
-        self.stats.requests += n
-        self.stats.total_s += el
-        if self.exchange == "auto" and \
-                self.stats.batches % self.retune_every == 0:
-            self.retune_cap()
-        return out[:n]
+        args = self._step_args(d, i, m)
+        if not self.plan_pipeline:
+            out, *diag = self._step(*args)
+            return self._finish_batch(out, diag, n, t0)
+        # flush n+1's plan is dispatched while flush n (the in-flight
+        # entry harvested below) still occupies the device — the plan
+        # build overlaps stage_a compute instead of serializing with it
+        plan = self._plan_fn(self.params, args[2])
+        out, *diag = self._step(*args, plan)
+        # a daemon watcher blocks on the async result off the main thread
+        # and stamps true completion, so the harvested batch's latency is
+        # dispatch -> device completion, not harvest-to-harvest wall time
+        done = {"t": None}
+
+        def _watch(o=out, d=done):
+            jax.block_until_ready(o)
+            d["t"] = time.perf_counter()
+
+        watcher = threading.Thread(target=_watch, daemon=True)
+        watcher.start()
+        prev = self._harvest()
+        self._inflight = (out, diag, n, t0, watcher, done)
+        return prev
+
+    def drain(self):
+        """Flush the pending queue AND the pipeline: returns every CTR not
+        yet returned (concatenated), or None if nothing is outstanding."""
+        outs = [o for o in (self.flush(), self._harvest()) if o is not None]
+        return np.concatenate(outs) if outs else None
 
     # -- ragged-exchange cap autotuning ------------------------------------
 

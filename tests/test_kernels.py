@@ -21,10 +21,16 @@ class TestDotInteraction:
         assert jnp.allclose(out.astype(jnp.float32),
                             r.astype(jnp.float32), atol=tol, rtol=tol)
 
-    def test_uneven_tile_asserts(self):
-        z = jnp.ones((100, 4, 8))
-        with pytest.raises(AssertionError):
-            ops.dot_interaction_op(z, batch_tile=64)
+    @pytest.mark.parametrize("b", [100, 37, 1])
+    def test_partial_batch_tile_is_padded_internally(self, b):
+        # b % batch_tile != 0 used to hard-assert; the tail tile is now
+        # padded internally (mirroring the embedding-bag kernels) so odd
+        # serving batch sizes run through the dense stage
+        z = jax.random.normal(jax.random.PRNGKey(3), (b, 4, 8))
+        out = ops.dot_interaction_op(z, batch_tile=64)
+        r = ref.dot_interaction_ref(z)
+        assert out.shape == r.shape
+        assert jnp.allclose(out, r, atol=1e-4)
 
 
 class TestEmbeddingBag:

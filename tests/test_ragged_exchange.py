@@ -65,8 +65,9 @@ class TestResolveExchange:
 
 
 class TestRaggedMachinery:
+    @pytest.mark.parametrize("pool_mode", ["scalar", "vector"])
     @pytest.mark.parametrize("backend", ["ref", "interpret"])
-    def test_apply_emb_rows_matches_stacked_ref(self, backend):
+    def test_apply_emb_rows_matches_stacked_ref(self, backend, pool_mode):
         ks = jax.random.split(jax.random.PRNGKey(0), 3)
         tables = jax.random.normal(ks[0], (5, 40, 8))
         idx = jax.random.randint(ks[1], (32, 5, 4), 0, 40)
@@ -75,7 +76,8 @@ class TestRaggedMachinery:
         want = embedding_bag_stacked_ref(tables, idx, mask)
         tid = jnp.tile(jnp.arange(5, dtype=jnp.int32), 32)
         got = D.apply_emb_rows(tables, tid, idx.reshape(-1, 4),
-                               mask.reshape(-1, 4), backend=backend)
+                               mask.reshape(-1, 4), backend=backend,
+                               pool_mode=pool_mode)
         assert jnp.allclose(got.reshape(32, 5, 8), want, atol=1e-5)
 
     def test_apply_emb_rows_shares_the_backend_resolver(self):
@@ -107,7 +109,8 @@ class TestRaggedMachinery:
 
     def _emulated_exchange(self, wire, p=4, bs=8, t_loc=3, hot=4, s=16,
                            r=50, cap=None, mask_density=0.3,
-                           backend="ref", row_block=0):
+                           backend="ref", row_block=0,
+                           pool_mode="auto"):
         """Run the per-member pack/unpack halves for every member of an
         emulated P-member ring and stitch the exchange by hand."""
         t_pad = p * t_loc
@@ -123,7 +126,8 @@ class TestRaggedMachinery:
             sl = slice(m * t_loc, (m + 1) * t_loc)
             pay, dr = D.ragged_exchange_pack(
                 tables[sl], idx[:, sl], mask[:, sl], n_dest=p, cap=cap,
-                wire=wire, backend=backend, row_block=row_block)
+                wire=wire, backend=backend, row_block=row_block,
+                pool_mode=pool_mode)
             payloads.append(pay)
             drops.append(int(dr))
         want = embedding_bag_stacked_ref(tables, idx, mask)
@@ -137,17 +141,24 @@ class TestRaggedMachinery:
                 recv, t_loc=t_loc, bs=bs, out_dtype=jnp.float32))
         return jnp.concatenate(outs), want, sum(drops)
 
-    @pytest.mark.parametrize("backend", ["ref", "interpret"])
+    @pytest.mark.parametrize("backend,row_block,pool_mode", [
+        ("ref", 0, "auto"),
+        ("interpret", 16, "auto"),       # streamed kernel path
+        ("interpret", 16, "scalar"),
+        ("interpret", 0, "vector"),      # whole-stack single-block stream
+    ])
     @pytest.mark.parametrize("wire,tol", [("float32", 1e-5),
                                           ("bfloat16", 3e-2),
                                           ("int8", 6e-2)])
     def test_emulated_roundtrip_matches_dense_pool(self, wire, tol,
-                                                   backend):
+                                                   backend, row_block,
+                                                   pool_mode):
         # the kernel backend streams row blocks (row_block=16 << r) and
-        # must agree with the jnp pack-then-pool path codec-for-codec
+        # must agree with the jnp pack-then-pool path codec-for-codec,
+        # in both pool modes (DESIGN.md §1)
         got, want, drops = self._emulated_exchange(
-            wire, backend=backend,
-            row_block=16 if backend != "ref" else 0)
+            wire, backend=backend, row_block=row_block,
+            pool_mode=pool_mode)
         assert drops == 0
         assert float(jnp.max(jnp.abs(got - want))) < tol * float(
             jnp.max(jnp.abs(want)) + 1)
@@ -318,6 +329,22 @@ with partition.axis_rules(mesh):
             assert int(diag.drops) == 0, (bound, wire)
             err = float(jnp.max(jnp.abs(out - ref)))
             assert err < tol, ("interpret", bound, wire, err)
+    # the vector pool (DESIGN.md §1) inside shard_map: resident tables
+    # (row_block=0, r fits VMEM) run the chunked-gather kernel body in
+    # interpret mode on both exchange paths, bit-compatible with the grid
+    for pool, ex in [("vector", "ragged"), ("scalar", "ragged"),
+                     ("vector", "dense")]:
+        cfg_v = cfg.replace(sparse_backend="interpret", pool_mode=pool)
+        out, diag = jax.jit(lambda p, d, i, m, c=cfg_v, ex=ex:
+                            D.forward_distributed(p, c, d, i, m, bound=2,
+                                                  microbatches=4,
+                                                  cache=cache,
+                                                  exchange=ex,
+                                                  return_diag=True)
+                            )(params, dense, idx, mask)
+        assert int(diag.drops) == 0, (pool, ex)
+        err = float(jnp.max(jnp.abs(out - ref)))
+        assert err < 1e-4, (pool, ex, err)
 print("OK")
 """)
 
