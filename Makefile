@@ -5,9 +5,12 @@
 # exchange physically moves more bytes than the dense butterfly at a >= 0.9
 # cache hit rate, if the autotuned cap drops rows, if the DMA-streamed
 # embedding-bag kernel diverges from the VMEM-resident kernel beyond f32
-# tolerance, or if the vector pool mismatches the scalar pool in f32 /
+# tolerance, if the vector pool mismatches the scalar pool in f32 /
 # regresses past 1.2x its stage time — streamed and resident both
-# (DESIGN.md §1).
+# (DESIGN.md §1) — or if the ring-pipelined exchange diverges bitwise
+# from the monolithic fused exchange on ANY codec x exchange mode /
+# regresses past 1.2x mono's k=0 stage time (geomean over the sweep,
+# DESIGN.md §7).
 
 PY ?= python
 

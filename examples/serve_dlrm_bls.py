@@ -9,10 +9,17 @@ Run:  PYTHONPATH=src python examples/serve_dlrm_bls.py [--batches 20]
       [--wire-dtype float32|bfloat16|int8] [--cache-rows N]
       [--exchange dense|ragged|auto] [--ragged-cap N] [--row-block N]
       [--pool-mode auto|vector|scalar]
+      [--exchange-pipeline mono|ring|auto]
 
 With --cache-rows > 0 and --exchange auto, the engine starts on the dense
 butterfly and the cap autotuner flips it to the ragged miss-residual
 exchange (DESIGN.md §6) once the observed live counts justify a cap.
+
+--exchange-pipeline picks how the fused wire buffer moves (DESIGN.md §7):
+'mono' ships it as one all_to_all per exchange, 'ring' as P-1 chunked
+ppermute rounds with per-peer decode/compute overlap — bit-identical
+outputs, the knob trades collective-issue overhead against overlap.
+'auto' resolves to ring when the model axis has >= 4 members.
 
 --row-block picks the embedding-bag kernel regime (DESIGN.md §1): 0 (auto)
 keeps small table blocks VMEM-resident and switches production-size tables
@@ -65,6 +72,12 @@ def main():
                     help="embedding-bag pooling loop (DESIGN.md §1): "
                          "chunked vector gather ('auto'/'vector') vs the "
                          "scalar one-row walk — bit-identical, for A/B")
+    ap.add_argument("--exchange-pipeline", default="auto",
+                    choices=("mono", "ring", "auto"),
+                    help="fused-wire collective (DESIGN.md §7): one "
+                         "all_to_all ('mono') vs P-1 chunked ppermute "
+                         "rounds with per-peer decode overlap ('ring') — "
+                         "bit-identical outputs; 'auto' = ring at P >= 4")
     args = ap.parse_args()
 
     cfg = cb.get_arch("dlrm-kaggle").smoke()
@@ -86,11 +99,13 @@ def main():
         "sync(k=0)": DLRMEngine(params, cfg, batch_size=args.batch_size,
                                 bound=0, microbatches=1,
                                 row_block=args.row_block,
-                                pool_mode=args.pool_mode),
+                                pool_mode=args.pool_mode,
+                                exchange_pipeline=args.exchange_pipeline),
         f"bls(k={args.bound})": DLRMEngine(
             params, cfg, batch_size=args.batch_size, bound=args.bound,
             microbatches=args.microbatches, wire_dtype=args.wire_dtype,
             exchange=args.exchange, ragged_cap=args.ragged_cap,
+            exchange_pipeline=args.exchange_pipeline,
             row_block=args.row_block, pool_mode=args.pool_mode),
     }
     if args.cache_rows > 0:

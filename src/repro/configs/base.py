@@ -132,6 +132,14 @@ class DLRMConfig:
     exchange: str = "auto"
     ragged_cap: int = 0             # rows per destination bucket (0 = dense-
                                     # equivalent cap, i.e. lossless / auto)
+    # --- pipelined exchange (DESIGN.md §7) ---
+    # mono: the whole fused (P, slot_bytes) wire buffer moves as ONE
+    #       all_to_all per exchange
+    # ring: P-1 chunked ppermute rounds over the same buffer, each peer's
+    #       chunk defused/decoded/scattered while the next shift flies —
+    #       bit-identical output to mono per codec
+    # auto: ring when P >= 4 (enough rounds to overlap), mono below
+    exchange_pipeline: str = "auto"
 
     @property
     def n_tables(self) -> int:

@@ -26,6 +26,17 @@ receive side (``unpack_ragged``) — the exchanged bytes become the
 ``wire_stats.live_bytes`` number instead of the dense buffer.  Overflowing
 a bucket drops rows; every packing path returns the drop count so parity
 tests can assert zero and the serving cap autotuner can react.
+
+The fused wire (DESIGN.md §7) collapses the exchange to ONE collective:
+``fuse_wire`` bitcasts every payload leaf — codec rows, scales, row ids,
+counts — into one contiguous ``(P, slot_bytes)`` uint8 bucket per
+destination under a static ``WireLayout`` descriptor, so the whole
+exchange is a single ``all_to_all`` (``alltoallv_fused``) and a BLS ring
+slot is one flat leaf.  ``ring_exchange`` then decomposes that collective
+into P−1 chunked ``ppermute`` rounds: round r+1's shift is issued before
+round r's received chunk is consumed, so per-peer defuse/decode/scatter
+overlaps the next chunk's flight (the sub-collective completion
+granularity the paper's bounded lag is about).
 """
 from __future__ import annotations
 
@@ -106,6 +117,223 @@ def decode_wire(payload, out_dtype=jnp.float32):
         return (q.astype(jnp.float32) *
                 payload["scale"].astype(jnp.float32)).astype(out_dtype)
     return q.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused single-buffer wire (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+# the fused slot is padded to a word multiple so the uint8 buffer can be
+# re-viewed as int32 words by transports that prefer them
+WIRE_ALIGN = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class WireField:
+    """One leaf of the fused wire slot: ``shape`` is per-destination (no
+    leading n_dest axis); ``offset``/``nbytes`` locate its bytes in the
+    slot."""
+    name: str
+    offset: int
+    shape: tuple
+    dtype: str
+
+    @property
+    def nbytes(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n * jnp.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class WireLayout:
+    """Static layout descriptor of a fused exchange buffer: ``n_dest``
+    slots of ``slot_bytes`` bytes, each holding every payload leaf at a
+    fixed offset.  Hashable, so it can close over a jitted stage as a
+    trace-time constant."""
+    n_dest: int
+    fields: tuple  # of WireField, offset-ordered
+    slot_bytes: int
+
+    def field(self, name: str) -> WireField:
+        for f in self.fields:
+            if f.name == name:
+                return f
+        raise KeyError(f"wire layout has no field {name!r}; "
+                       f"have {[f.name for f in self.fields]}")
+
+    @property
+    def names(self) -> tuple:
+        return tuple(f.name for f in self.fields)
+
+    @property
+    def wire_bytes(self) -> int:
+        """Bytes the fused exchange physically moves per member, layout
+        padding included — ONE (P, slot_bytes) buffer, nothing else."""
+        return self.n_dest * self.slot_bytes
+
+
+def wire_layout(n_dest: int, fields: dict) -> WireLayout:
+    """Build a WireLayout from ``{name: (per_dest_shape, dtype)}``.
+    Field order is name-sorted (the order ``jax.tree`` flattens a dict),
+    offsets are packed back to back, and the slot is padded up to
+    ``WIRE_ALIGN`` bytes."""
+    out, off = [], 0
+    for name in sorted(fields):
+        shape, dtype = fields[name]
+        f = WireField(name, off, tuple(int(d) for d in shape),
+                      str(jnp.dtype(dtype)))
+        out.append(f)
+        off += f.nbytes
+    slot = -(-off // WIRE_ALIGN) * WIRE_ALIGN
+    return WireLayout(int(n_dest), tuple(out), slot)
+
+
+def _to_bytes(a):
+    """(n, ...) leaf -> (n, nbytes) uint8 view (bitcast, not a cast)."""
+    flat = a.reshape(a.shape[0], -1)
+    if flat.dtype.itemsize == 1:
+        return jax.lax.bitcast_convert_type(flat, jnp.uint8)
+    b = jax.lax.bitcast_convert_type(flat, jnp.uint8)  # (n, m, itemsize)
+    return b.reshape(flat.shape[0], -1)
+
+
+def _from_bytes(b, shape, dtype):
+    """(n, nbytes) uint8 -> (n, *shape) leaf of ``dtype`` (bitcast)."""
+    dt = jnp.dtype(dtype)
+    if dt.itemsize == 1:
+        out = jax.lax.bitcast_convert_type(b, dt)
+    else:
+        out = jax.lax.bitcast_convert_type(
+            b.reshape(b.shape[0], -1, dt.itemsize), dt)
+    return out.reshape((b.shape[0],) + tuple(shape))
+
+
+def fuse_wire(payload: dict, layout: WireLayout):
+    """Pack a ``{name: (n_dest, ...)}`` payload into ONE contiguous
+    ``(n_dest, slot_bytes)`` uint8 buffer per the layout.  Bitcasts only —
+    the bytes on the wire are exactly the codec's bytes, so fuse/defuse
+    round-trips bit-identically for every dtype."""
+    if sorted(payload) != sorted(layout.names):
+        raise ValueError(f"payload fields {sorted(payload)} != layout "
+                         f"fields {sorted(layout.names)}")
+    parts = []
+    for f in layout.fields:
+        a = payload[f.name]
+        if a.shape[0] != layout.n_dest:
+            raise ValueError(
+                f"field {f.name!r}: leading dim {a.shape[0]} != n_dest "
+                f"{layout.n_dest}")
+        if jnp.dtype(a.dtype) != jnp.dtype(f.dtype):
+            raise ValueError(f"field {f.name!r}: dtype {a.dtype} != layout "
+                             f"{f.dtype}")
+        b = _to_bytes(a)
+        if b.shape[1] != f.nbytes:
+            raise ValueError(f"field {f.name!r}: {b.shape[1]} B != layout "
+                             f"{f.nbytes} B (shape {a.shape} vs {f.shape})")
+        parts.append(b)
+    pad = layout.slot_bytes - sum(f.nbytes for f in layout.fields)
+    if pad:
+        parts.append(jnp.zeros((layout.n_dest, pad), jnp.uint8))
+    return jnp.concatenate(parts, axis=1)
+
+
+def defuse_wire(buf, layout: WireLayout) -> dict:
+    """Unpack a fused buffer back into its ``{name: leaf}`` payload.
+    ``buf`` is either ``(n_src, slot_bytes)`` (a whole exchange) or a
+    single ``(slot_bytes,)`` chunk (one ``ring_exchange`` round), in which
+    case the leaves come back without the leading axis."""
+    single = buf.ndim == 1
+    if single:
+        buf = buf[None]
+    if buf.shape[-1] != layout.slot_bytes:
+        raise ValueError(f"buffer slot is {buf.shape[-1]} B, layout says "
+                         f"{layout.slot_bytes} B")
+    out = {}
+    for f in layout.fields:
+        b = jax.lax.slice_in_dim(buf, f.offset, f.offset + f.nbytes, axis=1)
+        leaf = _from_bytes(b, f.shape, f.dtype)
+        out[f.name] = leaf[0] if single else leaf
+    return out
+
+
+def slot_id_dtype(n_slots: int):
+    """Narrowest signed dtype addressing ``n_slots`` ragged-exchange slots
+    (int16 when it fits, int32 fallback) — ids ship narrow and widen only
+    after the exchange."""
+    return jnp.int16 if n_slots <= 2 ** 15 else jnp.int32
+
+
+def exchange_wire_layout(*, ragged: bool, n_dest: int, cap: int, bs: int,
+                         t_loc: int, embed_dim: int,
+                         wire_dtype: str = "float32",
+                         emb_dtype=jnp.float32,
+                         n_slots: int = 0) -> WireLayout:
+    """The ONE layout both halves of a DLRM exchange agree on.
+
+    ragged: per destination ``cap`` codec rows + narrow slot ids + an
+    int32 count.  dense: the destination's full ``(bs, t_loc)`` pooled
+    block.  ``emb_dtype`` is what a float32 codec ships verbatim (the
+    pooled dtype); lossy codecs fix their own wire dtype.  ``n_slots``
+    is the receive-slot address space the ragged ids must cover
+    (default bs·t_loc) — it alone picks the id width."""
+    wire = canon_wire(wire_dtype)
+    qdt = {"float32": jnp.dtype(emb_dtype), "bfloat16": jnp.bfloat16,
+           "int8": jnp.int8}[wire]
+    if ragged:
+        fields = {"q": ((cap, embed_dim), qdt),
+                  "ids": ((cap,), slot_id_dtype(n_slots or bs * t_loc)),
+                  "counts": ((1,), jnp.int32)}
+        if wire == "int8":
+            fields["scale"] = ((cap, 1), jnp.bfloat16)
+    else:
+        fields = {"q": ((bs, t_loc, embed_dim), qdt)}
+        if wire == "int8":
+            fields["scale"] = ((bs, t_loc, 1), jnp.bfloat16)
+    return wire_layout(n_dest, fields)
+
+
+def alltoallv_fused(buf, axis: str = "model"):
+    """The whole exchange as ONE collective: buf (P, slot_bytes) uint8,
+    destination-major; returns (P, slot_bytes) where row q holds what
+    source q sent here.  Counts, ids, scales all ride inside the slot —
+    no side collectives (vs the up-to-4 per-leaf ``alltoallv_ragged``
+    issues)."""
+    return jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=0,
+                              tiled=True)
+
+
+def ring_exchange(buf, axis: str, n_dest: int, consume, init):
+    """Chunked ppermute butterfly with per-peer consumption.
+
+    buf (P, slot_bytes) destination-major; ``consume(carry, src, chunk)``
+    folds one source's ``(slot_bytes,)`` chunk into the carry.  Round r
+    (r = 1..P−1) ships slot (m+r) mod P with a shift-r ``ppermute`` and
+    delivers source (m−r) mod P's chunk; each round's ppermute is ISSUED
+    before the previous round's chunk is consumed, so chunk decode/compute
+    overlaps the next shift's flight (XLA's latency-hiding scheduler sees
+    them data-independent).  The own-destination chunk never touches the
+    wire.  Consumption order (m, m−1, …, m−P+1 mod P) differs from the
+    monolithic defuse's source order, so ``consume`` must be
+    order-independent — the DLRM consumers write disjoint table slices,
+    which is also why the result is bit-identical to the monolithic
+    exchange."""
+    p = int(n_dest)
+    m = jax.lax.axis_index(axis)
+
+    def take(i):
+        return jax.lax.dynamic_index_in_dim(buf, i, axis=0, keepdims=False)
+
+    # (src, chunk) available for consumption while the next shift flies
+    ready = (m, take(m))
+    out = init
+    for r in range(1, p):
+        perm = [(i, (i + r) % p) for i in range(p)]
+        chunk = jax.lax.ppermute(take(jax.lax.rem(m + r, p)), axis, perm)
+        out = consume(out, *ready)
+        ready = (jax.lax.rem(m - r + p, p), chunk)
+    return consume(out, *ready)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -262,24 +490,48 @@ def unpack_ragged(rows, slot_ids, counts, n_slots: int):
 
 
 def ragged_wire_bytes(n_dest: int, cap: int, embed_dim: int,
-                      wire_dtype: str = "float32") -> int:
-    """Bytes ONE member physically moves through the ragged exchange: the
-    cap-padded pooled rows (+ per-row scales for int8) plus the int32 row
-    ids and per-destination counts.  Compare against
+                      wire_dtype: str = "float32", *,
+                      n_slots: int) -> int:
+    """Bytes ONE member physically moves through the FUSED ragged exchange:
+    the single ``(n_dest, slot_bytes)`` buffer — cap-padded codec rows
+    (+ per-row scales for int8), the narrow slot ids (int16 when
+    ``n_slots`` = bs·t_loc fits, int32 otherwise), the per-destination
+    count, and the layout's alignment padding.  Compare against
     ``wire_stats(...).live_bytes`` (the information-theoretic floor) and
-    ``dense_bytes`` (what the equal-split butterfly moves)."""
-    wire = canon_wire(wire_dtype)
-    row = embed_dim * WIRE_ITEMSIZE[wire] + WIRE_SCALE_BYTES[wire]
-    return n_dest * cap * (row + 4) + n_dest * 4
+    ``dense_wire_bytes`` (what the equal-split butterfly moves)."""
+    return exchange_wire_layout(
+        ragged=True, n_dest=n_dest, cap=cap, bs=0, t_loc=0,
+        embed_dim=embed_dim, wire_dtype=wire_dtype,
+        n_slots=n_slots).wire_bytes
 
 
-def dispatch_stats(counts, cap: int, row_bytes: int) -> A2AVStats:
-    """Padding-waste accounting for one alltoallv call (host-side)."""
+def dense_wire_bytes(n_dest: int, bs: int, t_loc: int, embed_dim: int,
+                     wire_dtype: str = "float32",
+                     emb_dtype=jnp.float32) -> int:
+    """Bytes ONE member moves through the fused dense butterfly: the
+    single-buffer form of the equal-split exchange (codec rows + int8's
+    per-row scales + alignment padding), i.e. the number the ragged
+    exchange must undercut to be worth its ids and counts."""
+    return exchange_wire_layout(
+        ragged=False, n_dest=n_dest, cap=0, bs=bs, t_loc=t_loc,
+        embed_dim=embed_dim, wire_dtype=wire_dtype,
+        emb_dtype=emb_dtype).wire_bytes
+
+
+def dispatch_stats(counts, cap: int, row_bytes: int,
+                   slot_bytes: int = 0) -> A2AVStats:
+    """Padding-waste accounting for one alltoallv call (host-side).
+    ``slot_bytes`` (the fused wire's per-destination slot, from a
+    ``WireLayout``) makes ``payload_bytes`` the single-buffer bytes the
+    fused exchange physically moves — ids, counts and alignment padding
+    included — instead of the rows-only estimate ``cap * row_bytes``."""
     counts = jax.device_get(counts)
-    total_slots = counts.size * cap
+    n_dest = counts.size
+    total_slots = n_dest * cap
     useful = int(counts.sum())
+    payload = n_dest * slot_bytes if slot_bytes else total_slots * row_bytes
     return A2AVStats(
-        payload_bytes=total_slots * row_bytes,
+        payload_bytes=payload,
         useful_bytes=useful * row_bytes,
-        padding_fraction=1.0 - useful / max(total_slots, 1),
+        padding_fraction=1.0 - useful * row_bytes / max(payload, 1),
     )

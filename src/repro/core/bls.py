@@ -26,13 +26,19 @@ overhead: O(k · bytes(payload + side)) per device, independent of table sizes.
 consumed in the same iteration (same-iteration overlap only), semantically
 equal to a synchronous alltoallv.
 
-Ring slots are arbitrary pytrees and may be dtype-HETEROGENEOUS: the ragged
-miss-residual exchange buffers {int8/bf16 codebook, bf16 scales, int32 row
-ids, int32 counts} per slot, shrinking the PAYLOAD part of bound-k memory
-from O(k · B·T·s) to O(k · P·cap·s).  Side data still rides the ring at its
-own size (with a cache the buffered pooled-hit correction stays
-(bs, T_pad, s) per slot) — ``ring_slot_bytes`` does the honest per-leaf
-accounting either way.
+Ring slots are arbitrary pytrees and may be dtype-HETEROGENEOUS.  The DLRM
+exchange used to buffer up to four leaves per slot ({int8/bf16 codebook,
+bf16 scales, row ids, counts}); since the fused wire (DESIGN.md §7) a slot
+is ONE flat (P, slot_bytes) uint8 leaf — codec rows, scales, narrow ids
+and counts bitcast into a static layout — so the scan body's ring
+read/write is a single dynamic-index/update pair instead of one per leaf,
+and the PAYLOAD part of bound-k memory still shrinks from O(k · B·T·s) to
+O(k · P·cap·s) under the ragged exchange.  Under the ring pipeline the
+slot holds the SEND buffer (same bytes): the ppermute rounds and their
+per-peer consumption happen at stage_b time.  Side data still rides the
+ring at its own size (with a cache the buffered pooled-hit correction
+stays (bs, T_pad, s) per slot) — ``ring_slot_bytes`` does the honest
+per-leaf accounting either way.
 
 The drain loop (paper Listing 2's ``while unfinished > 0``) is the epilogue
 over the final ``k`` ring slots.

@@ -182,6 +182,19 @@ def apply_emb_rows(tables, tid, idx, mask, backend: str = "ref",
     return embedding_bag_rows_ref(tables, tid, idx, mask)
 
 
+def resolve_pipeline(pipeline: str, n_shards: int) -> str:
+    """Static exchange-pipeline selection (DESIGN.md §7): 'mono' is one
+    fused all_to_all per exchange; 'ring' decomposes it into P−1 chunked
+    ppermute rounds with per-peer decode/compute overlap.  'auto' goes
+    ring at P >= 4 — below that there are at most two ring rounds to
+    overlap and the monolithic collective's single issue wins."""
+    if pipeline not in ("mono", "ring", "auto"):
+        raise ValueError(f"unknown exchange_pipeline {pipeline!r}")
+    if pipeline == "auto":
+        return "ring" if n_shards >= 4 else "mono"
+    return pipeline
+
+
 def resolve_exchange(exchange: str, *, use_cache: bool, cap: int,
                      dense_rows: int) -> tuple[bool, int]:
     """Static (trace-time) exchange selection -> (use_ragged, cap).
@@ -213,16 +226,20 @@ def ragged_exchange_pack(tables, idx, miss_mask, *, n_dest: int, cap: int,
     surviving index) are packed into cap-padded per-destination buckets
     BEFORE pooling, only the packed rows are bag-pooled, and the pooled
     vectors are codec-encoded.  Returns (payload, drops) with payload
-    {"q" (n_dest, cap, s) [, "scale"], "ids" (n_dest, cap) int32,
-    "counts" (n_dest,) int32}; an id encodes
+    {"q" (n_dest, cap, s) [, "scale"], "ids" (n_dest, cap),
+    "counts" (n_dest, 1) int32 — already the fused wire's per-destination
+    field shape, so the payload fuses as-is}; an id encodes
     sample-within-slice · t_loc + local_table, so the receiver rebuilds the
-    dense layout knowing only the source rank."""
+    dense layout knowing only the source rank.  Ids ship in the narrowest
+    dtype addressing the bs·t_loc slots (``slot_id_dtype``: int16 when it
+    fits) and are widened only after the exchange."""
     b_mb, t_loc, hot = idx.shape
     bs = b_mb // n_dest
     live = (miss_mask > 0).any(axis=-1)                    # (B_mb, t_loc)
     samp = jnp.arange(b_mb, dtype=jnp.int32)[:, None]
     lt = jnp.arange(t_loc, dtype=jnp.int32)[None, :]
-    ids = (samp % bs) * t_loc + lt                         # (B_mb, t_loc)
+    id_dt = a2a_mod.slot_id_dtype(bs * t_loc)
+    ids = ((samp % bs) * t_loc + lt).astype(id_dt)         # (B_mb, t_loc)
     rows = {"idx": idx.reshape(b_mb * t_loc, hot).astype(jnp.int32),
             "mask": miss_mask.reshape(b_mb * t_loc, hot),
             "ids": ids.reshape(-1)}
@@ -239,7 +256,7 @@ def ragged_exchange_pack(tables, idx, miss_mask, *, n_dest: int, cap: int,
                             pool_mode=pool_mode)
     payload = a2a_mod.encode_wire(
         pooled.reshape(n_dest, cap, -1), wire)
-    payload.update(ids=packed["ids"], counts=counts)
+    payload.update(ids=packed["ids"], counts=counts.reshape(n_dest, 1))
     return payload, drops
 
 
@@ -249,16 +266,19 @@ def ragged_exchange_unpack(recv, *, t_loc: int, bs: int,
     dense (bs, t_pad, s) layout the interaction expects.  Bucket q came
     from source rank q, which owns global tables [q·t_loc, (q+1)·t_loc);
     rows nobody sent (all-hit / empty bags) stay exactly zero, matching
-    what they pool to in the dense exchange."""
+    what they pool to in the dense exchange.  Narrow wire ids widen to
+    int32 here, after the exchange."""
     n_dest, cap = recv["ids"].shape
     t_pad = n_dest * t_loc
     rows = a2a_mod.decode_wire(
         {k: v for k, v in recv.items() if k in ("q", "scale")}, out_dtype)
+    ids = recv["ids"].astype(jnp.int32)
     src = jnp.arange(n_dest, dtype=jnp.int32)[:, None]
-    samp = recv["ids"] // t_loc
-    table = src * t_loc + recv["ids"] % t_loc
+    samp = ids // t_loc
+    table = src * t_loc + ids % t_loc
     flat = samp * t_pad + table
-    out = a2a_mod.unpack_ragged(rows, flat, recv["counts"], bs * t_pad)
+    out = a2a_mod.unpack_ragged(rows, flat, recv["counts"].reshape(-1),
+                                bs * t_pad)
     return out.reshape(bs, t_pad, rows.shape[-1])
 
 
@@ -300,6 +320,7 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                         cache=None, wire_dtype: Optional[str] = None,
                         exchange: Optional[str] = None,
                         ragged_cap: Optional[int] = None,
+                        exchange_pipeline: Optional[str] = None,
                         row_block: Optional[int] = None,
                         pool_mode: Optional[str] = None,
                         plan=None,
@@ -329,7 +350,20 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
     per-destination buckets and ships them through a counts-aware
     alltoallv (DESIGN.md §6) — the exchanged bytes AND the BLS ring slots
     shrink from O(B·T) to O(P·cap); 'auto' resolves per
-    :func:`resolve_exchange`.  ``row_block`` (default cfg.row_block)
+    :func:`resolve_exchange`.
+
+    Either way the payload rides the FUSED wire (DESIGN.md §7): every
+    leaf — codec rows, scales, slot ids, counts — is bitcast into one
+    contiguous ``(P, slot_bytes)`` uint8 buffer per destination, so one
+    exchange is exactly one collective and a BLS ring slot is one flat
+    leaf.  ``exchange_pipeline`` (default cfg.exchange_pipeline) picks how
+    that buffer moves: 'mono' is the single fused all_to_all; 'ring'
+    decomposes it into P−1 chunked ppermute rounds consumed per peer
+    inside stage_b — round r+1's shift is issued while round r's chunk is
+    defused, codec-decoded, scattered and pooled-hit-corrected —
+    bit-identical output to 'mono' per codec (disjoint table slices per
+    source); 'auto' resolves per :func:`resolve_pipeline`.
+    ``row_block`` (default cfg.row_block)
     selects the embedding-bag kernel regime on BOTH pooling paths
     (DESIGN.md §1: 0 auto — VMEM-resident table blocks when they fit,
     double-buffered DMA row streaming otherwise); ``pool_mode`` (default
@@ -385,6 +419,15 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
         use_cache=use_cache,
         cap=ragged_cap if ragged_cap is not None else cfg.ragged_cap,
         dense_rows=dense_rows)
+    pipe = resolve_pipeline(
+        exchange_pipeline if exchange_pipeline is not None
+        else cfg.exchange_pipeline, n_shards)
+    # the ONE static layout both exchange halves (and the BLS ring slot)
+    # agree on: the whole payload as a (P, slot_bytes) uint8 buffer
+    layout = a2a_mod.exchange_wire_layout(
+        ragged=use_ragged, n_dest=n_shards, cap=cap, bs=bs_g,
+        t_loc=t_loc_g, embed_dim=params["tables"].shape[2],
+        wire_dtype=wire, emb_dtype=emb_dtype)
     if plan is not None and use_ragged:
         raise ValueError(
             "forward_distributed: precomputed stream plans describe the "
@@ -444,38 +487,79 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                 pooled = apply_emb(tables, ix_loc, miss_mk, backend,
                                    row_block=rblk, pool_mode=pool,
                                    plan=plan_j)
-                payload = a2a_mod.encode_wire(pooled, wire)
+                # destination-major: all_to_all's split groups are the
+                # leading bs-row blocks, a free reshape
+                payload = jax.tree.map(
+                    lambda a: a.reshape(n_shards, bs, *a.shape[1:]),
+                    a2a_mod.encode_wire(pooled, wire))
+            # one flat uint8 leaf per destination: the whole exchange is
+            # one collective, and the BLS ring buffers a single array
+            buf = a2a_mod.fuse_wire(payload, layout)
             # member m's dense rows of microbatch j (matches a2a delivery)
             dm = jax.lax.dynamic_slice_in_dim(d, m * bs, bs, axis=0)
             z0 = apply_mlp(bot, dm)                   # (bs, s)
-            return payload, (z0, hits_m)
+            return buf, (z0, hits_m)
 
-        def collective(payload):
+        def collective(buf):
+            if pipe == "ring":
+                # the exchange is deferred to stage_b's ppermute rounds:
+                # the send buffer itself rides the ring slot, so each
+                # peer's chunk is decoded the moment it lands instead of
+                # after the whole collective
+                return buf
+            # the fused butterfly: ONE all_to_all moves codec rows,
+            # scales, ids and counts together
+            return a2a_mod.alltoallv_fused(buf, "model")
+
+        def chunk_slice(chunk, hits, src):
+            """One source's contribution as its dense (bs, t_loc, s)
+            table slice: defuse + codec-decode (+ ragged scatter) + that
+            source's pooled-hit correction.  Sources own disjoint table
+            ranges, so per-peer consumption composes bit-identically to
+            the monolithic defuse."""
+            f = a2a_mod.defuse_wire(chunk, layout)
             if use_ragged:
-                # counts-aware alltoallv over cap-padded buckets — the
-                # wire moves O(P·cap) rows instead of the dense buffer
-                bucket = {k: v for k, v in payload.items() if k != "counts"}
-                recv, rcounts = a2a_mod.alltoallv_ragged(bucket,
-                                                         payload["counts"],
-                                                         "model")
-                recv["counts"] = rcounts
-                return recv
-            # butterfly: batch split / table concat  -> (bs, t_pad, s);
-            # the quantized codebook (and per-row scales) IS the wire format
-            return jax.tree.map(
-                lambda a: jax.lax.all_to_all(a, "model", split_axis=0,
-                                             concat_axis=1, tiled=True),
-                payload)
+                # the chunk is a one-source exchange: with n_dest=1 the
+                # shared unpack's flat slot reduces to exactly the
+                # shipped id (samp·t_loc + local_table), so the id
+                # contract lives in ONE place
+                sl = ragged_exchange_unpack(
+                    jax.tree.map(lambda a: a[None], f), t_loc=t_loc,
+                    bs=bs, out_dtype=emb_dtype)
+            else:
+                sl = a2a_mod.decode_wire(f, emb_dtype)   # (bs, t_loc, s)
+            if use_cache:
+                sl = sl + jax.lax.dynamic_slice_in_dim(
+                    hits, src * t_loc, t_loc, axis=1)
+            return sl
 
         def stage_b(recv, side):
             z0, hits = side
-            if use_ragged:
-                emb_all = ragged_exchange_unpack(recv, t_loc=t_loc, bs=bs,
-                                                 out_dtype=emb_dtype)
+            if pipe == "ring":
+                # chunked ppermute butterfly: round r+1's shift is in
+                # flight while round r's chunk is defused, decoded,
+                # scattered and hit-corrected into its table slice
+                def consume(out, src, chunk):
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        out, chunk_slice(chunk, hits, src), src * t_loc,
+                        axis=1)
+
+                emb_all = a2a_mod.ring_exchange(
+                    recv, "model", n_shards, consume,
+                    jnp.zeros((bs, n_shards * t_loc,
+                               layout.field("q").shape[-1]), emb_dtype))
             else:
-                emb_all = a2a_mod.decode_wire(recv, emb_dtype)
-            if use_cache:
-                emb_all = emb_all + hits              # pooled-hit correction
+                f = a2a_mod.defuse_wire(recv, layout)
+                if use_ragged:
+                    emb_all = ragged_exchange_unpack(
+                        f, t_loc=t_loc, bs=bs, out_dtype=emb_dtype)
+                else:
+                    # (P, bs, t_loc, s) source-major -> (bs, t_pad, s)
+                    q = a2a_mod.decode_wire(f, emb_dtype)
+                    emb_all = q.transpose(1, 0, 2, 3).reshape(
+                        bs, n_shards * t_loc, q.shape[-1])
+                if use_cache:
+                    emb_all = emb_all + hits          # pooled-hit correction
             t = cfg.n_tables
             z = jnp.concatenate([z0[:, None, :], emb_all[:, :t]], axis=1)
             inter = dot_interaction(z)

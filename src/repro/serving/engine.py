@@ -53,6 +53,12 @@ class DLRMEngine:
     recommended cap (re-jitting the step), switching between the ragged
     alltoallv and the dense butterfly as profitability flips.
 
+    ``exchange_pipeline`` (default: cfg) picks how the fused wire buffer
+    moves (DESIGN.md §7): 'mono' is one all_to_all per exchange, 'ring'
+    the chunked ppermute butterfly with per-peer decode/compute overlap,
+    and 'auto' resolves to ring when the model axis has P >= 4 members
+    (enough rounds to overlap) and mono below.
+
     ``plan_pipeline=True`` overlaps the embedding-bag stream-plan build
     with compute (DESIGN.md §1): each flush asynchronously dispatches the
     incoming batch's index-bucketing plan (``build_forward_plans``) and
@@ -70,7 +76,9 @@ class DLRMEngine:
                  bound: int = 0, microbatches: int = 1,
                  wire_dtype: Optional[str] = None, cache=None,
                  exchange: Optional[str] = None,
-                 ragged_cap: Optional[int] = None, retune_every: int = 8,
+                 ragged_cap: Optional[int] = None,
+                 exchange_pipeline: Optional[str] = None,
+                 retune_every: int = 8,
                  row_block: Optional[int] = None,
                  pool_mode: Optional[str] = None,
                  plan_pipeline: bool = False):
@@ -82,6 +90,7 @@ class DLRMEngine:
         self.exchange = exchange or cfg.exchange
         self.ragged_cap = ragged_cap if ragged_cap is not None \
             else cfg.ragged_cap
+        self.exchange_pipeline = exchange_pipeline or cfg.exchange_pipeline
         self.retune_every = retune_every
         # embedding-bag kernel regime (DESIGN.md §1): 0 auto — resident
         # table blocks when they fit VMEM, DMA row streaming otherwise
@@ -113,6 +122,7 @@ class DLRMEngine:
     def _make_step(self, bound, microbatches):
         cfg, wire = self.cfg, self.wire_dtype
         ex, cap = self.exchange, self.ragged_cap
+        pipe = self.exchange_pipeline
         rblk, pool = self.row_block, self.pool_mode
         # diagnostics cost a full-batch miss re-probe + two collectives:
         # trace them only when something consumes them — drop monitoring
@@ -146,8 +156,9 @@ class DLRMEngine:
             return _finish(dlrm_mod.forward_distributed(
                 params, cfg, dense, idx, mask, bound=bound,
                 microbatches=microbatches, cache=cache, wire_dtype=wire,
-                exchange=ex, ragged_cap=cap, row_block=rblk,
-                pool_mode=pool, plan=plan, return_diag=diag_on))
+                exchange=ex, ragged_cap=cap, exchange_pipeline=pipe,
+                row_block=rblk, pool_mode=pool, plan=plan,
+                return_diag=diag_on))
 
         if self.cache is None:
             if self.plan_pipeline:
@@ -320,32 +331,26 @@ class DLRMEngine:
 
     def slot_bytes(self) -> int:
         """Bytes ONE BLS ring slot buffers under the current engine
-        configuration, summed from the shapes/dtypes the ring actually
-        holds: the wire codec's itemsize (+ bf16 scales for int8), the
-        cap-bounded ragged buckets (+ int32 ids/counts) when the ragged
-        exchange is active, and the buffered side activations."""
+        configuration.  The exchange payload is the fused wire buffer
+        (DESIGN.md §7) — one flat (P, slot_bytes) uint8 leaf whose layout
+        already accounts codec rows, int8 scales, narrow slot ids, counts
+        and alignment padding; the same buffer rides the slot whether the
+        pipeline is mono (the received buffer) or ring (the send buffer
+        awaiting its ppermute rounds).  Side activations add their own
+        per-leaf bytes."""
         cfg = self.cfg
         p, t_pad, bs, dense_rows = self._exchange_geometry()
-        wire = a2a_mod.canon_wire(self.wire_dtype)
-        qdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
-               "int8": jnp.int8}[wire]
         s = cfg.embed_dim
         use_cache = self.cache is not None and self.cache.cache_rows > 0
         use_ragged, cap = dlrm_mod.resolve_exchange(
             self.exchange, use_cache=use_cache, cap=self.ragged_cap,
             dense_rows=dense_rows)
-        if use_ragged:
-            recv = {"q": jax.ShapeDtypeStruct((p, cap, s), qdt),
-                    "ids": jax.ShapeDtypeStruct((p, cap), jnp.int32),
-                    "counts": jax.ShapeDtypeStruct((p,), jnp.int32)}
-            if wire == "int8":
-                recv["scale"] = jax.ShapeDtypeStruct((p, cap, 1),
-                                                     jnp.bfloat16)
-        else:
-            recv = {"q": jax.ShapeDtypeStruct((bs, t_pad, s), qdt)}
-            if wire == "int8":
-                recv["scale"] = jax.ShapeDtypeStruct((bs, t_pad, 1),
-                                                     jnp.bfloat16)
+        layout = a2a_mod.exchange_wire_layout(
+            ragged=use_ragged, n_dest=p, cap=cap, bs=bs, t_loc=t_pad // p,
+            embed_dim=s, wire_dtype=self.wire_dtype,
+            emb_dtype=self.params["tables"].dtype)
+        recv = {"buf": jax.ShapeDtypeStruct((p, layout.slot_bytes),
+                                            jnp.uint8)}
         side = [jax.ShapeDtypeStruct((bs, s), jnp.dtype(cfg.dtype))]
         if use_cache:
             side.append(jax.ShapeDtypeStruct(

@@ -189,17 +189,25 @@ class TestRaggedMachinery:
             True, True, True, False, False, False]
 
     def test_ragged_wire_bytes_accounting(self):
-        # cap rows of (s int8 + bf16 scale + int32 id) per dest + counts
-        assert A2A.ragged_wire_bytes(4, 8, 16, "int8") == \
-            4 * 8 * (16 + 2 + 4) + 4 * 4
-        assert A2A.ragged_wire_bytes(2, 4, 8, "bfloat16") == \
-            2 * 4 * (16 + 4) + 2 * 4
+        # the FUSED single-buffer bytes: cap codec rows (+ bf16 scales for
+        # int8) + cap narrow slot ids + one int32 count per destination,
+        # padded to the wire alignment
+        assert A2A.ragged_wire_bytes(4, 8, 16, "int8", n_slots=24) == \
+            4 * (8 * (16 + 2) + 8 * 2 + 4)
+        assert A2A.ragged_wire_bytes(2, 4, 8, "bfloat16", n_slots=24) == \
+            2 * (4 * 16 + 4 * 2 + 4)
+        # past the int16 address space the ids widen to int32
+        assert A2A.ragged_wire_bytes(2, 4, 8, "bfloat16",
+                                     n_slots=2 ** 15 + 1) == \
+            2 * (4 * 16 + 4 * 4 + 4)
+        # odd byte totals pad up to WIRE_ALIGN
+        assert A2A.ragged_wire_bytes(1, 1, 1, "int8", n_slots=4) % \
+            A2A.WIRE_ALIGN == 0
 
     @pytest.mark.parametrize("wire", ["float32", "bfloat16", "int8"])
     def test_ragged_wire_bytes_matches_real_payload(self, wire):
-        # drift guard: the analytic formula must equal the per-leaf bytes
-        # of a payload the pack actually builds
-        from repro.core.bls import ring_slot_bytes
+        # drift guard: the analytic formula must equal the bytes of the
+        # fused buffer actually built from a packed payload
         p, bs, t_loc, hot, s, cap = 4, 8, 3, 4, 16, 10
         tables = jax.random.normal(jax.random.PRNGKey(0), (t_loc, 50, s))
         idx = jax.random.randint(jax.random.PRNGKey(1),
@@ -207,8 +215,14 @@ class TestRaggedMachinery:
         mask = jnp.ones((p * bs, t_loc, hot), jnp.float32)
         payload, _ = D.ragged_exchange_pack(tables, idx, mask, n_dest=p,
                                             cap=cap, wire=wire)
-        assert ring_slot_bytes(payload) == \
-            A2A.ragged_wire_bytes(p, cap, s, wire)
+        # ids ship narrow: bs * t_loc = 24 slots fit int16
+        assert payload["ids"].dtype == jnp.int16
+        layout = A2A.exchange_wire_layout(
+            ragged=True, n_dest=p, cap=cap, bs=bs, t_loc=t_loc,
+            embed_dim=s, wire_dtype=wire)
+        buf = A2A.fuse_wire(payload, layout)
+        assert buf.size == layout.wire_bytes == \
+            A2A.ragged_wire_bytes(p, cap, s, wire, n_slots=bs * t_loc)
 
 
 # ---------------------------------------------------------------------------
