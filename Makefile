@@ -14,7 +14,7 @@
 
 PY ?= python
 
-.PHONY: test bench bench-smoke
+.PHONY: test bench bench-smoke chaos-smoke
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -24,3 +24,12 @@ bench:
 
 bench-smoke:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/bench_dlrm.py --smoke
+
+# chaos gate (DESIGN.md §8): a transient delay within bound k's slack
+# leaves served CTRs bit-identical (and the schedule simulator predicted
+# the absorption); degraded serving ledgers its fallback bags EXACTLY
+# (ServeStats.approx_rows == the host-side count from the same plan);
+# a planned crash drives evict -> remesh -> repartition -> re-jit ->
+# replay with zero requests lost.
+chaos-smoke:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/bench_faults.py --smoke

@@ -1,0 +1,222 @@
+"""Chaos benchmark + CI gate (DESIGN.md §8).
+
+Drives a DLRMEngine through the three fault regimes of one deterministic
+``FaultPlan`` and measures what each costs:
+
+  * transient (a delay spike within bound k's slack) — must be absorbed:
+    CTRs BIT-identical to the fault-free run, and ``predict_absorption``
+    must have said so in advance;
+  * degraded serving (a member masked out, bags from cache/fallback) —
+    the quality loss must be ledgered EXACTLY (``ServeStats.approx_rows``
+    equals the host-side count), and the degraded flush must not cost
+    more than the exact one;
+  * crash — the evict -> remesh -> repartition -> re-jit -> replay loop
+    must lose ZERO requests; recovery wall time is the headline number.
+
+``chaos_smoke`` is the ``make chaos-smoke`` CI gate; ``run`` returns the
+machine-readable payload for BENCH_dlrm.json's ``faults`` key.  Both
+spawn the measurement in a subprocess with a forced 8-device host pod
+(the parent process has already locked its device count).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+
+def _chaos_payload():
+    """Measure in THIS process (spawned with forced host devices)."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.base import DLRMConfig
+    from repro.data.synthetic import make_batch
+    from repro.models import dlrm as D
+    from repro.runtime import elastic
+    from repro.runtime.faults import (FaultInjector, FaultPlan,
+                                      predict_absorption)
+    from repro.serving import hot_cache as hc
+    from repro.serving.engine import DLRMEngine
+    from repro.sharding import partition
+
+    cfg = DLRMConfig("chaos", table_sizes=(40, 60, 30, 50, 20, 70),
+                     embed_dim=8, n_dense_features=4, bottom_mlp=(16, 8),
+                     top_mlp=(16, 1), sparse_backend="ref")
+    P = 4
+    mesh = elastic.make_mesh_from(jax.devices()[:P], model=P)
+    params = D.init_dlrm(jax.random.PRNGKey(0), cfg, n_shards=P)
+    B = 48
+    t_pad = D.padded_tables(cfg, P)
+    batches = [make_batch(cfg, B, t_pad=t_pad, seed=7, step=s)
+               for s in range(4)]
+    cache = hc.build_from_batch(params["tables"],
+                                jnp.asarray(batches[0].idx),
+                                jnp.asarray(batches[0].mask), 8)
+
+    def serve(faults=None, timed=False, **kw):
+        eng = DLRMEngine(params, cfg, batch_size=B, bound=2,
+                         microbatches=4, exchange="dense",
+                         faults=faults, **kw)
+        outs, flush_ms = [], []
+        with partition.axis_rules(mesh):
+            for b in batches:
+                rows = list(zip(b.dense, b.idx, b.mask))
+                for d, i, m in rows[:-1]:
+                    eng.submit(d, i, m)
+                t0 = time.perf_counter()
+                outs.append(eng.submit(*rows[-1]))
+                flush_ms.append((time.perf_counter() - t0) * 1e3)
+        # drop the compile flush from the timing
+        return np.concatenate(outs), eng, (min(flush_ms[1:])
+                                           if timed else None)
+
+    clean, _, clean_ms = serve(timed=True)
+
+    # -- transient spike within bound 2's slack ---------------------------
+    plan = FaultPlan.none(P, 8).with_spike(2, 1, 0.002)
+    pred = predict_absorption(plan, 2)
+    faulted, eng_t, _ = serve(faults=FaultInjector(plan), deadline_s=30.0)
+    transient = {
+        "bound": 2,
+        "predicted_absorbed": bool(pred.absorbed),
+        "predicted_blocked_ms": pred.blocked_s * 1e3,
+        "injected_ms": eng_t.faults.injected_delay_s * 1e3,
+        "bit_identical": bool((faulted == clean).all()),
+    }
+
+    # -- degraded serving: explicit degrade(), exact quality ledger -------
+    deg = (1,)
+    dcol = np.repeat(np.asarray([1 if i in deg else 0 for i in range(P)]),
+                     t_pad // P)
+    expected_rows = 0
+    for b in batches:
+        miss = np.asarray(hc.miss_mask_of(cache.slot_of,
+                                          jnp.asarray(b.idx),
+                                          jnp.asarray(b.mask)))
+        expected_rows += int(((miss > 0).any(-1) * dcol[None]).sum())
+    eng_d = DLRMEngine(params, cfg, batch_size=B, bound=2, microbatches=4,
+                       exchange="dense", cache=cache,
+                       degraded_fallback="mean")
+    eng_d.degrade(deg)
+    deg_ms = []
+    with partition.axis_rules(mesh):
+        for b in batches:
+            rows = list(zip(b.dense, b.idx, b.mask))
+            for d, i, m in rows[:-1]:
+                eng_d.submit(d, i, m)
+            t0 = time.perf_counter()
+            eng_d.submit(*rows[-1])
+            deg_ms.append((time.perf_counter() - t0) * 1e3)
+    degrade = {
+        "members": list(deg),
+        "approx_rows": eng_d.stats.approx_rows,
+        "expected_rows": expected_rows,
+        "exact_ledger": eng_d.stats.approx_rows == expected_rows,
+        "degraded_batches": eng_d.stats.degraded_batches,
+        "clean_flush_ms": clean_ms,
+        "degraded_flush_ms": min(deg_ms[1:]),
+    }
+
+    # -- crash: evict -> remesh -> repartition -> re-jit -> replay --------
+    plan = FaultPlan.none(P, 8).with_crash(1, at_step=2)
+    out, eng_c, _ = serve(faults=FaultInjector(plan), deadline_s=30.0,
+                          on_deadline="evict", retry_backoff_s=0.001)
+    ref = np.concatenate([
+        np.asarray(jax.nn.sigmoid(D.forward_local(
+            params, cfg, jnp.asarray(b.dense), jnp.asarray(b.idx),
+            jnp.asarray(b.mask)))) for b in batches])
+    recovery = {
+        "requests": int(out.shape[0]),
+        "expected": 4 * B,
+        "zero_lost": int(out.shape[0]) == 4 * B,
+        "evictions": eng_c.stats.evictions,
+        "replays": eng_c.stats.replays,
+        "recovery_ms": eng_c.stats.recovery_s * 1e3,
+        "survivor_members": int(eng_c._mesh.shape["model"]),
+        "max_err_vs_local": float(np.abs(out - ref).max()),
+    }
+    return {"transient": transient, "degrade": degrade,
+            "recovery": recovery}
+
+
+def _spawn_payload(devices: int = 8, timeout: int = 900) -> dict:
+    here = os.path.abspath(__file__)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") +
+        f" --xla_force_host_platform_device_count={devices}").strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(here), "..", "src"),
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    r = subprocess.run([sys.executable, here, "--chaos-payload"],
+                       env=env, capture_output=True, text=True,
+                       timeout=timeout)
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"chaos payload run failed:\n{r.stdout}\n{r.stderr}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def chaos_smoke() -> dict:
+    """CI gate (``make chaos-smoke``): the three acceptance clauses of
+    DESIGN.md §8 at smoke scale."""
+    p = _spawn_payload()
+    t, d, r = p["transient"], p["degrade"], p["recovery"]
+    assert t["predicted_absorbed"], (
+        f"simulator no longer predicts bound {t['bound']} absorbs the "
+        f"transient plan: {t}")
+    assert t["bit_identical"], (
+        f"transient within bound {t['bound']} changed served CTRs: {t}")
+    print(f"chaos-smoke OK: transient {t['injected_ms']:.0f}ms absorbed "
+          f"at bound {t['bound']}, CTRs bit-identical")
+    assert d["exact_ledger"], (
+        f"approx_rows ledger drifted from the plan: served "
+        f"{d['approx_rows']}, host count {d['expected_rows']}")
+    print(f"chaos-smoke OK: degraded serving ledgered "
+          f"{d['approx_rows']} fallback bags exactly "
+          f"(flush {d['degraded_flush_ms']:.1f}ms vs clean "
+          f"{d['clean_flush_ms']:.1f}ms)")
+    assert r["zero_lost"] and r["evictions"] == 1 and r["replays"] == 1, (
+        f"crash recovery lost requests or skipped the replay: {r}")
+    assert r["max_err_vs_local"] < 2e-5, (
+        f"post-eviction CTRs diverged from the local oracle: {r}")
+    print(f"chaos-smoke OK: crash evicted in {r['recovery_ms']:.0f}ms, "
+          f"replayed, {r['requests']}/{r['expected']} requests served "
+          f"on {r['survivor_members']} survivors")
+    return p
+
+
+def run() -> dict:
+    """BENCH_dlrm.json ``faults`` payload (recovery time, degraded-mode
+    flush cost, absorption prediction)."""
+    return _spawn_payload()
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate instead of the payload print")
+    ap.add_argument("--chaos-payload", action="store_true",
+                    help="internal: measure in THIS process (spawned "
+                         "with forced host devices) and print JSON")
+    args = ap.parse_args(argv)
+    if args.chaos_payload:
+        print(json.dumps(_chaos_payload()))
+    elif args.smoke:
+        chaos_smoke()
+    else:
+        print(json.dumps(run(), indent=2))
+
+
+if __name__ == "__main__":
+    # allow `python benchmarks/bench_faults.py` from the repo root
+    _ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+    sys.path.insert(0, _ROOT)
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    main()

@@ -17,14 +17,16 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from benchmarks import (bench_alltoallv, bench_dlrm, bench_kernels,
-                            bench_sim)
+    from benchmarks import (bench_alltoallv, bench_dlrm, bench_faults,
+                            bench_kernels, bench_sim)
 
     bench_sim.run()            # paper Figs 7 & 8 (+ straggler control)
     bench_alltoallv.main()     # paper Fig 6 analogue
     dlrm_payload = bench_dlrm.run()   # §VI-B + fused sparse hot path
     # kernel-level chunked-vs-recurrent + embedding-bag resident/streamed
     dlrm_payload["kernels"] = bench_kernels.main()
+    # chaos: absorption, degraded-mode flush cost, eviction recovery time
+    dlrm_payload["faults"] = bench_faults.run()
 
     # perf trajectory: BENCH_dlrm.json keyed by git SHA
     path = bench_dlrm.write_bench_json(dlrm_payload)

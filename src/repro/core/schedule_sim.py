@@ -97,10 +97,17 @@ class SimResult:
     mean_latency: float          # paper's per-batch latency metric
     throughput: float            # paper's batches/s metric (sum over procs)
     max_lag: int                 # max iteration distance between 2 processes
+    # cross-member stall: seconds each process spent waiting on exchange
+    # data (ready > own clock at the tail wait) — the quantity a bound of
+    # k exists to drive to zero, and what runtime/faults.predict_absorption
+    # compares against the fault-free schedule to call a plan "masked"
+    blocked: Optional[np.ndarray] = None     # (P,) stall seconds
+    blocked_s: float = 0.0                   # sum over processes
 
     def summary(self) -> dict:
         return {"makespan": self.makespan, "mean_latency": self.mean_latency,
-                "throughput": self.throughput, "max_lag": self.max_lag}
+                "throughput": self.throughput, "max_lag": self.max_lag,
+                "blocked_s": self.blocked_s}
 
 
 MPI_ENQUEUE_OVERHEAD = 2.0e-4  # s per outstanding request (paper §III-A (a))
@@ -119,6 +126,7 @@ def simulate(w: Workload, bound: int, *, backend: str = "bls",
     send_done = np.full((p_, n_), np.inf)  # all puts of (p, i) on the wire
     consume = np.full((p_, n_), np.inf)    # top-MLP completion of (p, i)
     last_wire_free = np.zeros(p_)          # MPI progress-thread serialisation
+    blocked = np.zeros(p_)                 # stall at the tail wait, per proc
 
     def data_ready(j: int) -> float:
         return float(np.max(send_done[:, j]))
@@ -142,12 +150,14 @@ def simulate(w: Workload, bound: int, *, backend: str = "bls",
         if j >= 0:
             ready = data_ready(j)
             for p in range(p_):
+                blocked[p] += max(ready - clock[p], 0.0)
                 clock[p] = max(clock[p], ready) + w.t_top[p, j]
                 consume[p, j] = clock[p]
 
     for j in range(max(n_ - k, 0), n_):  # drain loop
         ready = data_ready(j)
         for p in range(p_):
+            blocked[p] += max(ready - clock[p], 0.0)
             clock[p] = max(clock[p], ready) + w.t_top[p, j]
             consume[p, j] = clock[p]
 
@@ -172,6 +182,7 @@ def simulate(w: Workload, bound: int, *, backend: str = "bls",
         mean_latency=float(np.mean(per_proc)),
         throughput=float(np.sum(n_ / consume[:, -1])),
         max_lag=max_lag,
+        blocked=blocked, blocked_s=float(blocked.sum()),
     )
 
 

@@ -141,11 +141,16 @@ def apply_emb(tables, idx, mask, backend: str = "ref",
 @dataclasses.dataclass
 class ExchangeDiag:
     """Per-step exchange diagnostics (the cap autotuner's observation).
-    ``live_max``/``drops`` are traced scalars; the exchange decision and
-    its static geometry ride as pytree metadata so the whole object can
-    cross a jit boundary."""
+    ``live_max``/``drops``/``approx_rows`` are traced scalars; the
+    exchange decision and its static geometry ride as pytree metadata so
+    the whole object can cross a jit boundary.  ``approx_rows`` is the
+    degraded-serving quality ledger: the number of live (sample, table)
+    bags whose miss residual was served from the fallback because its
+    owning member was excluded (``degraded_members``) — quality loss is
+    accounted, never silent."""
     live_max: object        # int32 scalar: max per-(microbatch, dest) live rows
     drops: object           # int32 scalar: rows the cap dropped (0 when dense)
+    approx_rows: object = 0  # int32 scalar: bags served from the fallback
     exchange: str = "dense"  # resolved decision: dense | ragged | local
     cap: int = 0
     dense_rows: int = 0     # what the dense butterfly moves per destination
@@ -153,7 +158,8 @@ class ExchangeDiag:
 
 jax.tree_util.register_pytree_node(
     ExchangeDiag,
-    lambda d: ((d.live_max, d.drops), (d.exchange, d.cap, d.dense_rows)),
+    lambda d: ((d.live_max, d.drops, d.approx_rows),
+               (d.exchange, d.cap, d.dense_rows)),
     lambda meta, leaves: ExchangeDiag(*leaves, *meta))
 
 
@@ -324,6 +330,8 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                         row_block: Optional[int] = None,
                         pool_mode: Optional[str] = None,
                         plan=None,
+                        degraded_members: tuple = (),
+                        degraded_fallback: str = "zero",
                         return_diag: bool = False):
     """dense:(B, n_dense) idx/mask:(B, T_pad, hot); batch B sharded over
     (pod, data) [dense replicated across ``model`` within a data row, as the
@@ -376,8 +384,18 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
     sits between exchange and pool.  Plans describe the DENSE pooling
     path; combining one with a ragged exchange (whose packed row set is
     data-dependent) raises.  ``return_diag=True`` additionally returns
-    {live_max, drops, exchange, cap, dense_rows} — the signal the serving
-    cap autotuner consumes.
+    {live_max, drops, approx_rows, exchange, cap, dense_rows} — the
+    signals the serving cap autotuner and degraded-mode ledger consume.
+
+    ``degraded_members`` (model-axis positions) serves AROUND slow or
+    suspect members instead of waiting on them: their table shards'
+    exchange contribution is masked out and each affected bag's miss
+    residual is served from ``degraded_fallback`` — 'zero' (the residual
+    vanishes; cache hits, which never ride the wire, still land) or
+    'mean' (the owning table's mean row scaled by the residual weight
+    sum; needs the cache layout's replicated idx/mask).  The quality
+    loss is never silent: ``approx_rows`` counts exactly the live
+    (sample, table) bags served from the fallback.
     """
     mesh = partition.current_mesh()
     if mesh is None or "model" not in mesh.axis_names:
@@ -390,7 +408,8 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                 stacklevel=2)
         logits = forward_local(params, cfg, dense, idx, mask)
         if return_diag:
-            return logits, ExchangeDiag(jnp.int32(0), jnp.int32(0), "local")
+            return logits, ExchangeDiag(jnp.int32(0), jnp.int32(0),
+                                        jnp.int32(0), "local")
         return logits
     n_shards = mesh.shape["model"]
     baxes = _batch_axes(mesh)
@@ -435,6 +454,33 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
             "dependent row set per step and plans its own buckets — "
             "build plans only when the exchange resolves dense")
     has_plan = plan is not None
+    deg = tuple(sorted({int(d) for d in degraded_members}))
+    fb_rows = None
+    if deg:
+        if degraded_fallback not in ("zero", "mean"):
+            raise ValueError(
+                f"unknown degraded_fallback {degraded_fallback!r}")
+        if any(d < 0 or d >= n_shards for d in deg):
+            raise ValueError(
+                f"degraded_members {deg} out of range for {n_shards} "
+                "members")
+        if len(deg) >= n_shards:
+            raise ValueError(
+                "forward_distributed: every member degraded — nothing "
+                "would serve the exchange; evict instead")
+        if degraded_fallback == "mean":
+            if not use_cache:
+                raise ValueError(
+                    "degraded_fallback='mean' needs the cache layout: the "
+                    "fallback weight sums come from each member's own "
+                    "replicated (idx, mask) slice over ALL tables, which "
+                    "only the cache path ships — use 'zero' or serve "
+                    "with a cache")
+            # per-table profile row (replicated): what a deployment keeps
+            # as the cold-start embedding — bag ~= mean row * weight sum
+            fb_rows = params["tables"].astype(jnp.float32).mean(axis=1) \
+                .astype(emb_dtype)
+    deg_mask = [1 if i in deg else 0 for i in range(n_shards)]
 
     def shard_fn(tables, bot, top, dense_s, idx_s, mask_s, *extra):
         # per-shard shapes: tables (t_loc,R,s); dense (B_row, n_dense)
@@ -475,6 +521,16 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                 mk_m = jax.lax.dynamic_slice_in_dim(mk, m * bs, bs, axis=0)
                 hits_m = hc_mod.pooled_hits_of(hot_rows, slot_of, ix_m,
                                                mk_m).astype(emb_dtype)
+                if deg and fb_rows is not None:
+                    # fold the mean-row fallback into the post-exchange
+                    # hit correction: degraded tables' residuals never
+                    # arrive, so approximate each as mean_row * (residual
+                    # weight sum) — zero exactly where nothing was live
+                    w = hc_mod.miss_mask_of(slot_of, ix_m, mk_m).sum(-1)
+                    dcol = jnp.repeat(jnp.asarray(deg_mask, w.dtype),
+                                      t_loc)
+                    hits_m = hits_m + ((w * dcol)[..., None]
+                                       * extra[2][None]).astype(emb_dtype)
             else:
                 hits_m = jnp.zeros((bs, 0, 0), emb_dtype)  # empty side slot
             if use_ragged:
@@ -528,6 +584,11 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                     bs=bs, out_dtype=emb_dtype)
             else:
                 sl = a2a_mod.decode_wire(f, emb_dtype)   # (bs, t_loc, s)
+            if deg:
+                # src is TRACED in the ring schedule — mask against a
+                # constant member vector, not a Python membership test
+                sl = jnp.where(jnp.asarray(deg_mask, jnp.bool_)[src],
+                               jnp.zeros_like(sl), sl)
             if use_cache:
                 sl = sl + jax.lax.dynamic_slice_in_dim(
                     hits, src * t_loc, t_loc, axis=1)
@@ -558,6 +619,12 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                     q = a2a_mod.decode_wire(f, emb_dtype)
                     emb_all = q.transpose(1, 0, 2, 3).reshape(
                         bs, n_shards * t_loc, q.shape[-1])
+                if deg:
+                    # drop degraded sources' table columns (x * 1.0 is
+                    # bit-exact for the survivors)
+                    keep = 1 - jnp.asarray(deg_mask, emb_all.dtype)
+                    emb_all = emb_all * jnp.repeat(keep, t_loc)[None, :,
+                                                                None]
                 if use_cache:
                     emb_all = emb_all + hits          # pooled-hit correction
             t = cfg.n_tables
@@ -579,12 +646,20 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
         if return_diag:
             axes_all = ("model",) + baxes
             _, miss_all = local_miss(idx_s, mask_s)
-            cnt = (miss_all > 0).any(-1).reshape(mb, n_shards, bs, t_loc) \
+            live = (miss_all > 0).any(-1)
+            cnt = live.reshape(mb, n_shards, bs, t_loc) \
                 .sum((2, 3)).astype(jnp.int32)
             live_max = jax.lax.pmax(jnp.max(cnt), axes_all)
             drops_l = jnp.sum(jnp.maximum(cnt - cap, 0)) if use_ragged \
                 else jnp.int32(0)
-            diag = (live_max, jax.lax.psum(drops_l, axes_all))
+            # degraded ledger: every live residual bag on a degraded
+            # member's shard was served from the fallback — count them on
+            # the owning rank, sum across the pod
+            approx_l = (live.sum().astype(jnp.int32)
+                        * jnp.asarray(deg_mask, jnp.int32)[m]) if deg \
+                else jnp.int32(0)
+            diag = (live_max, jax.lax.psum(drops_l, axes_all),
+                    jax.lax.psum(approx_l, axes_all))
 
         js = jnp.arange(mb, dtype=jnp.int32)
         xs = (js, split(dense_s), split(idx_s), split(mask_s))
@@ -609,6 +684,9 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
     if use_cache:
         in_specs += [P(), P()]              # hot block replicated everywhere
         args += [cache.hot_rows, cache.slot_of]
+    if fb_rows is not None:
+        in_specs += [P(None, None)]         # profile rows replicated
+        args += [fb_rows]
     if has_plan:
         # plan leaves are model-major on axis 0, (data-row, microbatch)-
         # major on axis 1 — exactly what build_forward_plans emits
@@ -616,7 +694,7 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
             lambda _: P("model", baxes if baxes else None), plan)]
         args += [plan]
     out_spec = P(None, baxes + ("model",) if baxes else "model")
-    out_specs = (out_spec, P(), P()) if return_diag else (out_spec,)
+    out_specs = (out_spec, P(), P(), P()) if return_diag else (out_spec,)
     out, *diag_out = compat.shard_map(
         shard_fn, mesh=mesh,
         in_specs=tuple(in_specs),

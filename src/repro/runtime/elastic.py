@@ -13,7 +13,7 @@ import dataclasses
 from typing import Callable, Optional
 
 import jax
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 
 from repro.runtime import checkpoint as ckpt
 
@@ -45,12 +45,11 @@ def reshard(tree, shardings):
         try:
             return jax.device_put(x, s)
         except Exception:
+            # cross-mesh transfers some backends refuse: stage through host
             import numpy as np
             return jax.device_put(np.asarray(jax.device_get(x)), s)
 
-    return jax.tree.map(move, tree, shardings,
-                        is_leaf=lambda t: isinstance(t, NamedSharding)
-                        if False else None)
+    return jax.tree.map(move, tree, shardings)
 
 
 @dataclasses.dataclass

@@ -1,0 +1,280 @@
+"""Deterministic fault injection for the BLS serving path.
+
+The paper's bound-k claim is conditional: a bound of k masks *transient*
+per-member delays up to k iterations of slack (§IV), while *consistent*
+stragglers cannot be masked by any bound and a crashed member cannot be
+masked at all.  This module makes those three regimes injectable from ONE
+seeded description so every layer consumes the same trace:
+
+  * ``FaultPlan`` — a per-(member, step) delay table (seconds) plus crash
+    steps, built from composable, deterministic events: seeded transient
+    jitter, a single delay spike, a sustained straggler (constant extra
+    seconds per step from a given step — the paper's unmaskable case), and
+    a crash at step n.
+  * ``core/schedule_sim`` integration — ``plan.to_workload`` injects the
+    identical trace into the discrete-event simulator, and
+    ``predict_absorption`` answers *in advance* whether bound k absorbs it
+    (zero cross-member blocking beyond the fault-free schedule).
+  * ``FaultInjector`` — the host-level runtime hook ``DLRMEngine.flush``
+    drives: it sleeps the plan's delay before each dispatch (the slowest
+    member gates the lockstep step), synthesizes the per-member latency
+    telemetry a real deployment would collect (``latencies`` feeds
+    ``straggler.detect_stragglers``), and raises ``NodeFailure`` with the
+    surviving device set at crash steps.  ``elastic_fault`` adapts the
+    same plan to the existing ``ElasticRunner.fault`` interface.
+
+Everything is seeded and replayable: the same plan produces the same
+delays, the same telemetry, and the same crash — so chaos tests assert
+exact accounting (``ServeStats.approx_rows`` matches the plan) instead of
+flaky timing behavior.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core import schedule_sim as sim
+from repro.runtime.elastic import NodeFailure
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Seeded per-member fault trace over ``n_steps`` serving steps.
+
+    ``delay[m, t]`` is the extra seconds member m needs at step t (both
+    transient jitter and sustained-straggler excess live here — a
+    consistent straggler IS a constant per-step delay, which is exactly
+    why no bound masks it).  ``crash_step`` maps member -> the step at
+    which it dies.  Plans are immutable; the ``with_*`` builders return
+    extended copies so traces compose.
+    """
+
+    delay: np.ndarray                       # (n_members, n_steps) seconds
+    crash_step: tuple = ()                  # ((member, step), ...)
+    sustained_from: tuple = ()              # ((member, from_step, extra_s),)
+    seed: int = 0
+
+    @classmethod
+    def none(cls, n_members: int, n_steps: int, seed: int = 0) -> "FaultPlan":
+        return cls(delay=np.zeros((n_members, n_steps)), seed=seed)
+
+    @property
+    def n_members(self) -> int:
+        return self.delay.shape[0]
+
+    @property
+    def n_steps(self) -> int:
+        return self.delay.shape[1]
+
+    # -- builders (all deterministic) -------------------------------------
+
+    def with_jitter(self, delay_max: float, *, members=None,
+                    seed: Optional[int] = None) -> "FaultPlan":
+        """Transient uniform U[0, delay_max] jitter per (member, step) —
+        the paper's Setting 2, the case bound k is designed to mask."""
+        rng = np.random.default_rng(self.seed if seed is None else seed)
+        d = self.delay.copy()
+        rows = range(self.n_members) if members is None else members
+        for m in rows:
+            d[m] += rng.uniform(0.0, delay_max, self.n_steps)
+        return dataclasses.replace(self, delay=d)
+
+    def with_spike(self, member: int, step: int, seconds: float
+                   ) -> "FaultPlan":
+        """One deterministic transient delay event."""
+        d = self.delay.copy()
+        d[member, step] += seconds
+        return dataclasses.replace(self, delay=d)
+
+    def with_straggler(self, member: int, extra_s: float, *,
+                       from_step: int = 0) -> "FaultPlan":
+        """A CONSISTENT straggler: constant extra seconds every step from
+        ``from_step`` on — the §IV negative case no bound absorbs."""
+        d = self.delay.copy()
+        d[member, from_step:] += extra_s
+        return dataclasses.replace(
+            self, delay=d,
+            sustained_from=self.sustained_from
+            + ((int(member), int(from_step), float(extra_s)),))
+
+    def with_crash(self, member: int, at_step: int) -> "FaultPlan":
+        return dataclasses.replace(
+            self, crash_step=self.crash_step + ((int(member), int(at_step)),))
+
+    # -- queries -----------------------------------------------------------
+
+    def delay_of(self, member: int, step: int) -> float:
+        """Injected delay of ``member`` at ``step`` (steps past the plan
+        horizon repeat the last column, so sustained stragglers stay
+        sustained on long runs)."""
+        return float(self.delay[member, min(step, self.n_steps - 1)])
+
+    def crashes_at(self, step: int) -> list:
+        return [m for m, s in self.crash_step if s == step]
+
+    def sustained_members(self, *, at_step: Optional[int] = None) -> list:
+        """Members under a sustained slowdown (at ``at_step``, or ever)."""
+        return sorted({m for m, s, _ in self.sustained_from
+                       if at_step is None or at_step >= s})
+
+    def transient_only(self) -> bool:
+        return not self.crash_step and not self.sustained_from
+
+    # -- simulator integration (core/schedule_sim) -------------------------
+
+    def to_workload(self, n_iters: Optional[int] = None, **stage_times
+                    ) -> sim.Workload:
+        """The SAME trace as a simulator workload: base stage times from
+        ``make_workload`` (t_emb/t_bot/t_top/t_wire), plan delays injected
+        verbatim into ``Workload.delay``.  Crashes are outside the
+        simulator's timing model (recovery is the engine's domain) and
+        raise here rather than silently predicting nonsense."""
+        if self.crash_step:
+            raise ValueError(
+                "to_workload: the schedule simulator models timing, not "
+                "recovery — predict absorption on the pre-crash plan and "
+                "drive the crash through FaultInjector/DLRMEngine")
+        n = self.n_steps if n_iters is None else int(n_iters)
+        w = sim.make_workload(self.n_members, n, **stage_times)
+        cols = np.minimum(np.arange(n), self.n_steps - 1)
+        w.delay = w.delay + self.delay[:, cols]
+        return w
+
+
+@dataclasses.dataclass(frozen=True)
+class AbsorptionPrediction:
+    """``predict_absorption``'s verdict for one (plan, bound) pair."""
+    bound: int
+    blocked_s: float            # cross-member stall under the fault plan
+    baseline_blocked_s: float   # stall of the fault-free schedule
+    makespan_s: float
+    baseline_makespan_s: float
+
+    @property
+    def absorbed(self) -> bool:
+        """True when bound k masks the plan completely: no member ever
+        waits on exchange data beyond what the fault-free schedule
+        already waits (paper §IV's definition of masking)."""
+        return self.blocked_s <= self.baseline_blocked_s + 1e-12
+
+
+def predict_absorption(plan: FaultPlan, bound: int, *,
+                       n_iters: Optional[int] = None,
+                       backend: str = "bls", **stage_times
+                       ) -> AbsorptionPrediction:
+    """Feed the plan to ``schedule_sim.simulate`` and report whether bound
+    k absorbs it.  ``stage_times`` are ``make_workload`` kwargs (t_emb,
+    t_bot, t_top, t_wire); the fault-free baseline uses the same ones."""
+    w = plan.to_workload(n_iters, **stage_times)
+    base = FaultPlan.none(plan.n_members, plan.n_steps, plan.seed) \
+        .to_workload(n_iters, **stage_times)
+    r = sim.simulate(w, bound, backend=backend)
+    r0 = sim.simulate(base, bound, backend=backend)
+    return AbsorptionPrediction(
+        bound=int(bound), blocked_s=r.blocked_s,
+        baseline_blocked_s=r0.blocked_s, makespan_s=r.makespan,
+        baseline_makespan_s=r0.makespan)
+
+
+class FaultInjector:
+    """Runtime half of a :class:`FaultPlan`: the host-level hook the
+    serving engine (and ``ElasticRunner``) drive.
+
+    One injector simulates the whole pod's fault behavior from inside a
+    single process: ``on_flush`` sleeps the slowest live member's delay
+    before each lockstep dispatch and raises :class:`NodeFailure` (with
+    the surviving device set derived from the mesh) at crash steps;
+    ``latencies`` synthesizes the per-member step-latency telemetry a
+    real deployment's monitoring would feed ``detect_stragglers``.
+
+    Member indices in the plan are ORIGINAL ranks; after a crash the
+    survivors renumber to mesh positions 0..P-2 and the injector keeps
+    the mapping (``live``), so telemetry keys always match the current
+    mesh's model-axis positions.
+    """
+
+    def __init__(self, plan: FaultPlan, *, time_scale: float = 1.0):
+        self.plan = plan
+        self.time_scale = float(time_scale)
+        self.live = list(range(plan.n_members))
+        self.fired: set = set()
+        self.injected_delay_s = 0.0
+
+    def host_delay(self, step: int, exclude=()) -> float:
+        """The delay the lockstep step pays: max over live members.
+        ``exclude`` lists CURRENT mesh positions the step no longer waits
+        on (degraded serving) — their delays stop gating the flush."""
+        mems = [m for pos, m in enumerate(self.live) if pos not in exclude]
+        if not mems:
+            return 0.0
+        return max(self.plan.delay_of(m, step) for m in mems)
+
+    def on_flush(self, step: int, mesh=None, *, exclude=()) -> None:
+        """Called by the engine before dispatching flush ``step``.  May
+        sleep (scaled by ``time_scale``) and may raise NodeFailure.
+        ``exclude`` as in :meth:`host_delay` (a degraded member still
+        crashes on schedule — it is served around, not forgotten)."""
+        for m in list(self.live):
+            if m in self.fired:
+                continue
+            if any(cm == m and cs == step for cm, cs in self.plan.crash_step):
+                pos = self.live.index(m)
+                self.fired.add(m)
+                self.live.remove(m)
+                raise NodeFailure(self._survivors(mesh, pos))
+        d = self.host_delay(step, exclude) * self.time_scale
+        if d > 0:
+            time.sleep(d)
+            self.injected_delay_s += d
+
+    def _survivors(self, mesh, pos: int) -> list:
+        """Devices left after dropping the crashed member's model-axis
+        column of ``mesh`` (position ``pos`` among the pre-crash live
+        set)."""
+        if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+            return []
+        dev = np.asarray(mesh.devices)
+        ax = list(mesh.axis_names).index("model")
+        keep = [j for j in range(dev.shape[ax]) if j != pos]
+        return list(np.take(dev, keep, axis=ax).reshape(-1))
+
+    def latencies(self, step: int, base_s: float) -> dict:
+        """Synthesized per-member step latencies at ``step``, keyed by
+        CURRENT mesh position: base latency + that member's injected
+        delay.  This is the dict ``detect_stragglers`` consumes."""
+        return {pos: base_s + self.plan.delay_of(orig, step)
+                for pos, orig in enumerate(self.live)}
+
+    def position_of(self, member: int) -> Optional[int]:
+        """Current mesh position of an original member rank (None once
+        crashed)."""
+        return self.live.index(member) if member in self.live else None
+
+    def elastic_fault(self, devices):
+        """Adapt the plan to the ``ElasticRunner.run(fault=...)``
+        interface: ``devices`` are split contiguously among the plan's
+        members; the returned callable sleeps the per-step delay and
+        raises NodeFailure with the live members' devices at crash
+        steps."""
+        chunks = np.array_split(np.asarray(list(devices), dtype=object),
+                                self.plan.n_members)
+
+        def fault(step: int) -> None:
+            for m in list(self.live):
+                if m in self.fired:
+                    continue
+                if any(cm == m and cs == step
+                       for cm, cs in self.plan.crash_step):
+                    self.fired.add(m)
+                    self.live.remove(m)
+                    surv = [d for i in self.live for d in chunks[i]]
+                    raise NodeFailure(surv)
+            d = self.host_delay(step) * self.time_scale
+            if d > 0:
+                time.sleep(d)
+                self.injected_delay_s += d
+
+        return fault

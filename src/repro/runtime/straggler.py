@@ -119,10 +119,14 @@ class CapAutotuner:
         drops = self.drops
         if not peek:
             self.drops = 0
-        if drops and current_cap:
+        if drops:
             # the cap in service proved too small: grow geometrically
-            # rather than re-learning from the (stale) window
-            cap = max(cap, 2 * current_cap)
+            # rather than re-learning from the (stale) window.  With no
+            # known in-service cap (current_cap=None: first retune, or a
+            # dense-equivalent cap) the window itself is the only
+            # estimate that provably dropped — double IT instead of
+            # silently ignoring the drop evidence.
+            cap = max(cap, 2 * (current_cap if current_cap else cap))
         cap = min(cap, dense_rows)
         ragged = cap < dense_rows
         reason = (f"live p{int(self.quantile * 100)}={q} rows/dest, "
@@ -136,8 +140,16 @@ def detect_stragglers(per_host_latencies: dict, threshold: float = 1.5
                       ) -> list:
     """Hosts consistently above threshold x median are CONSISTENT stragglers
     — the case the paper shows BLS cannot mask; flag for eviction/replace
-    (elastic.py) instead of masking."""
-    if not per_host_latencies:
+    (elastic.py / serving.engine.DLRMEngine.evict) instead of masking.
+
+    Edge cases are deliberate: an empty dict flags nobody (no telemetry is
+    not evidence), a singleton flags nobody (its own median — one slow
+    host alone is indistinguishable from a slow workload), and even-length
+    inputs use the true median (mean of the two middle values) so a
+    2-host pod with one straggler still flags it."""
+    if len(per_host_latencies) < 2:
         return []
-    med = sorted(per_host_latencies.values())[len(per_host_latencies) // 2]
+    xs = sorted(per_host_latencies.values())
+    n = len(xs)
+    med = xs[n // 2] if n % 2 else 0.5 * (xs[n // 2 - 1] + xs[n // 2])
     return [h for h, v in per_host_latencies.items() if v > threshold * med]

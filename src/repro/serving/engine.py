@@ -22,7 +22,9 @@ from repro.configs.base import DLRMConfig, ModelConfig
 from repro.core import alltoallv as a2a_mod
 from repro.core import bls as bls_mod
 from repro.models import api, dlrm as dlrm_mod
-from repro.runtime.straggler import CapAutotuner, StragglerMonitor
+from repro.runtime.elastic import NodeFailure
+from repro.runtime.straggler import (CapAutotuner, StragglerMonitor,
+                                     detect_stragglers)
 from repro.train import steps as steps_mod
 
 
@@ -32,6 +34,14 @@ class ServeStats:
     requests: int = 0
     total_s: float = 0.0
     retunes: int = 0          # cap-autotuner re-jits
+    # -- chaos ledger (deadline policy / degraded serving / eviction) ------
+    deadline_breaches: int = 0  # flushes that exceeded deadline_s
+    degraded_batches: int = 0   # batches served with degraded_members set
+    approx_rows: int = 0        # live bags served from the fallback, total
+    evictions: int = 0          # evict() recoveries (crash or policy)
+    replays: int = 0            # batches re-dispatched after a NodeFailure
+    recovery_s: float = 0.0     # wall time inside evict(): remesh ->
+                                # repartition -> re-jit
 
     @property
     def throughput_rps(self) -> float:
@@ -70,6 +80,22 @@ class DLRMEngine:
     configuration has no plan to build (ref backend, resident tables,
     ragged exchange), the pipeline degenerates to deferred-harvest
     dispatch with inline planning — outputs are identical either way.
+
+    **Chaos hardening** (DESIGN.md §8): ``deadline_s`` arms a per-flush
+    deadline with policy ``on_deadline``: 'block' only counts breaches
+    (correctness over latency), 'degrade' serves around confirmed
+    sustained stragglers via ``degraded_members`` masking with
+    ``degraded_fallback`` (quality loss ledgered in
+    ``ServeStats.approx_rows``), 'evict' removes them from the mesh.
+    Transient breaches (nothing confirmed by ``detect_stragglers`` for
+    ``confirm_after`` consecutive breaching flushes) instead widen the
+    absorption window by raising the BLS bound toward
+    :meth:`recommend_bound`.  ``faults`` (a ``runtime.faults.
+    FaultInjector``) drives deterministic chaos: injected per-member
+    delays gate each flush and crash steps raise ``NodeFailure``, which
+    the engine recovers from in place — rebuild the mesh from survivors,
+    repartition the table stack (and cache), re-jit, and replay the
+    in-flight batch with bounded backoff — zero requests lost.
     """
 
     def __init__(self, params, cfg: DLRMConfig, *, batch_size: int = 512,
@@ -81,7 +107,14 @@ class DLRMEngine:
                  retune_every: int = 8,
                  row_block: Optional[int] = None,
                  pool_mode: Optional[str] = None,
-                 plan_pipeline: bool = False):
+                 plan_pipeline: bool = False,
+                 deadline_s: Optional[float] = None,
+                 on_deadline: str = "block",
+                 faults=None,
+                 degraded_fallback: str = "zero",
+                 confirm_after: int = 2,
+                 max_retries: int = 2,
+                 retry_backoff_s: float = 0.0):
         self.params, self.cfg = params, cfg
         self.batch_size = batch_size
         self.bound, self.microbatches = bound, microbatches
@@ -100,6 +133,24 @@ class DLRMEngine:
         self.pool_mode = pool_mode if pool_mode is not None \
             else cfg.pool_mode
         self.plan_pipeline = plan_pipeline
+        if on_deadline not in ("block", "degrade", "evict"):
+            raise ValueError(f"unknown on_deadline {on_deadline!r}")
+        if faults is not None and plan_pipeline:
+            raise ValueError(
+                "fault injection drives recovery through the synchronous "
+                "flush path; plan_pipeline's deferred harvest would tear "
+                "the replay boundary — run chaos without plan_pipeline")
+        self.deadline_s = deadline_s
+        self.on_deadline = on_deadline
+        self.faults = faults
+        self.degraded_fallback = degraded_fallback
+        self.confirm_after = max(1, int(confirm_after))
+        self.max_retries = max(0, int(max_retries))
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.degraded_members: tuple = ()
+        self._mesh = None              # owned post-eviction mesh (else ambient)
+        self._flushes = 0              # fault-plan step counter
+        self._streak: dict = {}        # straggler confirmation streaks
         self.monitor = StragglerMonitor()
         self.cap_tuner = CapAutotuner()
         self.stats = ServeStats()
@@ -124,13 +175,15 @@ class DLRMEngine:
         ex, cap = self.exchange, self.ragged_cap
         pipe = self.exchange_pipeline
         rblk, pool = self.row_block, self.pool_mode
-        # diagnostics cost a full-batch miss re-probe + two collectives:
+        deg, fb = self.degraded_members, self.degraded_fallback
+        # diagnostics cost a full-batch miss re-probe + collectives:
         # trace them only when something consumes them — drop monitoring
-        # (explicit ragged) or the autotuner (auto WITH a cache; cacheless
+        # (explicit ragged), the autotuner (auto WITH a cache; cacheless
         # auto can never resolve to ragged, and skipping the observations
-        # also keeps pre-calibration full-live counts out of the window)
+        # also keeps pre-calibration full-live counts out of the window),
+        # or the degraded-serving approx_rows ledger
         diag_on = ex == "ragged" or (ex == "auto" and
-                                     self.cache is not None)
+                                     self.cache is not None) or bool(deg)
         # the plan builder the pipelined flush dispatches ahead of the
         # step; rebuilt with the step so retuned caps / recalibrated
         # caches re-resolve whether a plan applies at all
@@ -150,7 +203,8 @@ class DLRMEngine:
                 logits = out
                 return (jax.nn.sigmoid(logits),)
             logits, diag = out
-            return jax.nn.sigmoid(logits), diag.live_max, diag.drops
+            return (jax.nn.sigmoid(logits), diag.live_max, diag.drops,
+                    diag.approx_rows)
 
         def forward(params, dense, idx, mask, cache, plan):
             return _finish(dlrm_mod.forward_distributed(
@@ -158,6 +212,7 @@ class DLRMEngine:
                 microbatches=microbatches, cache=cache, wire_dtype=wire,
                 exchange=ex, ragged_cap=cap, exchange_pipeline=pipe,
                 row_block=rblk, pool_mode=pool, plan=plan,
+                degraded_members=deg, degraded_fallback=fb,
                 return_diag=diag_on))
 
         if self.cache is None:
@@ -204,7 +259,7 @@ class DLRMEngine:
             return self.flush()
         return None
 
-    def _finish_batch(self, out, diag, n, t0, done_t=None):
+    def _finish_batch(self, out, diag, n, t0, done_t=None, step_no=None):
         """Materialize one batch's result and account for it.  ``done_t``
         (pipelined batches: the watcher thread's device-completion
         timestamp) keeps the straggler monitor observing dispatch-to-
@@ -217,6 +272,10 @@ class DLRMEngine:
         self.monitor.observe(end - t0)
         if diag:
             self.cap_tuner.observe(int(diag[0]), int(diag[1]))
+            if len(diag) > 2:
+                self.stats.approx_rows += int(diag[2])
+        if self.degraded_members:
+            self.stats.degraded_batches += 1
         self.stats.batches += 1
         self.stats.requests += n
         self.stats.total_s += end - max(t0, self._last_finish_t)
@@ -224,17 +283,27 @@ class DLRMEngine:
         if self.exchange == "auto" and \
                 self.stats.batches % self.retune_every == 0:
             self.retune_cap()
+        if step_no is not None:
+            self._after_flush(step_no, end - t0)
         return out[:n]
 
     def _harvest(self):
         """Materialize the in-flight batch dispatched by a pipelined
-        flush, if any."""
+        flush, if any.  An async step failure (the watcher thread saw the
+        device computation die) surfaces HERE, with batch context, and
+        clears the in-flight entry first so the engine stays usable."""
         if self._inflight is None:
             return None
-        out, diag, n, t0, watcher, done = self._inflight
+        out, diag, n, t0, watcher, done, step_no = self._inflight
         self._inflight = None
         watcher.join()
-        return self._finish_batch(out, diag, n, t0, done["t"])
+        if done["err"] is not None:
+            err = done["err"]
+            raise RuntimeError(
+                f"pipelined step failed in flight (batch of {n} requests, "
+                f"flush #{step_no}): {err!r}") from err
+        return self._finish_batch(out, diag, n, t0, done["t"],
+                                  step_no=step_no)
 
     def flush(self):
         """Run the pending batch.  Inline mode returns its CTRs; under
@@ -253,29 +322,36 @@ class DLRMEngine:
         m = np.stack([p[2] for p in self._pending] +
                      [self._pending[-1][2]] * pad)
         self._pending.clear()
+        step_no = self._flushes
+        self._flushes += 1
         t0 = time.perf_counter()
-        args = self._step_args(d, i, m)
         if not self.plan_pipeline:
-            out, *diag = self._step(*args)
-            return self._finish_batch(out, diag, n, t0)
+            out, diag = self._run_batch(d, i, m, step_no)
+            return self._finish_batch(out, diag, n, t0, step_no=step_no)
         # flush n+1's plan is dispatched while flush n (the in-flight
         # entry harvested below) still occupies the device — the plan
         # build overlaps stage_a compute instead of serializing with it
-        plan = self._plan_fn(self.params, args[2])
-        out, *diag = self._step(*args, plan)
+        with self._mesh_ctx():
+            args = self._step_args(*self._fit_batch(d, i, m))
+            plan = self._plan_fn(self.params, args[2])
+            out, *diag = self._step(*args, plan)
         # a daemon watcher blocks on the async result off the main thread
         # and stamps true completion, so the harvested batch's latency is
         # dispatch -> device completion, not harvest-to-harvest wall time
-        done = {"t": None}
+        done = {"t": None, "err": None}
 
         def _watch(o=out, d=done):
-            jax.block_until_ready(o)
-            d["t"] = time.perf_counter()
+            try:
+                jax.block_until_ready(o)
+            except Exception as e:   # surfaced at the NEXT harvest
+                d["err"] = e
+            finally:
+                d["t"] = time.perf_counter()
 
         watcher = threading.Thread(target=_watch, daemon=True)
         watcher.start()
         prev = self._harvest()
-        self._inflight = (out, diag, n, t0, watcher, done)
+        self._inflight = (out, diag, n, t0, watcher, done, step_no)
         return prev
 
     def drain(self):
@@ -284,14 +360,231 @@ class DLRMEngine:
         outs = [o for o in (self.flush(), self._harvest()) if o is not None]
         return np.concatenate(outs) if outs else None
 
+    # -- chaos hardening: fault injection, deadline policy, eviction ------
+
+    def _active_mesh(self):
+        """The mesh the engine serves on: its own post-eviction mesh once
+        one exists, the ambient ``partition.axis_rules`` mesh before."""
+        if self._mesh is not None:
+            return self._mesh
+        from repro.sharding import partition
+        return partition.current_mesh()
+
+    def _mesh_ctx(self):
+        """Context installing the engine-owned mesh (post-eviction it
+        OVERRIDES whatever the caller's ``axis_rules`` block installed —
+        the caller's mesh still names dead devices)."""
+        if self._mesh is None:
+            import contextlib
+            return contextlib.nullcontext()
+        from repro.sharding import partition
+        return partition.axis_rules(self._mesh)
+
+    def _fit_batch(self, d, i, m):
+        """Re-fit a host batch's sparse tensors to the ACTIVE mesh's table
+        padding: eviction changes P, and with it t_pad = padded_tables(cfg,
+        P).  Cropping is safe (padding tables beyond n_tables carry mask 0
+        and are never indexed); growth pads with dead (idx 0, mask 0)
+        slots."""
+        _, t_pad, _, _ = self._exchange_geometry()
+        have = i.shape[1]
+        if have == t_pad:
+            return d, i, m
+        if have > t_pad:
+            return d, i[:, :t_pad], m[:, :t_pad]
+        iz = np.zeros((i.shape[0], t_pad - have, i.shape[2]), i.dtype)
+        mz = np.zeros((m.shape[0], t_pad - have, m.shape[2]), m.dtype)
+        return (d, np.concatenate([i, iz], axis=1),
+                np.concatenate([m, mz], axis=1))
+
+    def _run_batch(self, d, i, m, step_no):
+        """Dispatch one batch with fault injection + bounded-retry
+        eviction recovery.  The SAME requests are served no matter how
+        many members die: a ``NodeFailure`` (raised by the injector, or
+        by real collective monitoring) triggers evict() and the batch is
+        re-dispatched on the shrunken mesh — zero requests lost."""
+        for attempt in range(self.max_retries + 1):
+            try:
+                if self.faults is not None:
+                    self.faults.on_flush(step_no, mesh=self._active_mesh(),
+                                         exclude=self.degraded_members)
+                args = self._step_args(*self._fit_batch(d, i, m))
+                with self._mesh_ctx():
+                    out, *diag = self._step(*args)
+                return out, diag
+            except NodeFailure as e:
+                if attempt >= self.max_retries:
+                    raise
+                if self.retry_backoff_s:
+                    time.sleep(self.retry_backoff_s * (2 ** attempt))
+                self.evict(e.surviving_devices)
+                self.stats.replays += 1
+        raise AssertionError("unreachable")
+
+    def _after_flush(self, step_no, elapsed):
+        """Deadline policy.  A breach is classified by straggler telemetry:
+        members flagged by ``detect_stragglers`` for ``confirm_after``
+        CONSECUTIVE breaching flushes are sustained (the case no bound
+        masks — degrade or evict them per ``on_deadline``); anything else
+        is transient, and the response is to widen the absorption window
+        (raise the bound toward :meth:`recommend_bound`), never to react
+        structurally."""
+        if self.deadline_s is None:
+            return
+        if elapsed <= self.deadline_s:
+            self._streak.clear()     # confirmation requires consecutiveness
+            return
+        self.stats.deadline_breaches += 1
+        if self.on_deadline == "block":
+            return
+        confirmed = self._confirmed_stragglers(step_no, elapsed)
+        if not confirmed:
+            rec = self.recommend_bound()
+            k = min(rec.bound, max(self.microbatches - 1, 0))
+            if k > self.bound:
+                self.set_bound(k)
+            return
+        if self.on_deadline == "degrade":
+            self.degrade(tuple(set(self.degraded_members) | set(confirmed)))
+        else:                        # "evict"
+            worst = max(confirmed, key=lambda h: self._streak.get(h, 0))
+            self.evict_member(worst)
+
+    def _confirmed_stragglers(self, step_no, elapsed):
+        """Sustained-straggler confirmation: per-member latency telemetry
+        (synthesized by the injector; a real pod feeds measured values)
+        -> ``detect_stragglers`` -> streak bookkeeping."""
+        if self.faults is None:
+            return []
+        base = self.monitor.percentile(0.5) or max(elapsed, 1e-6)
+        lats = self.faults.latencies(step_no, base)
+        flagged = detect_stragglers(lats)
+        for h in flagged:
+            self._streak[h] = self._streak.get(h, 0) + 1
+        for h in list(self._streak):
+            if h not in flagged:
+                del self._streak[h]
+        return [h for h in flagged
+                if self._streak[h] >= self.confirm_after]
+
+    def set_bound(self, bound: int):
+        """Adopt a new BLS bound (re-jits the step)."""
+        bound = int(bound)
+        if bound == self.bound:
+            return
+        self.bound = bound
+        self._step = jax.jit(self._make_step(bound, self.microbatches))
+
+    def degrade(self, members):
+        """Serve AROUND the given model-axis members: their shards'
+        exchange contribution is masked and affected bags fall back per
+        ``degraded_fallback`` — approximate but deadline-safe, with the
+        quality loss ledgered in ``ServeStats.approx_rows``.  Pass ()
+        to restore exact serving."""
+        members = tuple(sorted({int(x) for x in members}))
+        if members == self.degraded_members:
+            return
+        self.degraded_members = members
+        self._step = jax.jit(self._make_step(self.bound, self.microbatches))
+
+    def evict_member(self, pos: int):
+        """Evict ONE member by model-axis position: its mesh column is
+        dropped and :meth:`evict` rebuilds on the survivors.  The fault
+        injector (when present) retires the member too, so telemetry and
+        future crash schedules track the shrunken pod."""
+        mesh = self._active_mesh()
+        if mesh is None or "model" not in mesh.axis_names:
+            raise ValueError("evict_member needs a model-axis mesh")
+        dev = np.asarray(mesh.devices)
+        ax = list(mesh.axis_names).index("model")
+        keep = [j for j in range(dev.shape[ax]) if j != pos]
+        if not keep:
+            raise ValueError("cannot evict the last member")
+        if self.faults is not None and pos < len(self.faults.live):
+            orig = self.faults.live[pos]
+            self.faults.fired.add(orig)
+            self.faults.live.remove(orig)
+        self.evict(list(np.take(dev, keep, axis=ax).reshape(-1)))
+
+    def evict(self, survivors):
+        """Full elastic recovery onto ``survivors``: rebuild the mesh
+        (preserving the data-axis width when the survivor count allows),
+        re-fit + repartition the table stack and cache onto it, reset
+        degraded state (positions renumbered), re-jit.  The wall time is
+        ledgered in ``ServeStats.recovery_s``."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.runtime import elastic
+        from repro.serving.hot_cache import HotCache
+        if not survivors:
+            raise ValueError("evict: no surviving devices")
+        t_rec = time.perf_counter()
+        old = self._active_mesh()
+        n_data = 1
+        if old is not None:
+            for a in dlrm_mod._batch_axes(old):
+                n_data *= old.shape[a]
+        n_surv = len(survivors)
+        model = n_surv // n_data if n_surv % n_data == 0 else 0
+        mesh = elastic.make_mesh_from(survivors, model)
+        p_new = mesh.shape["model"]
+        n_data_new = 1
+        for a in dlrm_mod._batch_axes(mesh):
+            n_data_new *= mesh.shape[a]
+        denom = n_data_new * self.microbatches * p_new
+        if self.batch_size % denom:
+            raise ValueError(
+                f"batch_size {self.batch_size} does not divide the post-"
+                f"eviction geometry (data {n_data_new} x microbatches "
+                f"{self.microbatches} x members {p_new})")
+        t_pad = dlrm_mod.padded_tables(self.cfg, p_new)
+
+        def host(a):
+            return np.asarray(jax.device_get(a))
+
+        def fit_t(a, fill=0):
+            """Crop/zero-pad a (T_pad_old, ...) stack to the new t_pad —
+            padding tables are never indexed (mask 0), so this is exact."""
+            if a.shape[0] >= t_pad:
+                return a[:t_pad]
+            pad = np.full((t_pad - a.shape[0],) + a.shape[1:], fill,
+                          a.dtype)
+            return np.concatenate([a, pad], axis=0)
+
+        params = {"tables": fit_t(host(self.params["tables"])),
+                  "bot": jax.tree.map(host, self.params["bot"]),
+                  "top": jax.tree.map(host, self.params["top"])}
+        shardings = {
+            "tables": NamedSharding(mesh, P("model", None, None)),
+            "bot": jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                self.params["bot"]),
+            "top": jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                self.params["top"])}
+        self.params = elastic.reshard(params, shardings)
+        if self.cache is not None:
+            rep = NamedSharding(mesh, P())
+            ids = self.cache.hot_ids
+            self.cache = HotCache(
+                hot_ids=(jax.device_put(fit_t(host(ids)), rep)
+                         if ids is not None else None),
+                hot_rows=jax.device_put(fit_t(host(self.cache.hot_rows)),
+                                        rep),
+                # -1 = miss: resurrected padding tables stay cold
+                slot_of=jax.device_put(fit_t(host(self.cache.slot_of),
+                                             fill=-1), rep))
+        self._mesh = mesh
+        self.degraded_members = ()   # positions renumbered: start clean
+        self._streak.clear()
+        self._step = jax.jit(self._make_step(self.bound, self.microbatches))
+        self.stats.evictions += 1
+        self.stats.recovery_s += time.perf_counter() - t_rec
+
     # -- ragged-exchange cap autotuning ------------------------------------
 
     def _exchange_geometry(self):
         """(P, t_pad, bs, dense_rows) under the installed mesh, where bs is
         the per-(member, microbatch) batch slice and dense_rows = bs·t_loc
         is what the dense butterfly moves per destination."""
-        from repro.sharding import partition
-        mesh = partition.current_mesh()
+        mesh = self._active_mesh()
         if mesh is not None and "model" in mesh.axis_names:
             p = mesh.shape["model"]
             n_data = 1

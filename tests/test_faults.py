@@ -1,0 +1,486 @@
+"""Chaos-hardened serving (DESIGN.md §8): the deterministic fault plan and
+its three consumers — the schedule simulator (absorption PREDICTION), the
+degraded forward (fallback serving with exact ``approx_rows`` accounting),
+and the serving engine's deadline/evict/replay recovery loop.
+
+The invariants under test are the paper's §IV taxonomy made executable:
+  * a transient delay within bound k's slack is absorbed — engine outputs
+    stay BIT-identical and the simulator predicts zero extra blocking;
+  * a consistent straggler is never absorbed by any bound — the simulator
+    keeps blocking at every k, and the engine's answer is policy
+    (degrade / evict), not a bigger bound;
+  * a crash drives evict -> remesh -> repartition -> re-jit -> replay with
+    ZERO lost requests.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.runtime.faults import (AbsorptionPrediction, FaultInjector,
+                                  FaultPlan, predict_absorption)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: deterministic, composable, replayable
+# ---------------------------------------------------------------------------
+
+
+class TestFaultPlan:
+    def test_jitter_is_seeded_and_deterministic(self):
+        a = FaultPlan.none(4, 16, seed=7).with_jitter(0.01)
+        b = FaultPlan.none(4, 16, seed=7).with_jitter(0.01)
+        c = FaultPlan.none(4, 16, seed=8).with_jitter(0.01)
+        assert np.array_equal(a.delay, b.delay)
+        assert not np.array_equal(a.delay, c.delay)
+        assert a.delay.max() <= 0.01 and a.delay.min() >= 0.0
+
+    def test_builders_compose_immutably(self):
+        base = FaultPlan.none(4, 8)
+        p = base.with_spike(1, 3, 0.05).with_straggler(2, 0.02,
+                                                       from_step=4) \
+            .with_crash(3, at_step=6)
+        assert base.delay.sum() == 0.0           # originals untouched
+        assert p.delay_of(1, 3) == pytest.approx(0.05)
+        assert p.delay_of(2, 3) == 0.0
+        assert p.delay_of(2, 5) == pytest.approx(0.02)
+        assert p.crashes_at(6) == [3] and p.crashes_at(5) == []
+        assert p.sustained_members() == [2]
+        assert p.sustained_members(at_step=3) == []
+        assert not p.transient_only()
+        assert base.transient_only()
+
+    def test_delay_past_horizon_repeats_last_column(self):
+        p = FaultPlan.none(2, 4).with_straggler(1, 0.03)
+        assert p.delay_of(1, 999) == pytest.approx(0.03)
+
+    def test_to_workload_injects_trace_and_refuses_crashes(self):
+        p = FaultPlan.none(3, 5).with_spike(0, 2, 0.01)
+        w = p.to_workload()
+        assert w.delay[0, 2] == pytest.approx(0.01)
+        assert w.delay[1].sum() == 0.0
+        w2 = p.to_workload(n_iters=9)            # horizon-extended
+        assert w2.delay.shape == (3, 9)
+        with pytest.raises(ValueError):
+            p.with_crash(1, 3).to_workload()
+
+
+# ---------------------------------------------------------------------------
+# simulator integration: predicting what a bound absorbs
+# ---------------------------------------------------------------------------
+
+
+class TestPredictAbsorption:
+    def test_transient_spike_absorbed_at_sufficient_bound(self):
+        """A 2 ms spike against the default stage times needs two
+        iterations of slack: blocked at k<2, exactly absorbed at k=2."""
+        plan = FaultPlan.none(4, 16).with_spike(2, 3, 0.002)
+        r0 = predict_absorption(plan, 0)
+        r2 = predict_absorption(plan, 2)
+        assert isinstance(r0, AbsorptionPrediction)
+        assert not r0.absorbed and r0.blocked_s > 0
+        assert r0.baseline_blocked_s == pytest.approx(0.0)
+        assert r2.absorbed and r2.blocked_s == pytest.approx(0.0)
+
+    def test_sustained_straggler_never_absorbed(self):
+        """The paper's negative case: a CONSISTENT straggler keeps every
+        peer blocked at every bound — no k drives the stall to zero."""
+        plan = FaultPlan.none(4, 32).with_straggler(1, 0.003)
+        for k in (0, 2, 4, 8):
+            r = predict_absorption(plan, k)
+            assert not r.absorbed, k
+            assert r.blocked_s > 0.2, k          # ~per-step excess * steps
+
+    def test_bigger_bound_never_hurts_transient_jitter(self):
+        plan = FaultPlan.none(4, 32, seed=5).with_jitter(0.004)
+        blocked = [predict_absorption(plan, k).blocked_s
+                   for k in (0, 1, 2, 3)]
+        assert blocked[0] > blocked[1] >= blocked[2] >= blocked[3]
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector host hooks
+# ---------------------------------------------------------------------------
+
+
+class TestFaultInjector:
+    def test_latencies_and_exclusion(self):
+        plan = FaultPlan.none(4, 8).with_straggler(3, 0.5)
+        inj = FaultInjector(plan, time_scale=0.0)
+        lats = inj.latencies(0, base_s=0.1)
+        assert lats == {0: 0.1, 1: 0.1, 2: 0.1, 3: pytest.approx(0.6)}
+        assert inj.host_delay(0) == pytest.approx(0.5)
+        # a degraded member's delay stops gating the lockstep flush
+        assert inj.host_delay(0, exclude=(3,)) == 0.0
+
+    def test_crash_renumbers_survivors(self):
+        from repro.runtime.elastic import NodeFailure
+        plan = FaultPlan.none(4, 8).with_crash(1, at_step=2)
+        inj = FaultInjector(plan, time_scale=0.0)
+        inj.on_flush(0)
+        inj.on_flush(1)
+        with pytest.raises(NodeFailure):
+            inj.on_flush(2)
+        assert inj.live == [0, 2, 3]
+        assert inj.position_of(2) == 1           # renumbered
+        assert inj.position_of(1) is None        # gone
+        inj.on_flush(2)                          # crash fires only once
+
+    def test_elastic_runner_recovers_from_planned_crash(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.runtime.elastic import ElasticRunner
+        plan = FaultPlan.none(4, 8).with_crash(1, at_step=2)
+        inj = FaultInjector(plan, time_scale=0.0)
+
+        def step_fn(state, batch, mesh):
+            return state + batch
+
+        runner = ElasticRunner(make_shardings=lambda mesh: None)
+        state, _, recoveries = runner.run(
+            jnp.float32(0.0), [jnp.float32(i) for i in (1, 2, 3, 4)],
+            step_fn, None, fault=inj.elastic_fault(jax.devices()))
+        assert recoveries == 1
+        assert float(state) == 10.0              # crashed step replayed
+
+
+# ---------------------------------------------------------------------------
+# degraded forward: fallback serving with exact accounting (8 devices)
+# ---------------------------------------------------------------------------
+
+
+def test_degraded_forward_matches_oracle_and_counts_exactly():
+    """Every exchange x pipeline x bound x fallback combination serves
+    degraded bags exactly as the host oracle predicts (hits + surviving
+    residuals + fallback), and ``approx_rows`` equals the host count of
+    live bags on the degraded shard — the accounting is exact, not
+    approximate."""
+    run_sub("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import DLRMConfig
+from repro.models import dlrm as D
+from repro.sharding import partition
+from repro.data.synthetic import make_batch
+from repro.runtime import elastic
+from repro.serving import hot_cache as hc
+
+cfg = DLRMConfig('t', table_sizes=(40, 60, 30, 50, 20, 70), embed_dim=8,
+                 n_dense_features=4, bottom_mlp=(16, 8), top_mlp=(16, 1),
+                 sparse_backend='ref')
+P = 4
+mesh = elastic.make_mesh_from(jax.devices()[:P], model=P)
+params = D.init_dlrm(jax.random.PRNGKey(0), cfg, n_shards=P)
+b = make_batch(cfg, 16, t_pad=D.padded_tables(cfg, P), seed=3)
+dense, idx, mask = map(jnp.asarray, (b.dense, b.idx, b.mask))
+cache = hc.build_from_batch(params['tables'], idx, mask, 8)
+deg = (1,)
+t_pad = idx.shape[1]; t_loc = t_pad // P
+dcol = jnp.repeat(jnp.asarray([1.0 if i in deg else 0.0
+                               for i in range(P)], jnp.float32), t_loc)
+
+# host oracle: cache hits land as usual; degraded tables' residual is
+# replaced by the fallback, everything else pools normally
+hits = hc.pooled_hits_of(cache.hot_rows, cache.slot_of, idx, mask)
+miss = hc.miss_mask_of(cache.slot_of, idx, mask)
+res = D.apply_emb(params['tables'], idx, miss * (1 - dcol)[None, :, None])
+mean_rows = params['tables'].astype(jnp.float32).mean(axis=1)
+w = miss.sum(-1) * dcol[None]
+
+def tail(emb):
+    z0 = D.apply_mlp(params['bot'], dense)
+    t = cfg.n_tables
+    z = jnp.concatenate([z0[:, None, :], emb[:, :t]], axis=1)
+    inter = D.dot_interaction(z)
+    top_in = jnp.concatenate([z0, inter.astype(z0.dtype)], axis=-1)
+    return D.apply_mlp(params['top'], top_in)[..., 0]
+
+expect = {'zero': np.asarray(tail(hits + res)),
+          'mean': np.asarray(tail(hits + res
+                                  + w[..., None] * mean_rows[None]))}
+n_approx = int((((miss > 0).any(-1)) * dcol[None]).sum())
+assert n_approx > 0
+
+with partition.axis_rules(mesh):
+    for ex in ('dense', 'ragged'):
+        for pipe in ('mono', 'ring'):
+            for fb in ('zero', 'mean'):
+                lg, dg = D.forward_distributed(
+                    params, cfg, dense, idx, mask, bound=1,
+                    microbatches=2, cache=cache, exchange=ex,
+                    ragged_cap=0, exchange_pipeline=pipe,
+                    degraded_members=deg, degraded_fallback=fb,
+                    return_diag=True)
+                key = (ex, pipe, fb)
+                assert int(dg.approx_rows) == n_approx, (
+                    key, int(dg.approx_rows), n_approx)
+                err = float(np.abs(np.asarray(lg) - expect[fb]).max())
+                assert err < 1e-4, (key, err)
+    # cacheless zero fallback: the whole bag of a degraded table vanishes
+    res_nc = D.apply_emb(params['tables'], idx,
+                         mask * (1 - dcol)[None, :, None])
+    exp_nc = np.asarray(tail(res_nc))
+    for pipe in ('mono', 'ring'):
+        lg, dg = D.forward_distributed(
+            params, cfg, dense, idx, mask, exchange='dense',
+            exchange_pipeline=pipe, degraded_members=(2,),
+            degraded_fallback='zero', return_diag=True)
+        # recompute oracle for member 2
+        d2 = jnp.repeat(jnp.asarray([1.0 if i == 2 else 0.0
+                                     for i in range(P)]), t_loc)
+        exp2 = np.asarray(tail(D.apply_emb(
+            params['tables'], idx, mask * (1 - d2)[None, :, None])))
+        assert float(np.abs(np.asarray(lg) - exp2).max()) < 1e-4, pipe
+        n2 = int(((mask[:, :, :] > 0).any(-1) * d2[None]).sum())
+        assert int(dg.approx_rows) == n2, (pipe, int(dg.approx_rows), n2)
+    # mean fallback without a cache is a loud error, not silence
+    try:
+        D.forward_distributed(params, cfg, dense, idx, mask,
+                              degraded_members=(1,),
+                              degraded_fallback='mean')
+        raise SystemExit('expected ValueError')
+    except ValueError:
+        pass
+print('ok')
+""")
+
+
+# ---------------------------------------------------------------------------
+# engine: transient absorption is bit-exact, crash recovery loses nothing
+# ---------------------------------------------------------------------------
+
+
+def test_engine_transient_faults_bit_identical_and_predicted_absorbed():
+    """Acceptance gate (a): a seeded transient plan within bound k's
+    slack leaves engine CTRs BIT-identical to the fault-free run at every
+    bound x exchange x pipeline combination tested, and the SAME plan fed
+    to the schedule simulator predicts zero blocking at that bound."""
+    run_sub("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import DLRMConfig
+from repro.models import dlrm as D
+from repro.sharding import partition
+from repro.data.synthetic import make_batch
+from repro.runtime import elastic
+from repro.runtime.faults import FaultPlan, FaultInjector, predict_absorption
+from repro.serving.engine import DLRMEngine
+
+cfg = DLRMConfig('t', table_sizes=(40, 60, 30, 50, 20, 70), embed_dim=8,
+                 n_dense_features=4, bottom_mlp=(16, 8), top_mlp=(16, 1),
+                 sparse_backend='ref')
+P = 4
+mesh = elastic.make_mesh_from(jax.devices()[:P], model=P)
+params = D.init_dlrm(jax.random.PRNGKey(0), cfg, n_shards=P)
+B = 32
+t_pad = D.padded_tables(cfg, P)
+batches = [make_batch(cfg, B, t_pad=t_pad, seed=11, step=s)
+           for s in range(3)]
+# transient: one 2 ms spike — the simulator says bound 2 absorbs it
+plan = FaultPlan.none(P, 8).with_spike(2, 1, 0.002)
+pred = predict_absorption(plan, 2)
+assert pred.absorbed and pred.blocked_s == 0.0
+assert not predict_absorption(plan, 0).absorbed
+
+def serve(faults):
+    outs = []
+    for ex in ('dense', 'ragged'):
+        for pipe in ('mono', 'ring'):
+            eng = DLRMEngine(params, cfg, batch_size=B, bound=2,
+                             microbatches=4, exchange=ex,
+                             exchange_pipeline=pipe,
+                             faults=faults() if faults else None,
+                             deadline_s=30.0)
+            with partition.axis_rules(mesh):
+                for b in batches:
+                    for r in range(B):
+                        o = eng.submit(b.dense[r], b.idx[r], b.mask[r])
+                        if o is not None:
+                            outs.append(o)
+    return np.concatenate(outs)
+
+clean = serve(None)
+chaos = serve(lambda: FaultInjector(plan))
+assert clean.shape == chaos.shape == (2 * 2 * 3 * B,)
+assert (clean == chaos).all()          # BIT-identical, not allclose
+print('ok')
+""")
+
+
+def test_engine_crash_evicts_and_replays_zero_lost():
+    """Acceptance gate (c): a planned crash drives the full evict ->
+    remesh -> repartition -> re-jit -> replay loop inside DLRMEngine; no
+    request is lost, the survivors' geometry is re-fit (t_pad shrinks
+    with P), and the served CTRs still match the local oracle."""
+    run_sub("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import DLRMConfig
+from repro.models import dlrm as D
+from repro.sharding import partition
+from repro.data.synthetic import make_batch
+from repro.runtime import elastic
+from repro.runtime.faults import FaultPlan, FaultInjector
+from repro.serving.engine import DLRMEngine
+
+cfg = DLRMConfig('t', table_sizes=(40, 60, 30, 50, 20, 70), embed_dim=8,
+                 n_dense_features=4, bottom_mlp=(16, 8), top_mlp=(16, 1),
+                 sparse_backend='ref')
+P = 4
+mesh = elastic.make_mesh_from(jax.devices()[:P], model=P)
+params = D.init_dlrm(jax.random.PRNGKey(0), cfg, n_shards=P)
+B = 48                                  # divides pre- AND post-evict geometry
+t_pad = D.padded_tables(cfg, P)
+batches = [make_batch(cfg, B, t_pad=t_pad, seed=7, step=s)
+           for s in range(4)]
+plan = FaultPlan.none(P, 8).with_crash(1, at_step=2)
+eng = DLRMEngine(params, cfg, batch_size=B, bound=1, microbatches=2,
+                 exchange='dense', faults=FaultInjector(plan),
+                 deadline_s=30.0, on_deadline='evict',
+                 retry_backoff_s=0.001)
+outs = []
+with partition.axis_rules(mesh):
+    for b in batches:
+        for r in range(B):
+            o = eng.submit(b.dense[r], b.idx[r], b.mask[r])
+            if o is not None:
+                outs.append(o)
+out = np.concatenate(outs)
+assert out.shape[0] == 4 * B            # zero lost requests
+assert eng.stats.evictions == 1 and eng.stats.replays == 1
+assert eng.stats.recovery_s > 0
+assert eng._mesh is not None and eng._mesh.shape['model'] == 3
+assert eng.params['tables'].shape[0] == D.padded_tables(cfg, 3)
+if eng.cache is not None:
+    raise SystemExit('unexpected cache')
+ref = np.concatenate([
+    np.asarray(jax.nn.sigmoid(D.forward_local(
+        params, cfg, jnp.asarray(b.dense), jnp.asarray(b.idx),
+        jnp.asarray(b.mask)))) for b in batches])
+err = float(np.abs(out - ref).max())
+assert err < 2e-5, err                  # post-evict batches still exact
+print('ok')
+""")
+
+
+def test_engine_explicit_degrade_ledgers_exactly():
+    """Acceptance gate (b): with degraded members pinned explicitly, the
+    engine's ``ServeStats.approx_rows`` equals the host-side count of
+    live residual bags on the degraded shards, batch for batch."""
+    run_sub("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import DLRMConfig
+from repro.models import dlrm as D
+from repro.sharding import partition
+from repro.data.synthetic import make_batch
+from repro.runtime import elastic
+from repro.serving import hot_cache as hc
+from repro.serving.engine import DLRMEngine
+
+cfg = DLRMConfig('t', table_sizes=(40, 60, 30, 50, 20, 70), embed_dim=8,
+                 n_dense_features=4, bottom_mlp=(16, 8), top_mlp=(16, 1),
+                 sparse_backend='ref')
+P = 4
+mesh = elastic.make_mesh_from(jax.devices()[:P], model=P)
+params = D.init_dlrm(jax.random.PRNGKey(0), cfg, n_shards=P)
+B = 32
+t_pad = D.padded_tables(cfg, P)
+batches = [make_batch(cfg, B, t_pad=t_pad, seed=13, step=s)
+           for s in range(3)]
+cal = batches[0]
+cache = hc.build_from_batch(params['tables'], jnp.asarray(cal.idx),
+                            jnp.asarray(cal.mask), 8)
+deg = (1,)
+t_loc = t_pad // P
+dcol = np.repeat(np.asarray([1 if i in deg else 0 for i in range(P)]),
+                 t_loc)
+expected = 0
+for b in batches:
+    miss = np.asarray(hc.miss_mask_of(cache.slot_of, jnp.asarray(b.idx),
+                                      jnp.asarray(b.mask)))
+    expected += int(((miss > 0).any(-1) * dcol[None]).sum())
+
+eng = DLRMEngine(params, cfg, batch_size=B, bound=1, microbatches=2,
+                 exchange='dense', cache=cache,
+                 degraded_fallback='mean')
+eng.degrade(deg)
+with partition.axis_rules(mesh):
+    for b in batches:
+        for r in range(B):
+            eng.submit(b.dense[r], b.idx[r], b.mask[r])
+assert eng.stats.degraded_batches == 3
+assert eng.stats.approx_rows == expected, (
+    eng.stats.approx_rows, expected)
+print('ok')
+""")
+
+
+def test_engine_deadline_policy_degrades_sustained_straggler():
+    """A sustained straggler breaching the deadline is confirmed by the
+    telemetry loop and served around under on_deadline='degrade': later
+    flushes stop waiting on it (its injected delay is excluded) and the
+    quality loss appears in the ledger."""
+    run_sub("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import DLRMConfig
+from repro.models import dlrm as D
+from repro.sharding import partition
+from repro.data.synthetic import make_batch
+from repro.runtime import elastic
+from repro.runtime.faults import FaultPlan, FaultInjector
+from repro.serving.engine import DLRMEngine
+
+cfg = DLRMConfig('t', table_sizes=(40, 60, 30, 50, 20, 70), embed_dim=8,
+                 n_dense_features=4, bottom_mlp=(16, 8), top_mlp=(16, 1),
+                 sparse_backend='ref')
+P = 4
+mesh = elastic.make_mesh_from(jax.devices()[:P], model=P)
+params = D.init_dlrm(jax.random.PRNGKey(0), cfg, n_shards=P)
+B = 32
+t_pad = D.padded_tables(cfg, P)
+# member 1 owns REAL tables (member 3's shards are padding-only under
+# this geometry, which would make the quality ledger legitimately zero)
+plan = FaultPlan.none(P, 16).with_straggler(1, 0.5)
+eng = DLRMEngine(params, cfg, batch_size=B, bound=1, microbatches=2,
+                 exchange='dense', faults=FaultInjector(plan),
+                 deadline_s=0.1, on_deadline='degrade',
+                 confirm_after=1, degraded_fallback='zero')
+with partition.axis_rules(mesh):
+    for s in range(10):
+        b = make_batch(cfg, B, t_pad=t_pad, seed=17, step=s)
+        for r in range(B):
+            eng.submit(b.dense[r], b.idx[r], b.mask[r])
+assert eng.stats.deadline_breaches > 0
+assert eng.degraded_members == (1,), eng.degraded_members
+assert eng.stats.degraded_batches >= 1
+assert eng.stats.approx_rows > 0
+# once degraded, the straggler's 0.5 s stops gating the flush
+assert eng.faults.host_delay(9, exclude=eng.degraded_members) == 0.0
+print('ok')
+""")
+
+
+def test_failure_recovery_example_runs():
+    """The demo (training recovery + serving chaos) is itself an
+    executable assertion: bit-exact transient, zero-loss crash replay."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)       # the example sets its own pod size
+    r = subprocess.run(
+        [sys.executable, os.path.join(REPO, "examples",
+                                      "failure_recovery.py")],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "BIT-identical" in r.stdout
+    assert "nothing lost" in r.stdout

@@ -88,6 +88,43 @@ class TestElastic:
         assert recoveries == 1
         assert float(state) == 10.0  # failed step retried, nothing lost
 
+    def test_reshard_moves_whole_tree(self):
+        """``reshard`` maps every leaf (the pre-fix version's dead
+        ``is_leaf`` lambda always returned None, flattening to scalars —
+        harmless but misleading; now it's a plain tree.map)."""
+        from repro.runtime.elastic import reshard
+        dev = jax.devices()[0]
+        sharding = jax.sharding.SingleDeviceSharding(dev)
+        tree = {"a": jnp.arange(4.0), "b": [jnp.ones((2, 2)),
+                                            jnp.zeros((3,))]}
+        shardings = jax.tree.map(lambda _: sharding, tree)
+        out = reshard(tree, shardings)
+        assert jax.tree.structure(out) == jax.tree.structure(tree)
+        assert np.allclose(out["a"], np.arange(4.0))
+        assert np.allclose(out["b"][0], 1.0)
+
+    def test_reshard_host_roundtrip_fallback(self, monkeypatch):
+        """When the direct cross-mesh device_put refuses, reshard stages
+        through the host — the value still lands, bit-identical."""
+        from repro.runtime.elastic import reshard
+        dev = jax.devices()[0]
+        sharding = jax.sharding.SingleDeviceSharding(dev)
+        x = jnp.arange(6.0).reshape(2, 3)
+        orig_put = jax.device_put
+        calls = {"refused": 0}
+
+        def picky_put(v, s=None, **kw):
+            if isinstance(v, jax.Array):   # direct transfer "unsupported"
+                calls["refused"] += 1
+                raise RuntimeError("backend refuses cross-mesh transfer")
+            return orig_put(v, s, **kw)    # host arrays stage fine
+
+        monkeypatch.setattr(jax, "device_put", picky_put)
+        out = reshard({"x": x}, {"x": sharding})
+        monkeypatch.undo()
+        assert calls["refused"] == 1       # fallback branch exercised
+        assert np.array_equal(np.asarray(out["x"]), np.asarray(x))
+
 
 class TestStraggler:
     def test_recommend_bound_covers_jitter(self):
@@ -115,6 +152,35 @@ class TestStraggler:
         lat["h3"] = 0.025
         assert detect_stragglers(lat) == ["h3"]
 
+    def test_detect_stragglers_empty_and_singleton(self):
+        """No telemetry is not evidence; one host alone is
+        indistinguishable from a slow workload."""
+        from repro.runtime.straggler import detect_stragglers
+        assert detect_stragglers({}) == []
+        assert detect_stragglers({"h0": 99.0}) == []
+
+    def test_detect_stragglers_even_median(self):
+        """Even-length input uses the TRUE median — a 2-host pod with one
+        straggler still flags it (the old upper-middle 'median' was the
+        straggler's own latency, which can never exceed 1.5x itself)."""
+        from repro.runtime.straggler import detect_stragglers
+        assert detect_stragglers({"a": 0.01, "b": 0.04}) == ["b"]
+        lat = {"a": 0.01, "b": 0.01, "c": 0.011, "d": 0.05}
+        assert detect_stragglers(lat) == ["d"]
+
+    def test_cap_recommend_drops_without_current_cap(self):
+        """Observed drops with no known in-service cap still grow the
+        recommendation (double the window estimate) instead of silently
+        ignoring the drop evidence."""
+        from repro.runtime.straggler import CapAutotuner
+        t = CapAutotuner()
+        t.observe(10, drops=0)
+        quiet = t.recommend(dense_rows=1000, current_cap=None).cap
+        t.observe(10, drops=5)
+        dropped = t.recommend(dense_rows=1000, current_cap=None)
+        assert dropped.cap == 2 * quiet
+        assert dropped.drops == 5
+
 
 class TestServingEngine:
     def test_dlrm_engine_bls_equals_sync(self):
@@ -135,6 +201,39 @@ class TestServingEngine:
             outs[bound] = r
             assert eng.stats.requests == 32
         assert np.allclose(outs[0], outs[2], atol=1e-5)
+
+    def test_pipelined_harvest_surfaces_async_error(self, monkeypatch):
+        """A device failure the watcher thread sees mid-flight must not be
+        swallowed: the NEXT harvest raises with batch context, the
+        in-flight entry is cleared, and the engine keeps serving."""
+        from repro.configs import base as cb
+        from repro.data import synthetic as S
+        from repro.models import dlrm as D
+        from repro.serving.engine import DLRMEngine
+
+        cfg = cb.get_arch("dlrm-kaggle").smoke()
+        params = D.init_dlrm(jax.random.PRNGKey(0), cfg, 1)
+        b = S.make_batch(cfg, 8, mode="hetero", seed=3)
+        eng = DLRMEngine(params, cfg, batch_size=8, plan_pipeline=True)
+
+        boom = RuntimeError("device died mid-step")
+
+        def exploding_block(x):
+            raise boom
+
+        monkeypatch.setattr(jax, "block_until_ready", exploding_block)
+        for i in range(8):
+            eng.submit(b.dense[i], b.idx[i], b.mask[i])  # dispatches async
+        with pytest.raises(RuntimeError) as ei:
+            eng.flush()                    # harvest surfaces the failure
+        monkeypatch.undo()
+        assert "8 requests" in str(ei.value)
+        assert ei.value.__cause__ is boom
+        assert eng._inflight is None       # engine usable again
+        for i in range(8):
+            eng.submit(b.dense[i], b.idx[i], b.mask[i])
+        out = eng.drain()
+        assert out is not None and out.shape == (8,)
 
 
 class TestHloAnalysis:
