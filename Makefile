@@ -14,7 +14,7 @@
 
 PY ?= python
 
-.PHONY: test bench bench-smoke chaos-smoke
+.PHONY: test bench bench-smoke chaos-smoke serve-smoke
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -33,3 +33,13 @@ bench-smoke:
 # replay with zero requests lost.
 chaos-smoke:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/bench_faults.py --smoke
+
+# overload gate (DESIGN.md §9): at 3x the engine's MEASURED capacity with
+# bursty open-loop arrivals, the no-admission baseline must BREACH the SLO
+# at p99 (the control) while the SLO-admission frontend HOLDS p99 within
+# it with shed rate <= 0.25; the conservation invariant is exact on every
+# run (admitted == served + degraded_served + shed), a calm underload run
+# must admit >= 0.9, and served CTRs are bit-identical to the same
+# requests individually flushed (unroll=1 replay-exact serving mode).
+serve-smoke:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/bench_serve.py --smoke

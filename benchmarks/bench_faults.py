@@ -112,12 +112,13 @@ def _chaos_payload():
             t0 = time.perf_counter()
             eng_d.submit(*rows[-1])
             deg_ms.append((time.perf_counter() - t0) * 1e3)
+    sd = eng_d.stats.to_dict()       # the one machine-readable surface
     degrade = {
         "members": list(deg),
-        "approx_rows": eng_d.stats.approx_rows,
+        "approx_rows": sd["approx_rows"],
         "expected_rows": expected_rows,
-        "exact_ledger": eng_d.stats.approx_rows == expected_rows,
-        "degraded_batches": eng_d.stats.degraded_batches,
+        "exact_ledger": sd["approx_rows"] == expected_rows,
+        "degraded_batches": sd["degraded_batches"],
         "clean_flush_ms": clean_ms,
         "degraded_flush_ms": min(deg_ms[1:]),
     }
@@ -130,13 +131,14 @@ def _chaos_payload():
         np.asarray(jax.nn.sigmoid(D.forward_local(
             params, cfg, jnp.asarray(b.dense), jnp.asarray(b.idx),
             jnp.asarray(b.mask)))) for b in batches])
+    sc = eng_c.stats.to_dict()
     recovery = {
         "requests": int(out.shape[0]),
         "expected": 4 * B,
         "zero_lost": int(out.shape[0]) == 4 * B,
-        "evictions": eng_c.stats.evictions,
-        "replays": eng_c.stats.replays,
-        "recovery_ms": eng_c.stats.recovery_s * 1e3,
+        "evictions": sc["evictions"],
+        "replays": sc["replays"],
+        "recovery_ms": sc["recovery_s"] * 1e3,
         "survivor_members": int(eng_c._mesh.shape["model"]),
         "max_err_vs_local": float(np.abs(out - ref).max()),
     }

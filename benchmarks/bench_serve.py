@@ -1,0 +1,268 @@
+"""Overload-robust serving benchmark + CI gate (DESIGN.md §9).
+
+Drives the continuous-batching frontend with an open-loop, bursty,
+power-law request stream (the tail-latency regime the capacity-scale-out
+paper identifies as production-limiting) at a multiple of the engine's
+MEASURED capacity, and compares admission policies:
+
+  * ``none``  — accept everything, never shed: the naive baseline whose
+    queue grows without bound under overload, so its e2e p99 breaches any
+    finite SLO (the breach is the control, not a failure);
+  * ``slo``   — predicted-drain admission + deadline shedding +
+    backpressure: the frontend must hold served p99 WITHIN the SLO at the
+    same offered load, with a bounded shed rate;
+  * ``queue`` — bound-only admission ablation (no deadline prediction).
+
+Everything is calibrated relative to the measured steady flush time
+(capacity, offered rates, the SLO itself), so the gate is robust on
+loaded CI hosts: the baseline's breach scales with its own backlog while
+the SLO run's headroom scales with the same measured flush.
+
+``serve_smoke`` is the ``make serve-smoke`` CI gate; ``run`` returns the
+machine-readable payload for BENCH_dlrm.json's ``serve`` key.  Both
+spawn the measurement in a subprocess with a forced 8-device host pod.
+The gate asserts, at smoke scale:
+
+  * the no-admission baseline BREACHES the SLO at p99 while the SLO
+    frontend HOLDS it at the same offered load;
+  * the conservation invariant is EXACT for every run
+    (admitted == served + degraded_served + shed, nothing lost);
+  * the shed rate of the SLO run stays under a fixed bound;
+  * served CTRs are BIT-identical to the same requests individually
+    flushed through a fresh engine (batching never changes answers).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+# gate thresholds (relative to the measured flush time)
+SLO_FLUSHES = 8.0        # SLO budget: 8x the steady flush time
+MAX_SHED_RATE = 0.25     # of admitted, for the SLO run
+N_PARITY = 64            # completed requests cross-checked bit-for-bit
+
+
+def _serve_payload():
+    """Measure in THIS process (spawned with forced host devices)."""
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.configs.base import DLRMConfig
+    from repro.data import synthetic as S
+    from repro.models import dlrm as D
+    from repro.runtime import elastic
+    from repro.serving.engine import DLRMEngine
+    from repro.serving.frontend import ServingFrontend
+    from repro.sharding import partition
+
+    cfg = DLRMConfig("serve", table_sizes=(40, 60, 30, 50, 20, 70),
+                     embed_dim=8, n_dense_features=4, bottom_mlp=(16, 8),
+                     top_mlp=(16, 1), sparse_backend="ref")
+    P, B = 4, 32
+    mesh = elastic.make_mesh_from(jax.devices()[:P], model=P)
+    params = D.init_dlrm(jax.random.PRNGKey(0), cfg, n_shards=P)
+    t_pad = D.padded_tables(cfg, P)
+
+    warm = S.make_batch(cfg, B, t_pad=t_pad, seed=7)
+
+    def make_engine():
+        # every engine re-jits its step: run one warm batch through it so
+        # the timed serving path never pays the compile, then zero the
+        # ledger the frontend will adopt.  unroll=1 keeps every microbatch
+        # on the same compiled loop body, so a served CTR is bit-identical
+        # whatever its batch position — the parity gate's precondition
+        eng = DLRMEngine(params, cfg, batch_size=B, bound=2,
+                         microbatches=4, unroll=1, exchange="dense")
+        with partition.axis_rules(mesh):
+            for d, i, m in zip(warm.dense, warm.idx, warm.mask):
+                eng.submit(d, i, m)
+            eng.drain()
+        eng.stats = type(eng.stats)()
+        return eng
+
+    # -- calibrate: steady flush time -> capacity, SLO, offered rates ----
+    eng = make_engine()                  # arrives warm: no compile flush
+    flush_s = []
+    with partition.axis_rules(mesh):
+        for _ in range(3):
+            t0 = time.perf_counter()
+            for d, i, m in zip(warm.dense, warm.idx, warm.mask):
+                eng.submit(d, i, m)
+            eng.drain()
+            flush_s.append(time.perf_counter() - t0)
+    flush_s = min(flush_s)
+    capacity_rps = B / flush_s
+    slo_s = SLO_FLUSHES * flush_s
+
+    def one_run(admission, overload, *, shed=True, n_batches=32,
+                burstiness=0.6, seed=7):
+        reqs = S.request_stream(cfg, n_batches * B,
+                                rate_rps=overload * capacity_rps,
+                                burstiness=burstiness, t_pad=t_pad,
+                                seed=seed)
+        engine = make_engine()
+        fe = ServingFrontend(engine, slo_s=slo_s, max_queue=2 * B,
+                             admission=admission, shed=shed,
+                             init_flush_s=flush_s)
+        completed, admitted_reqs = [], []
+        with partition.axis_rules(mesh):
+            t0 = time.perf_counter()
+            nxt = 0
+            while nxt < len(reqs):
+                # open-loop semantics: EVERY request that has arrived by
+                # now enters the frontend before the next scheduling
+                # round, BACKDATED to its true arrival time (deadline and
+                # e2e start then) — so time spent inside a flush never
+                # throttles the offered load down to closed-loop
+                now = time.perf_counter()
+                while nxt < len(reqs) and t0 + reqs[nxt].t_arrive <= now:
+                    r = reqs[nxt]
+                    if fe.try_submit(r.dense, r.idx, r.mask,
+                                     now=t0 + r.t_arrive).admitted:
+                        admitted_reqs.append(r)  # index == frontend rid
+                    nxt += 1
+                completed += fe.pump()
+            completed += fe.drain()
+            wall_s = time.perf_counter() - t0
+        st = fe.stats
+        if not (st.accounted and st.queued == 0 and st.inflight == 0
+                and len(completed) == st.completed):
+            raise RuntimeError(
+                f"conservation invariant violated for admission="
+                f"{admission}: {st.to_dict()}")
+        in_slo = sum(c.in_slo for c in completed)
+        return {
+            "admission": admission, "shed": shed, "overload": overload,
+            "offered": st.offered, "admitted": st.admitted,
+            "rejected": st.rejected, "shed_n": st.shed,
+            "served": st.served, "degraded_served": st.degraded_served,
+            "served_late": st.served_late,
+            "admit_rate": st.admitted / max(st.offered, 1),
+            "shed_rate": st.shed / max(st.admitted, 1),
+            "queue_delay_p50_ms": st.queue_delay.percentile(.5) * 1e3,
+            "queue_delay_p99_ms": st.queue_delay.percentile(.99) * 1e3,
+            "e2e_p50_ms": st.e2e.percentile(.5) * 1e3,
+            "e2e_p99_ms": st.e2e.percentile(.99) * 1e3,
+            "goodput_rps": in_slo / max(wall_s, 1e-9),
+            "wall_s": wall_s, "accounted": True,
+            "flush_ewma_ms": fe.predicted_flush_s() * 1e3,
+            "batches": engine.stats.batches,
+        }, completed, admitted_reqs
+
+    baseline, _, _ = one_run("none", 3.0, shed=False)
+    robust, completed, admitted_reqs = one_run("slo", 3.0)
+    ablation, _, _ = one_run("queue", 3.0)
+    # calm stream: bursty arrivals at 8x compress "0.6x capacity" into
+    # transient 5x spikes, which SHOULD be refused — the underload run
+    # instead checks admission stays quiet when there is real headroom
+    underload, _, _ = one_run("slo", 0.6, n_batches=8, burstiness=0.0)
+
+    # -- bit-parity: served CTRs == the same requests flushed one by one
+    oracle = make_engine()
+    mismatches = 0
+    checked = completed[:N_PARITY]
+    with partition.axis_rules(mesh):
+        for c in checked:
+            r = admitted_reqs[c.request_id]
+            oracle.submit(r.dense, r.idx, r.mask)
+            single = np.asarray(oracle.flush()).reshape(-1)
+            if np.float64(single[0]) != c.ctr:
+                mismatches += 1
+    return {
+        "P": P, "B": B, "flush_ms": flush_s * 1e3,
+        "capacity_rps": capacity_rps, "slo_ms": slo_s * 1e3,
+        "slo_flushes": SLO_FLUSHES,
+        "sweep": [baseline, robust, ablation, underload],
+        "parity": {"checked": len(checked), "mismatches": mismatches,
+                   "bit_identical": mismatches == 0},
+    }
+
+
+def _spawn_payload(devices: int = 8, timeout: int = 900) -> dict:
+    here = os.path.abspath(__file__)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") +
+        f" --xla_force_host_platform_device_count={devices}").strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(here), "..", "src"),
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    r = subprocess.run([sys.executable, here, "--serve-payload"],
+                       env=env, capture_output=True, text=True,
+                       timeout=timeout)
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"serve payload run failed:\n{r.stdout}\n{r.stderr}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def serve_smoke() -> dict:
+    """CI gate (``make serve-smoke``): the acceptance clauses of
+    DESIGN.md §9 at smoke scale."""
+    p = _spawn_payload()
+    slo = p["slo_ms"]
+    by = {r["admission"]: r for r in p["sweep"]
+          if r["overload"] > 1.0}
+    base, robust = by["none"], by["slo"]
+    assert base["e2e_p99_ms"] > slo, (
+        f"the no-admission baseline no longer breaches the SLO at "
+        f"{base['overload']}x load — the gate's control is gone: {base}")
+    assert robust["e2e_p99_ms"] <= slo, (
+        f"SLO frontend breached its own SLO ({robust['e2e_p99_ms']:.1f}ms "
+        f"> {slo:.1f}ms) at {robust['overload']}x load: {robust}")
+    assert robust["shed_rate"] <= MAX_SHED_RATE, (
+        f"shed rate {robust['shed_rate']:.2f} over the "
+        f"{MAX_SHED_RATE} bound (admission should refuse, not shed)")
+    under = next(r for r in p["sweep"] if r["overload"] < 1.0)
+    assert under["admit_rate"] >= 0.9, (
+        f"admission is trigger-happy: only {under['admit_rate']:.2f} "
+        f"admitted at {under['overload']}x (calm) load: {under}")
+    assert all(r["accounted"] for r in p["sweep"]), p["sweep"]
+    assert p["parity"]["bit_identical"], (
+        f"batched serving changed CTRs vs individual flushes: "
+        f"{p['parity']}")
+    print(f"serve-smoke OK: at {robust['overload']}x capacity "
+          f"(burst traffic), baseline p99 {base['e2e_p99_ms']:.1f}ms "
+          f"BREACHES the {slo:.1f}ms SLO; SLO frontend holds p99 "
+          f"{robust['e2e_p99_ms']:.1f}ms, shed rate "
+          f"{robust['shed_rate']:.2f}, admit rate "
+          f"{robust['admit_rate']:.2f}")
+    print(f"serve-smoke OK: accounting exact on all {len(p['sweep'])} "
+          f"runs; {p['parity']['checked']} served CTRs bit-identical to "
+          f"individual flushes")
+    return p
+
+
+def run() -> dict:
+    """BENCH_dlrm.json ``serve`` payload (p50/p99, goodput, admit/shed
+    rates across the admission-policy sweep)."""
+    return _spawn_payload()
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate instead of the payload print")
+    ap.add_argument("--serve-payload", action="store_true",
+                    help="internal: measure in THIS process (spawned "
+                         "with forced host devices) and print JSON")
+    args = ap.parse_args(argv)
+    if args.serve_payload:
+        print(json.dumps(_serve_payload()))
+    elif args.smoke:
+        serve_smoke()
+    else:
+        print(json.dumps(run(), indent=2))
+
+
+if __name__ == "__main__":
+    # allow `python benchmarks/bench_serve.py` from the repo root
+    _ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+    sys.path.insert(0, _ROOT)
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    main()

@@ -18,7 +18,7 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))
 def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (bench_alltoallv, bench_dlrm, bench_faults,
-                            bench_kernels, bench_sim)
+                            bench_kernels, bench_serve, bench_sim)
 
     bench_sim.run()            # paper Figs 7 & 8 (+ straggler control)
     bench_alltoallv.main()     # paper Fig 6 analogue
@@ -27,6 +27,9 @@ def main() -> None:
     dlrm_payload["kernels"] = bench_kernels.main()
     # chaos: absorption, degraded-mode flush cost, eviction recovery time
     dlrm_payload["faults"] = bench_faults.run()
+    # overload: admission-policy sweep at 3x measured capacity (p50/p99,
+    # goodput, admit/shed rates) + batched-vs-individual CTR parity
+    dlrm_payload["serve"] = bench_serve.run()
 
     # perf trajectory: BENCH_dlrm.json keyed by git SHA
     path = bench_dlrm.write_bench_json(dlrm_payload)

@@ -10,6 +10,15 @@ Run:  PYTHONPATH=src python examples/serve_dlrm_bls.py [--batches 20]
       [--exchange dense|ragged|auto] [--ragged-cap N] [--row-block N]
       [--pool-mode auto|vector|scalar]
       [--exchange-pipeline mono|ring|auto]
+      [--frontend [--open-requests N] [--overload X] [--burstiness B]
+       [--slo-ms MS] [--max-queue N] [--admission slo|queue|none]]
+
+With --frontend the example switches from closed-loop batch replay to the
+overload-robust serving frontend (DESIGN.md §9): an open-loop bursty
+request stream is generated at --overload times the engine's measured
+capacity and driven in real time through SLO-aware admission, deadline
+shedding and backpressure; the run reports the request-level ledger and
+asserts the exact accounting invariant.
 
 With --cache-rows > 0 and --exchange auto, the engine starts on the dense
 butterfly and the cap autotuner flips it to the ragged miss-residual
@@ -32,6 +41,7 @@ keeps the one-row-per-iteration walk — both bit-identical in f32, so the
 flag exists purely for A/B timing.
 """
 import argparse
+import time
 
 import jax
 import numpy as np
@@ -78,6 +88,25 @@ def main():
                          "all_to_all ('mono') vs P-1 chunked ppermute "
                          "rounds with per-peer decode overlap ('ring') — "
                          "bit-identical outputs; 'auto' = ring at P >= 4")
+    ap.add_argument("--frontend", action="store_true",
+                    help="serve an open-loop bursty request stream through "
+                         "the overload-robust frontend (DESIGN.md §9) "
+                         "instead of closed-loop batch replay")
+    ap.add_argument("--open-requests", type=int, default=512,
+                    help="--frontend: number of open-loop requests")
+    ap.add_argument("--overload", type=float, default=1.5,
+                    help="--frontend: offered load as a multiple of the "
+                         "engine's measured capacity (>1 overloads)")
+    ap.add_argument("--burstiness", type=float, default=0.3,
+                    help="--frontend: burst-opening probability in [0, 1)")
+    ap.add_argument("--slo-ms", type=float, default=100.0,
+                    help="--frontend: per-request deadline budget")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="--frontend: queue bound (0 = 4 batches)")
+    ap.add_argument("--admission", default="slo",
+                    choices=("slo", "queue", "none"),
+                    help="--frontend: admission policy ('none' = the "
+                         "accept-everything breaching baseline)")
     args = ap.parse_args()
 
     cfg = cb.get_arch("dlrm-kaggle").smoke()
@@ -89,6 +118,9 @@ def main():
     mesh = make_host_mesh(model=n_model)
     params = D.init_dlrm(jax.random.PRNGKey(0), cfg, n_shards=n_model)
     t_pad = D.padded_tables(cfg, n_model)
+
+    if args.frontend:
+        return run_frontend(args, cfg, mesh, params, t_pad)
 
     # paper protocol: preload the dataset before measuring
     data = Preloader(
@@ -154,6 +186,75 @@ def main():
         print(f"cap autotuner: {cap_rec.reason} "
               f"({eng.stats.retunes} retunes, cap in service = "
               f"{eng.ragged_cap or 'dense-equivalent'})")
+
+
+def run_frontend(args, cfg, mesh, params, t_pad):
+    """Open-loop bursty serving through the overload-robust frontend."""
+    from repro.serving.frontend import ServingFrontend
+
+    eng = DLRMEngine(params, cfg, batch_size=args.batch_size,
+                     bound=args.bound, microbatches=args.microbatches,
+                     wire_dtype=args.wire_dtype, exchange=args.exchange,
+                     ragged_cap=args.ragged_cap,
+                     exchange_pipeline=args.exchange_pipeline,
+                     row_block=args.row_block, pool_mode=args.pool_mode)
+    with partition.axis_rules(mesh):
+        # warm the compile caches, then measure the steady flush time the
+        # offered load and the admission predictor are calibrated against
+        warm = S.make_batch(cfg, args.batch_size, mode="hetero", seed=7,
+                            step=0, t_pad=t_pad)
+        flush_s = []
+        for _ in range(max(2, args.batches)):
+            t0 = time.perf_counter()
+            for i in range(args.batch_size):
+                eng.submit(warm.dense[i], warm.idx[i], warm.mask[i])
+            eng.drain()
+            flush_s.append(time.perf_counter() - t0)
+        flush_s = min(flush_s)
+        capacity_rps = args.batch_size / flush_s
+        rate = args.overload * capacity_rps
+        print(f"capacity ~{capacity_rps:,.0f} req/s (flush "
+              f"{flush_s * 1e3:.1f} ms); offering {args.overload:.1f}x "
+              f"= {rate:,.0f} req/s, burstiness {args.burstiness}")
+
+        reqs = S.request_stream(cfg, args.open_requests, rate_rps=rate,
+                                burstiness=args.burstiness, mode="hetero",
+                                t_pad=t_pad, seed=7)
+        fe = ServingFrontend(
+            eng, slo_s=args.slo_ms / 1e3,
+            max_queue=args.max_queue or 4 * args.batch_size,
+            admission=args.admission, init_flush_s=flush_s)
+        completed, nxt = [], 0
+        t0 = time.perf_counter()
+        while nxt < len(reqs):
+            # open-loop drive: everything that has arrived by now enters
+            # before the next scheduling round, backdated to its true
+            # arrival — a flush never throttles the offered load
+            now = time.perf_counter()
+            while nxt < len(reqs) and t0 + reqs[nxt].t_arrive <= now:
+                r = reqs[nxt]
+                fe.try_submit(r.dense, r.idx, r.mask,
+                              now=t0 + r.t_arrive)
+                nxt += 1
+            completed += fe.pump()
+        completed += fe.drain()
+
+    st = fe.stats
+    e2e, qd = st.e2e, st.queue_delay
+    print(f"frontend[{args.admission}]: offered {st.offered}, admitted "
+          f"{st.admitted}, rejected {st.rejected} (retried {st.retried}), "
+          f"shed {st.shed}, served {st.served} (+{st.degraded_served} "
+          f"degraded), late {st.served_late}")
+    print(f"latency: queue-delay p50={qd.percentile(.5) * 1e3:.1f} "
+          f"p99={qd.percentile(.99) * 1e3:.1f} ms, e2e "
+          f"p50={e2e.percentile(.5) * 1e3:.1f} "
+          f"p99={e2e.percentile(.99) * 1e3:.1f} ms (SLO {args.slo_ms} ms)")
+    ok = (st.accounted and st.queued == 0 and st.inflight == 0
+          and len(completed) == st.completed)
+    print(f"accounting: {'exact' if ok else 'DRIFTED'} "
+          f"(admitted {st.admitted} == served {st.served} + degraded "
+          f"{st.degraded_served} + shed {st.shed})")
+    assert ok, "conservation invariant violated"
 
 
 if __name__ == "__main__":

@@ -11,6 +11,11 @@
                is benchmarked under (message raggedness for BLS, head skew
                for the cache).
 
+``open_loop_arrivals`` / ``request_stream`` add the TIME dimension: an
+open-loop, optionally bursty (Markov-modulated Poisson) arrival process
+over single-sample requests — the workload the continuous-batching
+serving frontend (serving/frontend.py) is gated under.
+
 All generators are numpy-side (host input pipeline) and deterministic per
 (seed, step) so distributed hosts can generate their shard without exchange.
 """
@@ -84,6 +89,69 @@ def batch_stream(cfg: DLRMConfig, batch: int, n_steps: int, **kw
                  ) -> Iterator[Batch]:
     for step in range(n_steps):
         yield make_batch(cfg, batch, step=step, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One open-loop serving request: a single sample row plus its
+    arrival time on the generator's virtual clock (seconds from 0)."""
+    t_arrive: float
+    dense: np.ndarray    # (n_dense,) float32
+    idx: np.ndarray      # (T_pad, hot) int32
+    mask: np.ndarray     # (T_pad, hot) float32
+
+
+def open_loop_arrivals(n: int, *, rate_rps: float, burstiness: float = 0.0,
+                       burst_factor: float = 8.0,
+                       mean_burst_len: int = 16,
+                       factor_of=None, seed: int = 0) -> np.ndarray:
+    """Arrival times (seconds, ascending) of an open-loop request stream.
+
+    Baseline is Poisson at ``rate_rps``.  ``burstiness`` in [0, 1) turns
+    it into a two-state Markov-modulated process (the power-law traffic
+    shape the capacity-scale-out paper identifies as the tail-latency
+    driver): with probability ``burstiness`` an arrival opens a burst of
+    geometric mean length ``mean_burst_len`` during which inter-arrival
+    gaps shrink by ``burst_factor`` — same offered mean load is NOT
+    preserved (bursts genuinely overload), which is the point.
+
+    ``factor_of(i)`` (e.g. ``lambda i: plan.arrival_factor(i // B)`` from
+    a ``runtime.faults.FaultPlan``) multiplies the instantaneous rate per
+    arrival index, so chaos plans drive deterministic load spikes.
+    Deterministic per (seed, parameters)."""
+    if not 0.0 <= burstiness < 1.0:
+        raise ValueError(f"burstiness must be in [0, 1), got {burstiness}")
+    rng = np.random.default_rng(np.random.SeedSequence([seed, n]))
+    gaps = rng.exponential(1.0 / rate_rps, size=n)
+    opens = rng.random(n) < burstiness
+    burst_left = 0
+    for i in range(n):
+        if burst_left <= 0 and opens[i]:
+            burst_left = 1 + rng.geometric(1.0 / max(mean_burst_len, 1))
+        if burst_left > 0:
+            gaps[i] /= burst_factor
+            burst_left -= 1
+        if factor_of is not None:
+            gaps[i] /= max(float(factor_of(i)), 1e-9)
+    return np.cumsum(gaps)
+
+
+def request_stream(cfg: DLRMConfig, n: int, *, rate_rps: float,
+                   burstiness: float = 0.0, burst_factor: float = 8.0,
+                   mode: str = "powerlaw_hetero",
+                   t_pad: Optional[int] = None, factor_of=None,
+                   seed: int = 0) -> list:
+    """Open-loop request stream: ``n`` single-sample requests with bursty
+    arrival times (``open_loop_arrivals``) and ``make_batch``-distributed
+    features — the workload the serving frontend's admission control,
+    shedding and backpressure are exercised under.  Returns a list of
+    :class:`Request` sorted by arrival time."""
+    t = open_loop_arrivals(n, rate_rps=rate_rps, burstiness=burstiness,
+                           burst_factor=burst_factor, factor_of=factor_of,
+                           seed=seed)
+    b = make_batch(cfg, n, mode=mode, t_pad=t_pad, seed=seed)
+    return [Request(t_arrive=float(t[i]), dense=b.dense[i], idx=b.idx[i],
+                    mask=b.mask[i]) for i in range(n)]
 
 
 def hot_counts_stats(b: Batch) -> dict:

@@ -55,6 +55,11 @@ class FaultPlan:
     delay: np.ndarray                       # (n_members, n_steps) seconds
     crash_step: tuple = ()                  # ((member, step), ...)
     sustained_from: tuple = ()              # ((member, from_step, extra_s),)
+    # traffic-side faults (the serving FRONTEND's chaos surface, not the
+    # pod's): arrival-rate bursts the open-loop generator multiplies in,
+    # and dequeue stalls the frontend pays before dispatching a batch
+    arrival_burst: tuple = ()               # ((from_step, n_steps, factor),)
+    queue_delay: tuple = ()                 # ((from_step, n_steps, seconds),)
     seed: int = 0
 
     @classmethod
@@ -104,6 +109,29 @@ class FaultPlan:
         return dataclasses.replace(
             self, crash_step=self.crash_step + ((int(member), int(at_step)),))
 
+    def with_arrival_burst(self, from_step: int, n_steps: int,
+                           factor: float) -> "FaultPlan":
+        """An arrival-rate burst: the open-loop request generator
+        multiplies its rate by ``factor`` for arrivals whose step index
+        falls in [from_step, from_step + n_steps) — the power-law traffic
+        spike the frontend's admission control must survive.  Overlapping
+        bursts compose multiplicatively (``arrival_factor``)."""
+        if factor <= 0:
+            raise ValueError(f"burst factor must be > 0, got {factor}")
+        return dataclasses.replace(
+            self, arrival_burst=self.arrival_burst
+            + ((int(from_step), int(n_steps), float(factor)),))
+
+    def with_queue_delay(self, from_step: int, n_steps: int,
+                         seconds: float) -> "FaultPlan":
+        """A dequeue stall: the frontend sleeps ``seconds`` extra before
+        dispatching each batch in [from_step, from_step + n_steps) —
+        modeling a slow upstream feature fetch or queue-lock contention.
+        Overlapping windows add (``queue_delay_of``)."""
+        return dataclasses.replace(
+            self, queue_delay=self.queue_delay
+            + ((int(from_step), int(n_steps), float(seconds)),))
+
     # -- queries -----------------------------------------------------------
 
     def delay_of(self, member: int, step: int) -> float:
@@ -119,6 +147,21 @@ class FaultPlan:
         """Members under a sustained slowdown (at ``at_step``, or ever)."""
         return sorted({m for m, s, _ in self.sustained_from
                        if at_step is None or at_step >= s})
+
+    def arrival_factor(self, step: int) -> float:
+        """Arrival-rate multiplier at ``step`` (1.0 outside every burst;
+        overlapping bursts multiply)."""
+        f = 1.0
+        for s0, n, factor in self.arrival_burst:
+            if s0 <= step < s0 + n:
+                f *= factor
+        return f
+
+    def queue_delay_of(self, step: int) -> float:
+        """Extra dequeue stall (seconds) the frontend pays at ``step``
+        (overlapping windows add)."""
+        return sum(sec for s0, n, sec in self.queue_delay
+                   if s0 <= step < s0 + n)
 
     def transient_only(self) -> bool:
         return not self.crash_step and not self.sustained_from
@@ -202,6 +245,7 @@ class FaultInjector:
         self.live = list(range(plan.n_members))
         self.fired: set = set()
         self.injected_delay_s = 0.0
+        self.injected_queue_delay_s = 0.0
 
     def host_delay(self, step: int, exclude=()) -> float:
         """The delay the lockstep step pays: max over live members.
@@ -229,6 +273,18 @@ class FaultInjector:
         if d > 0:
             time.sleep(d)
             self.injected_delay_s += d
+
+    def on_dequeue(self, step: int) -> float:
+        """Called by the serving FRONTEND before dispatching batch
+        ``step``: sleeps the plan's queue-delay stall (scaled by
+        ``time_scale``) and returns the seconds injected — the knob chaos
+        runs use to blow up queue-drain predictions and exercise the
+        shed/degrade ladder."""
+        d = self.plan.queue_delay_of(step) * self.time_scale
+        if d > 0:
+            time.sleep(d)
+            self.injected_queue_delay_s += d
+        return d
 
     def _survivors(self, mesh, pos: int) -> list:
         """Devices left after dropping the crashed member's model-axis

@@ -47,6 +47,18 @@ class ServeStats:
     def throughput_rps(self) -> float:
         return self.requests / self.total_s if self.total_s else 0.0
 
+    def to_dict(self) -> dict:
+        """Plain-JSON view of the ledger (every dataclass field plus the
+        derived throughput) — the stable surface benchmarks and CI gates
+        consume instead of reaching into fields one by one.  Subclasses
+        (``serving.frontend.FrontendStats``) extend it with their own
+        counters and histograms; values stay JSON-serializable all the
+        way down."""
+        d = {f.name: getattr(self, f.name)
+             for f in dataclasses.fields(ServeStats)}
+        d["throughput_rps"] = self.throughput_rps
+        return d
+
 
 class DLRMEngine:
     """Fixed-batch CTR serving with the BLS-enabled step.
@@ -100,6 +112,7 @@ class DLRMEngine:
 
     def __init__(self, params, cfg: DLRMConfig, *, batch_size: int = 512,
                  bound: int = 0, microbatches: int = 1,
+                 unroll: Optional[int] = None,
                  wire_dtype: Optional[str] = None, cache=None,
                  exchange: Optional[str] = None,
                  ragged_cap: Optional[int] = None,
@@ -118,6 +131,12 @@ class DLRMEngine:
         self.params, self.cfg = params, cfg
         self.batch_size = batch_size
         self.bound, self.microbatches = bound, microbatches
+        # BLS scan unroll.  None keeps the pipeline's throughput default
+        # (min(bound+1, 4)); unroll=1 makes every microbatch compile to
+        # the SAME loop body, so a request's served CTR is bit-identical
+        # regardless of its position in the batch — serving paths that
+        # promise replay-exact answers (the frontend's parity gate) want 1
+        self.unroll = unroll
         self.wire_dtype = wire_dtype or cfg.wire_dtype
         self.cache = cache
         self.exchange = exchange or cfg.exchange
@@ -155,8 +174,14 @@ class DLRMEngine:
         self.cap_tuner = CapAutotuner()
         self.stats = ServeStats()
         self._pending: list = []
-        self._inflight = None          # (out_future, diag, n, t0)
+        # (out_future, diag, n, t0, watcher, done, step_no) under
+        # plan_pipeline; always None otherwise
+        self._inflight = None
         self._last_finish_t = 0.0      # end of the last harvested batch
+        # lookahead-prefetched plan (digest, plan) staged by stage_plan();
+        # the next pipelined flush adopts it when its batch matches
+        self._staged_plan = None
+        self.plan_stage_hits = 0       # flushes served a prefetched plan
         self._step = jax.jit(self._make_step(bound, microbatches))
 
     def calibrate_cache(self, idx: np.ndarray, mask: np.ndarray,
@@ -169,6 +194,14 @@ class DLRMEngine:
                                          rows)
         self._step = jax.jit(self._make_step(self.bound, self.microbatches))
         return self.cache
+
+    def adopt_cache(self, cache):
+        """Swap in an externally built hot-row cache (the frontend's
+        lookahead warmer rebuilds one from observed access counts) and
+        re-jit the step around it.  Pass None to drop the cache."""
+        self.cache = cache
+        self._staged_plan = None       # plan applicability may change
+        self._step = jax.jit(self._make_step(self.bound, self.microbatches))
 
     def _make_step(self, bound, microbatches):
         cfg, wire = self.cfg, self.wire_dtype
@@ -209,7 +242,8 @@ class DLRMEngine:
         def forward(params, dense, idx, mask, cache, plan):
             return _finish(dlrm_mod.forward_distributed(
                 params, cfg, dense, idx, mask, bound=bound,
-                microbatches=microbatches, cache=cache, wire_dtype=wire,
+                microbatches=microbatches, unroll=self.unroll,
+                cache=cache, wire_dtype=wire,
                 exchange=ex, ragged_cap=cap, exchange_pipeline=pipe,
                 row_block=rblk, pool_mode=pool, plan=plan,
                 degraded_members=deg, degraded_fallback=fb,
@@ -250,6 +284,36 @@ class DLRMEngine:
         if self.cache is None:
             return base
         return base + (self.cache.hot_rows, self.cache.slot_of)
+
+    # -- lookahead plan prefetch (the frontend's PR 4 hook) ----------------
+
+    @staticmethod
+    def _plan_digest(i: np.ndarray):
+        i = np.ascontiguousarray(i)
+        return (i.shape, hash(i.tobytes()))
+
+    def stage_plan(self, idx_rows) -> bool:
+        """Prefetch the embedding-bag stream plan for a PROSPECTIVE batch
+        before it is flushed: ``idx_rows`` are the per-request index rows
+        (n <= batch_size; padded exactly as :meth:`flush` pads) of the
+        batch a continuous-batching frontend expects to dispatch next.
+        The plan build is DISPATCHED (async) here, so it overlaps whatever
+        the device is doing; the next pipelined flush whose batch matches
+        adopts it instead of re-planning (``plan_stage_hits``), and a
+        mismatch (the queue changed under the frontend) silently falls
+        back to inline planning.  Returns True when a plan was staged."""
+        if not self.plan_pipeline:
+            return False
+        rows = list(idx_rows)
+        if not rows or len(rows) > self.batch_size:
+            return False
+        i = np.stack(rows + [rows[-1]] * (self.batch_size - len(rows)))
+        _, i, _ = self._fit_batch(None, i,
+                                  np.zeros(i.shape, np.float32))
+        with self._mesh_ctx():
+            plan = self._plan_fn(self.params, jnp.asarray(i))
+        self._staged_plan = (self._plan_digest(i), plan)
+        return True
 
     def submit(self, dense: np.ndarray, idx: np.ndarray, mask: np.ndarray):
         """Queue one request (row).  Returns CTRs when a batch fills (the
@@ -332,8 +396,18 @@ class DLRMEngine:
         # entry harvested below) still occupies the device — the plan
         # build overlaps stage_a compute instead of serializing with it
         with self._mesh_ctx():
-            args = self._step_args(*self._fit_batch(d, i, m))
-            plan = self._plan_fn(self.params, args[2])
+            fitted = self._fit_batch(d, i, m)
+            args = self._step_args(*fitted)
+            # a lookahead-staged plan (stage_plan) is adopted when its
+            # batch digest matches what we are about to dispatch; a stale
+            # stage (queue churn between peek and flush) replans inline
+            staged, self._staged_plan = self._staged_plan, None
+            if staged is not None and \
+                    staged[0] == self._plan_digest(fitted[1]):
+                plan = staged[1]
+                self.plan_stage_hits += 1
+            else:
+                plan = self._plan_fn(self.params, args[2])
             out, *diag = self._step(*args, plan)
         # a daemon watcher blocks on the async result off the main thread
         # and stamps true completion, so the harvested batch's latency is
@@ -356,7 +430,14 @@ class DLRMEngine:
 
     def drain(self):
         """Flush the pending queue AND the pipeline: returns every CTR not
-        yet returned (concatenated), or None if nothing is outstanding."""
+        yet returned (concatenated), or None if nothing is outstanding.
+
+        Idempotent by contract: with an empty queue and no in-flight
+        batch this is a guaranteed no-op returning None — callers (the
+        serving frontend's shutdown path, chaos harnesses) may drain
+        repeatedly without tracking whether anything is outstanding."""
+        if not self._pending and self._inflight is None:
+            return None
         outs = [o for o in (self.flush(), self._harvest()) if o is not None]
         return np.concatenate(outs) if outs else None
 
