@@ -14,7 +14,7 @@
 
 PY ?= python
 
-.PHONY: test bench bench-smoke chaos-smoke serve-smoke
+.PHONY: test bench bench-smoke chaos-smoke serve-smoke fresh-smoke
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -43,3 +43,13 @@ chaos-smoke:
 # requests individually flushed (unroll=1 replay-exact serving mode).
 serve-smoke:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/bench_serve.py --smoke
+
+# freshness gate (DESIGN.md §10): with a live delta stream riding the
+# fused BLS wire, versions_behind <= k_fresh at EVERY flush — including
+# under an injected update burst + crash mid-apply, which must roll back
+# atomically, evict, replay, lose ZERO requests, and still converge
+# BIT-exact to the apply-all-up-front oracle; served flush p99 with the
+# live stream must stay <= 1.3x the no-update baseline (freshness rides
+# the existing wire, it is not a second serving path).
+fresh-smoke:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/bench_freshness.py --smoke

@@ -18,7 +18,8 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))
 def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (bench_alltoallv, bench_dlrm, bench_faults,
-                            bench_kernels, bench_serve, bench_sim)
+                            bench_freshness, bench_kernels, bench_serve,
+                            bench_sim)
 
     bench_sim.run()            # paper Figs 7 & 8 (+ straggler control)
     bench_alltoallv.main()     # paper Fig 6 analogue
@@ -30,6 +31,9 @@ def main() -> None:
     # overload: admission-policy sweep at 3x measured capacity (p50/p99,
     # goodput, admit/shed rates) + batched-vs-individual CTR parity
     dlrm_payload["serve"] = bench_serve.run()
+    # freshness: flush p50/p99 with vs without a live delta stream,
+    # rows/s absorbed, apply-window cost, staleness + chaos recovery
+    dlrm_payload["freshness"] = bench_freshness.run()
 
     # perf trajectory: BENCH_dlrm.json keyed by git SHA
     path = bench_dlrm.write_bench_json(dlrm_payload)

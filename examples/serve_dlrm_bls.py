@@ -11,7 +11,8 @@ Run:  PYTHONPATH=src python examples/serve_dlrm_bls.py [--batches 20]
       [--pool-mode auto|vector|scalar]
       [--exchange-pipeline mono|ring|auto]
       [--frontend [--open-requests N] [--overload X] [--burstiness B]
-       [--slo-ms MS] [--max-queue N] [--admission slo|queue|none]]
+       [--slo-ms MS] [--max-queue N] [--admission slo|queue|none]
+       [--updates N] [--k-fresh K]]
 
 With --frontend the example switches from closed-loop batch replay to the
 overload-robust serving frontend (DESIGN.md §9): an open-loop bursty
@@ -19,6 +20,13 @@ request stream is generated at --overload times the engine's measured
 capacity and driven in real time through SLO-aware admission, deadline
 shedding and backpressure; the run reports the request-level ledger and
 asserts the exact accounting invariant.
+
+With --updates N (frontend mode) a live synthetic delta stream — N rows
+per version — rides the fused BLS wire while the frontend keeps
+admitting (DESIGN.md §10): versioned row updates are shipped inside the
+serving exchange, applied atomically between flushes under the
+--k-fresh bounded-staleness gate, and the run reports the freshness
+ledger and asserts versions_behind <= k_fresh at every flush.
 
 With --cache-rows > 0 and --exchange auto, the engine starts on the dense
 butterfly and the cap autotuner flips it to the ragged miss-residual
@@ -107,6 +115,13 @@ def main():
                     choices=("slo", "queue", "none"),
                     help="--frontend: admission policy ('none' = the "
                          "accept-everything breaching baseline)")
+    ap.add_argument("--updates", type=int, default=0,
+                    help="--frontend: stream live embedding-row deltas at "
+                         "N rows per version over the BLS wire "
+                         "(DESIGN.md §10; 0 = off)")
+    ap.add_argument("--k-fresh", type=int, default=2,
+                    help="--frontend --updates: bounded-staleness gate — "
+                         "max versions any member may lag")
     args = ap.parse_args()
 
     cfg = cb.get_arch("dlrm-kaggle").smoke()
@@ -192,12 +207,21 @@ def run_frontend(args, cfg, mesh, params, t_pad):
     """Open-loop bursty serving through the overload-robust frontend."""
     from repro.serving.frontend import ServingFrontend
 
+    fm = None
+    if args.updates > 0:
+        from repro.runtime.freshness import FreshnessManager
+        fm = FreshnessManager(
+            S.delta_stream(cfg, rows_per_version=args.updates, seed=7),
+            k_fresh=args.k_fresh)
+        print(f"freshness: streaming {args.updates} rows/version onto "
+              f"the wire, k_fresh={args.k_fresh}")
     eng = DLRMEngine(params, cfg, batch_size=args.batch_size,
                      bound=args.bound, microbatches=args.microbatches,
                      wire_dtype=args.wire_dtype, exchange=args.exchange,
                      ragged_cap=args.ragged_cap,
                      exchange_pipeline=args.exchange_pipeline,
-                     row_block=args.row_block, pool_mode=args.pool_mode)
+                     row_block=args.row_block, pool_mode=args.pool_mode,
+                     freshness=fm)
     with partition.axis_rules(mesh):
         # warm the compile caches, then measure the steady flush time the
         # offered load and the admission predictor are calibrated against
@@ -255,6 +279,15 @@ def run_frontend(args, cfg, mesh, params, t_pad):
           f"(admitted {st.admitted} == served {st.served} + degraded "
           f"{st.degraded_served} + shed {st.shed})")
     assert ok, "conservation invariant violated"
+    if fm is not None:
+        behind = max(fm.behind_trace, default=0)
+        print(f"freshness: applied {fm.rows_applied} rows over "
+              f"{fm.applies} atomic windows while serving; staleness "
+              f"max {behind} <= k_fresh {fm.k_fresh}, "
+              f"{eng.stats.rows_stale_served} stale rows served, "
+              f"{fm.delta_rejects} rejects, {fm.rollbacks} rollbacks")
+        assert all(v <= fm.k_fresh for v in fm.behind_trace), \
+            "bounded-staleness invariant violated"
 
 
 if __name__ == "__main__":

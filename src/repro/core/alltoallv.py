@@ -269,7 +269,8 @@ def exchange_wire_layout(*, ragged: bool, n_dest: int, cap: int, bs: int,
                          t_loc: int, embed_dim: int,
                          wire_dtype: str = "float32",
                          emb_dtype=jnp.float32,
-                         n_slots: int = 0) -> WireLayout:
+                         n_slots: int = 0,
+                         delta_bytes: int = 0) -> WireLayout:
     """The ONE layout both halves of a DLRM exchange agree on.
 
     ragged: per destination ``cap`` codec rows + narrow slot ids + an
@@ -277,7 +278,14 @@ def exchange_wire_layout(*, ragged: bool, n_dest: int, cap: int, bs: int,
     block.  ``emb_dtype`` is what a float32 codec ships verbatim (the
     pooled dtype); lossy codecs fix their own wire dtype.  ``n_slots``
     is the receive-slot address space the ragged ids must cover
-    (default bs·t_loc) — it alone picks the id width."""
+    (default bs·t_loc) — it alone picks the id width.
+
+    ``delta_bytes > 0`` adds ONE extra field, ``"xdelta"``: an opaque
+    uint8 blob per destination carrying versioned embedding row deltas
+    (DESIGN.md §10).  The blob's internal structure is its own
+    :func:`delta_wire_layout`; from THIS layout's point of view it is a
+    single byte field, so freshness updates ride the existing fused
+    buffer and the exchange stays exactly one collective."""
     wire = canon_wire(wire_dtype)
     qdt = {"float32": jnp.dtype(emb_dtype), "bfloat16": jnp.bfloat16,
            "int8": jnp.int8}[wire]
@@ -291,7 +299,30 @@ def exchange_wire_layout(*, ragged: bool, n_dest: int, cap: int, bs: int,
         fields = {"q": ((bs, t_loc, embed_dim), qdt)}
         if wire == "int8":
             fields["scale"] = ((bs, t_loc, 1), jnp.bfloat16)
+    if delta_bytes:
+        fields["xdelta"] = ((int(delta_bytes),), jnp.uint8)
     return wire_layout(n_dest, fields)
+
+
+def delta_wire_layout(n_dest: int, cap: int, embed_dim: int,
+                      emb_dtype=jnp.float32) -> WireLayout:
+    """Sub-layout of the versioned row-delta blob that rides the fused
+    exchange as its single ``"xdelta"`` field (DESIGN.md §10): per
+    destination up to ``cap`` new embedding rows (``dvec``), their flat
+    global ids (``dgid`` = table · R_max + row), per-row uint32 checksums
+    stamped at the update SOURCE (``dcs`` — corruption anywhere on the
+    path is detected at apply time, not trusted), the valid-row count
+    (``dcnt``) and the batch's monotone version (``dver``).  Fused and
+    defused with the same :func:`fuse_wire`/:func:`defuse_wire` as the
+    embedding payload — bitcasts only, so the checksum the source stamped
+    is verified against the exact bytes that arrived."""
+    return wire_layout(n_dest, {
+        "dvec": ((cap, embed_dim), jnp.dtype(emb_dtype)),
+        "dgid": ((cap,), jnp.int32),
+        "dcs": ((cap,), jnp.uint32),
+        "dcnt": ((1,), jnp.int32),
+        "dver": ((1,), jnp.int32),
+    })
 
 
 def alltoallv_fused(buf, axis: str = "model"):

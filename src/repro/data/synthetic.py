@@ -154,6 +154,78 @@ def request_stream(cfg: DLRMConfig, n: int, *, rate_rps: float,
                     mask=b.mask[i]) for i in range(n)]
 
 
+@dataclasses.dataclass(frozen=True)
+class DeltaBatch:
+    """One version's worth of embedding row updates from a (simulated)
+    continuous trainer: ``vec[i]`` is the NEW value of row ``row[i]`` of
+    (padded) table ``tab[i]``.  Versions are monotone; (tab, row) pairs are
+    unique WITHIN a version so the apply order inside one version cannot
+    matter — only the order ACROSS versions does, which is what the
+    freshness ledger tracks (runtime/freshness.py)."""
+    version: int
+    tab: np.ndarray      # (n,) int32 padded-stack table index
+    row: np.ndarray      # (n,) int32 row within the table
+    vec: np.ndarray      # (n, embed_dim) new embedding values
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.tab.shape[0])
+
+
+def make_delta_batch(cfg: DLRMConfig, version: int, *,
+                     rows_per_version: int = 32, mode: str = "powerlaw",
+                     powerlaw_alpha: float = 1.05,
+                     dtype=np.float32, seed: int = 0) -> DeltaBatch:
+    """The deterministic per-version generator behind :func:`delta_stream`
+    — pure in (seed, version), so an oracle can regenerate any version
+    independently of the streaming order (the bit-exactness tests in
+    tests/test_freshness.py do exactly that).
+
+    ``mode='powerlaw'`` skews updated ROWS the same way serving access is
+    skewed (continuous training touches the hot head hardest — the case
+    where freshness interacts with the hot cache); 'uniform' spreads them.
+    Duplicate (table, row) pairs within the version are dropped keeping
+    the LAST occurrence, so a version is a set of row assignments."""
+    if version < 1:
+        raise ValueError(f"delta versions start at 1, got {version}")
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 0x5E1F, version]))
+    t = cfg.n_tables
+    sizes = np.asarray(cfg.table_sizes)
+    tab = rng.integers(0, t, size=rows_per_version).astype(np.int32)
+    if mode == "powerlaw":
+        raw = rng.zipf(powerlaw_alpha, size=rows_per_version)
+        row = np.minimum(raw - 1, sizes[tab] - 1).astype(np.int32)
+    elif mode == "uniform":
+        row = (rng.random(rows_per_version) * sizes[tab]).astype(np.int32)
+    else:
+        raise ValueError(f"unknown delta mode {mode!r}")
+    vec = rng.standard_normal((rows_per_version, cfg.embed_dim)) \
+        .astype(dtype)
+    # last write wins within a version -> unique (tab, row) pairs
+    key = tab.astype(np.int64) * int(sizes.max()) + row
+    _, last = np.unique(key[::-1], return_index=True)
+    keep = np.sort(rows_per_version - 1 - last)
+    return DeltaBatch(version=int(version), tab=tab[keep], row=row[keep],
+                      vec=vec[keep])
+
+
+def delta_stream(cfg: DLRMConfig, *, rows_per_version: int = 32,
+                 mode: str = "powerlaw", powerlaw_alpha: float = 1.05,
+                 dtype=np.float32, seed: int = 0,
+                 start_version: int = 1) -> Iterator[DeltaBatch]:
+    """Infinite stream of :class:`DeltaBatch` with monotone versions —
+    the synthetic stand-in for a trainer's publish stream.  The serving
+    side (``runtime.freshness.FreshnessManager``) pulls from it at
+    whatever rate the bounded-staleness gate allows; being a generator,
+    nothing is materialized ahead of the pull."""
+    v = start_version
+    while True:
+        yield make_delta_batch(cfg, v, rows_per_version=rows_per_version,
+                               mode=mode, powerlaw_alpha=powerlaw_alpha,
+                               dtype=dtype, seed=seed)
+        v += 1
+
+
 def hot_counts_stats(b: Batch) -> dict:
     counts = b.mask.sum(axis=2)  # (B, T)
     return {"mean_hot": float(counts.mean()), "max_hot": float(counts.max()),

@@ -330,6 +330,7 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                         row_block: Optional[int] = None,
                         pool_mode: Optional[str] = None,
                         plan=None,
+                        deltas=None,
                         degraded_members: tuple = (),
                         degraded_fallback: str = "zero",
                         return_diag: bool = False):
@@ -396,8 +397,28 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
     sum; needs the cache layout's replicated idx/mask).  The quality
     loss is never silent: ``approx_rows`` counts exactly the live
     (sample, table) bags served from the fallback.
+
+    ``deltas`` (DESIGN.md §10) threads versioned embedding row updates
+    through the SAME fused exchange: a dict of ``(P, microbatches, ...)``
+    leaves — ``dvec (…, dcap, s)`` new rows, ``dgid (…, dcap)`` flat
+    table·R+row ids, ``dcs`` source-stamped checksums, ``dcnt``/``dver``
+    per-slice count and version — built by
+    ``runtime.freshness.FreshnessManager.next_wire``.  Each member's
+    stage_a repacks its slice by OWNER (``pack_ragged_tree`` into the
+    ``"xdelta"`` sub-blob of the wire layout; a slice holds ≤ dcap rows,
+    so the dcap-cap buckets can never drop), the exchange moves it for
+    free (one extra WireField, zero extra collectives), and stage_b
+    returns each member's harvested per-source buckets as an extra
+    ``staged`` output — the FORWARD never mutates tables; the atomic
+    apply between flushes does, which is what keeps a degraded member
+    serving its last-good version instead of blocking traffic.
     """
     mesh = partition.current_mesh()
+    if deltas is not None and (mesh is None
+                               or "model" not in mesh.axis_names):
+        raise ValueError(
+            "forward_distributed: deltas ride the model-axis exchange — "
+            "install a model mesh via partition.axis_rules")
     if mesh is None or "model" not in mesh.axis_names:
         if cache is not None or (wire_dtype or cfg.wire_dtype) != "float32":
             import warnings
@@ -441,12 +462,19 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
     pipe = resolve_pipeline(
         exchange_pipeline if exchange_pipeline is not None
         else cfg.exchange_pipeline, n_shards)
+    has_delta = deltas is not None
+    dcap = int(deltas["dgid"].shape[-1]) if has_delta else 0
+    dlayout = a2a_mod.delta_wire_layout(
+        n_shards, dcap, params["tables"].shape[2], emb_dtype) \
+        if has_delta else None
     # the ONE static layout both exchange halves (and the BLS ring slot)
-    # agree on: the whole payload as a (P, slot_bytes) uint8 buffer
+    # agree on: the whole payload as a (P, slot_bytes) uint8 buffer —
+    # delta rows included, as the single opaque "xdelta" byte field
     layout = a2a_mod.exchange_wire_layout(
         ragged=use_ragged, n_dest=n_shards, cap=cap, bs=bs_g,
         t_loc=t_loc_g, embed_dim=params["tables"].shape[2],
-        wire_dtype=wire, emb_dtype=emb_dtype)
+        wire_dtype=wire, emb_dtype=emb_dtype,
+        delta_bytes=dlayout.slot_bytes if has_delta else 0)
     if plan is not None and use_ragged:
         raise ValueError(
             "forward_distributed: precomputed stream plans describe the "
@@ -491,10 +519,27 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
         t_loc = tables.shape[0]
         b_row = dense_s.shape[0]
         bs = b_row // (mb * n_shards)  # rows per (microbatch, member)
-        cache_args = extra[:2] if use_cache else ()
+        # positional unpacking of the optional extras, in append order:
+        # cache (2) | fb_rows (1) | plan (1) | deltas (1)
+        ei = 0
+        cache_args = ()
+        if use_cache:
+            cache_args = extra[:2]
+            ei = 2
+        fbr = None
+        if fb_rows is not None:
+            fbr = extra[ei]
+            ei += 1
         # member plan: strip the model-slot axis -> leaves (mb, tiles, ...)
-        plan_s = jax.tree.map(lambda a: a[0], extra[-1]) if has_plan \
-            else None
+        plan_s = None
+        if has_plan:
+            plan_s = jax.tree.map(lambda a: a[0], extra[ei])
+            ei += 1
+        # member delta slices: strip the model-slot axis -> (mb, dcap, ...)
+        deltas_s = None
+        if has_delta:
+            deltas_s = jax.tree.map(lambda a: a[0], extra[ei])
+            ei += 1
 
         def local_miss(ix, mk):
             """This member's local-table (idx, residual mask) slice."""
@@ -509,9 +554,35 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                                                     t_loc, axis=0)
             return ix_loc, hc_mod.miss_mask_of(slot_loc, ix_loc, mk_loc)
 
+        def pack_delta(dx):
+            """One (member, microbatch) delta slice -> the per-destination
+            "xdelta" sub-blob: route each valid row to its OWNING member
+            ((gid // R) // t_loc), repack into dcap-cap buckets (a slice
+            holds <= dcap rows, so drops are structurally impossible) and
+            fuse per the sub-layout.  Checksums ride verbatim — stamped at
+            the source, verified by the receiving HOST."""
+            r_rows = tables.shape[1]
+            n_valid = dx["dcnt"].reshape(())
+            valid = jnp.arange(dcap, dtype=jnp.int32) < n_valid
+            gid = dx["dgid"].astype(jnp.int32)
+            dest = jnp.where(valid, (gid // r_rows) // t_loc, -1)
+            bk, cnts, _ = a2a_mod.pack_ragged_tree(
+                {"dvec": dx["dvec"].astype(emb_dtype), "dgid": gid,
+                 "dcs": dx["dcs"]}, dest, n_shards, dcap)
+            ver = jnp.broadcast_to(dx["dver"].reshape(1, 1),
+                                   (n_shards, 1)).astype(jnp.int32)
+            return a2a_mod.fuse_wire(
+                {"dvec": bk["dvec"], "dgid": bk["dgid"], "dcs": bk["dcs"],
+                 "dcnt": cnts.reshape(n_shards, 1), "dver": ver}, dlayout)
+
         def stage_a(x):
             j, d, ix, mk = x[:4]
-            plan_j = x[4] if has_plan else None
+            xi = 4
+            plan_j = None
+            if has_plan:
+                plan_j = x[xi]
+                xi += 1
+            delta_j = x[xi] if has_delta else None
             ix_loc, miss_mk = local_miss(ix, mk)
             if use_cache:
                 hot_rows, slot_of = cache_args
@@ -530,7 +601,7 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                     dcol = jnp.repeat(jnp.asarray(deg_mask, w.dtype),
                                       t_loc)
                     hits_m = hits_m + ((w * dcol)[..., None]
-                                       * extra[2][None]).astype(emb_dtype)
+                                       * fbr[None]).astype(emb_dtype)
             else:
                 hits_m = jnp.zeros((bs, 0, 0), emb_dtype)  # empty side slot
             if use_ragged:
@@ -548,6 +619,8 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                 payload = jax.tree.map(
                     lambda a: a.reshape(n_shards, bs, *a.shape[1:]),
                     a2a_mod.encode_wire(pooled, wire))
+            if has_delta:
+                payload["xdelta"] = pack_delta(delta_j)
             # one flat uint8 leaf per destination: the whole exchange is
             # one collective, and the BLS ring buffers a single array
             buf = a2a_mod.fuse_wire(payload, layout)
@@ -594,23 +667,52 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                     hits, src * t_loc, t_loc, axis=1)
             return sl
 
+        def delta_of(chunk):
+            """The "xdelta" sub-blob of one source's chunk, defused into
+            its harvested leaves (dcap rows destined to THIS member)."""
+            return a2a_mod.defuse_wire(
+                a2a_mod.defuse_wire(chunk, layout)["xdelta"], dlayout)
+
         def stage_b(recv, side):
             z0, hits = side
+            staged = None
+            if has_delta:
+                # per-source harvest buckets this member will hand its
+                # host: (P_src, dcap, ...) per delta sub-field
+                staged = {f.name: jnp.zeros((n_shards,) + f.shape, f.dtype)
+                          for f in dlayout.fields}
             if pipe == "ring":
                 # chunked ppermute butterfly: round r+1's shift is in
                 # flight while round r's chunk is defused, decoded,
                 # scattered and hit-corrected into its table slice
                 def consume(out, src, chunk):
-                    return jax.lax.dynamic_update_slice_in_dim(
-                        out, chunk_slice(chunk, hits, src), src * t_loc,
+                    if has_delta:
+                        emb, stg = out
+                    else:
+                        emb, stg = out, None
+                    emb = jax.lax.dynamic_update_slice_in_dim(
+                        emb, chunk_slice(chunk, hits, src), src * t_loc,
                         axis=1)
+                    if has_delta:
+                        dd = delta_of(chunk)
+                        stg = {k: stg[k].at[src].set(dd[k]) for k in stg}
+                        return emb, stg
+                    return emb
 
-                emb_all = a2a_mod.ring_exchange(
+                init = jnp.zeros((bs, n_shards * t_loc,
+                                  layout.field("q").shape[-1]), emb_dtype)
+                res = a2a_mod.ring_exchange(
                     recv, "model", n_shards, consume,
-                    jnp.zeros((bs, n_shards * t_loc,
-                               layout.field("q").shape[-1]), emb_dtype))
+                    (init, staged) if has_delta else init)
+                if has_delta:
+                    emb_all, staged = res
+                else:
+                    emb_all = res
             else:
                 f = a2a_mod.defuse_wire(recv, layout)
+                if has_delta:
+                    # (P_src, sub_slot_bytes) -> per-source harvest leaves
+                    staged = a2a_mod.defuse_wire(f["xdelta"], dlayout)
                 if use_ragged:
                     emb_all = ragged_exchange_unpack(
                         f, t_loc=t_loc, bs=bs, out_dtype=emb_dtype)
@@ -631,7 +733,8 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
             z = jnp.concatenate([z0[:, None, :], emb_all[:, :t]], axis=1)
             inter = dot_interaction(z)
             top_in = jnp.concatenate([z0, inter.astype(z0.dtype)], axis=-1)
-            return apply_mlp(top, top_in)[..., 0]
+            logits = apply_mlp(top, top_in)[..., 0]
+            return (logits, staged) if has_delta else logits
 
         def split(a):  # (B_row, ...) -> (mb, B_row/mb, ...)
             return a.reshape(mb, a.shape[0] // mb, *a.shape[1:])
@@ -665,11 +768,23 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
         xs = (js, split(dense_s), split(idx_s), split(mask_s))
         if has_plan:
             xs = xs + (plan_s,)        # leaves already microbatch-major
+        if has_delta:
+            xs = xs + (deltas_s,)      # leaves (mb, dcap, ...)
         if bound == 0 and mb == 1:
             payload, side = stage_a(jax.tree.map(lambda a: a[0], xs))
-            return (stage_b(collective(payload), side)[None],) + diag
+            res = stage_b(collective(payload), side)
+            if has_delta:
+                lg, staged = res
+                # + microbatch and model-slot axes for the out_specs
+                return (lg[None],) + diag + (
+                    jax.tree.map(lambda a: a[None, None], staged),)
+            return (res[None],) + diag
         outs, _ = bls_mod.bls_pipeline(stage_a, collective, stage_b, xs,
                                        bound, unroll=unroll)
+        if has_delta:
+            lg, staged = outs          # staged leaves (mb, P_src, ...)
+            return (lg,) + diag + (
+                jax.tree.map(lambda a: a[None], staged),)
         return (outs,) + diag  # (mb, bs) [, scalar, scalar]
 
     sparse_spec = (P(baxes if baxes else None, None, None) if use_cache
@@ -693,14 +808,24 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
         in_specs += [jax.tree.map(
             lambda _: P("model", baxes if baxes else None), plan)]
         args += [plan]
+    if has_delta:
+        # delta slices are model-major on axis 0: member m's (mb, ...) rows
+        in_specs += [jax.tree.map(lambda _: P("model"), deltas)]
+        args += [deltas]
     out_spec = P(None, baxes + ("model",) if baxes else "model")
     out_specs = (out_spec, P(), P(), P()) if return_diag else (out_spec,)
-    out, *diag_out = compat.shard_map(
+    if has_delta:
+        # each member's harvest: (P_dst, mb, P_src, ...) per sub-field
+        out_specs = out_specs + (
+            {f.name: P("model") for f in dlayout.fields},)
+    out, *rest_out = compat.shard_map(
         shard_fn, mesh=mesh,
         in_specs=tuple(in_specs),
         out_specs=out_specs,
         check_vma=False,
     )(*args)
+    staged_out = rest_out.pop() if has_delta else None
+    diag_out = rest_out
     # out: (mb, B/mb) where each row of size B/mb is laid out
     # [data-row, member, bs]; input order within a data row is
     # [microbatch, member, bs].
@@ -709,11 +834,14 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
     else:
         o = out.reshape(mb, n_data, n_shards, bs_g)
         logits = o.transpose(1, 0, 2, 3).reshape(-1)
+    ret = (logits,)
     if return_diag:
-        return logits, ExchangeDiag(
+        ret = ret + (ExchangeDiag(
             *diag_out, "ragged" if use_ragged else "dense",
-            cap, dense_rows)
-    return logits
+            cap, dense_rows),)
+    if has_delta:
+        ret = ret + (staged_out,)
+    return ret if len(ret) > 1 else logits
 
 
 def build_forward_plans(params, cfg: DLRMConfig, idx, *,

@@ -60,6 +60,15 @@ class FaultPlan:
     # and dequeue stalls the frontend pays before dispatching a batch
     arrival_burst: tuple = ()               # ((from_step, n_steps, factor),)
     queue_delay: tuple = ()                 # ((from_step, n_steps, seconds),)
+    # freshness-side faults (the delta-update chaos surface, DESIGN.md
+    # §10): payload corruption on the wire, update-rate bursts from the
+    # trainer, an updater straggler (a member whose APPLY stalls while
+    # serving continues from its last-good version), and a crash in the
+    # middle of the atomic apply window
+    delta_corrupt: tuple = ()               # ((member, step, n_rows),)
+    update_burst: tuple = ()                # ((from_step, n_steps, factor),)
+    apply_stall: tuple = ()                 # ((member, from_step, n_steps),)
+    apply_crash: tuple = ()                 # ((member, step),)
     seed: int = 0
 
     @classmethod
@@ -132,6 +141,50 @@ class FaultPlan:
             self, queue_delay=self.queue_delay
             + ((int(from_step), int(n_steps), float(seconds)),))
 
+    def with_delta_corruption(self, member: int, step: int, *,
+                              n_rows: int = 1) -> "FaultPlan":
+        """Corrupt ``n_rows`` delta rows of ``member``'s outbound slice at
+        flush ``step`` (byte flips AFTER the source stamped its per-row
+        checksums, so the receiver's verify must reject them and the
+        source must re-ship — the lost-update case the checksum protocol
+        exists for)."""
+        return dataclasses.replace(
+            self, delta_corrupt=self.delta_corrupt
+            + ((int(member), int(step), int(n_rows)),))
+
+    def with_update_burst(self, from_step: int, n_steps: int,
+                          factor: float) -> "FaultPlan":
+        """An update-rate burst from the trainer: the freshness manager
+        pulls ``factor``× more versions per flush for steps in
+        [from_step, from_step + n_steps) — the fastest-updater case the
+        bounded-staleness gate must clamp (fast updaters BLOCK; they never
+        widen the version spread past k_fresh).  Overlapping bursts
+        compose multiplicatively (``update_factor``)."""
+        if factor <= 0:
+            raise ValueError(f"update factor must be > 0, got {factor}")
+        return dataclasses.replace(
+            self, update_burst=self.update_burst
+            + ((int(from_step), int(n_steps), float(factor)),))
+
+    def with_updater_straggler(self, member: int, *, from_step: int,
+                               n_steps: int) -> "FaultPlan":
+        """An updater straggler: ``member``'s delta APPLY stalls for steps
+        in [from_step, from_step + n_steps) while its serving continues
+        from the last-good version — the member everyone else's shipping
+        gate ends up waiting on once it is k_fresh behind."""
+        return dataclasses.replace(
+            self, apply_stall=self.apply_stall
+            + ((int(member), int(from_step), int(n_steps)),))
+
+    def with_apply_crash(self, member: int, at_step: int) -> "FaultPlan":
+        """A crash in the middle of ``member``'s atomic apply at flush
+        ``at_step`` — AFTER the staged scatter, BEFORE the commit.  The
+        double-buffered swap means the previous version stays intact and
+        PR 6's evict → replay path recovers from it."""
+        return dataclasses.replace(
+            self, apply_crash=self.apply_crash
+            + ((int(member), int(at_step)),))
+
     # -- queries -----------------------------------------------------------
 
     def delay_of(self, member: int, step: int) -> float:
@@ -162,6 +215,28 @@ class FaultPlan:
         (overlapping windows add)."""
         return sum(sec for s0, n, sec in self.queue_delay
                    if s0 <= step < s0 + n)
+
+    def update_factor(self, step: int) -> float:
+        """Trainer update-rate multiplier at ``step`` (1.0 outside every
+        burst; overlapping bursts multiply)."""
+        f = 1.0
+        for s0, n, factor in self.update_burst:
+            if s0 <= step < s0 + n:
+                f *= factor
+        return f
+
+    def delta_corrupt_at(self, step: int) -> list:
+        """[(member, n_rows)] of outbound delta slices corrupted at
+        ``step`` (member indices are ORIGINAL ranks)."""
+        return [(m, n) for m, s, n in self.delta_corrupt if s == step]
+
+    def apply_stalled(self, member: int, step: int) -> bool:
+        """True when ``member``'s delta apply is stalled at ``step``."""
+        return any(m == member and s0 <= step < s0 + n
+                   for m, s0, n in self.apply_stall)
+
+    def apply_crashes_at(self, step: int) -> list:
+        return [m for m, s in self.apply_crash if s == step]
 
     def transient_only(self) -> bool:
         return not self.crash_step and not self.sustained_from
@@ -273,6 +348,47 @@ class FaultInjector:
         if d > 0:
             time.sleep(d)
             self.injected_delay_s += d
+
+    def on_apply(self, step: int, mesh=None) -> None:
+        """Called by the freshness manager INSIDE the atomic apply window
+        (after the staged scatter, before the commit): raises NodeFailure
+        for ``apply_crash`` entries — the crash-mid-apply case whose
+        recovery must find the previous version intact.  Crash bookkeeping
+        is shared with :meth:`on_flush` (``fired``/``live``), so a member
+        crashes exactly once however it dies.  The trigger is STICKY
+        (``>= at_step``): an apply window may not open at the scheduled
+        flush (nothing ready — e.g. every buffered row is held for a
+        stalled member), and a dead member does not come back because its
+        crash missed the window — the first apply at-or-after the step
+        discovers it."""
+        for m in list(self.live):
+            if m in self.fired:
+                continue
+            if any(cm == m and step >= cs
+                   for cm, cs in self.plan.apply_crash):
+                pos = self.live.index(m)
+                self.fired.add(m)
+                self.live.remove(m)
+                raise NodeFailure(self._survivors(mesh, pos))
+
+    def corrupt_rows(self, step: int) -> list:
+        """[(current_pos, n_rows)] outbound delta slices to corrupt at
+        ``step`` — plan members mapped to CURRENT mesh positions; crashed
+        members drop out (nothing of theirs is on the wire)."""
+        out = []
+        for m, n in self.plan.delta_corrupt_at(step):
+            if m in self.live:
+                out.append((self.live.index(m), n))
+        return out
+
+    def stalled_positions(self, step: int) -> set:
+        """CURRENT mesh positions whose delta apply is stalled at
+        ``step`` (the updater-straggler fault)."""
+        return {pos for pos, m in enumerate(self.live)
+                if self.plan.apply_stalled(m, step)}
+
+    def update_factor(self, step: int) -> float:
+        return self.plan.update_factor(step)
 
     def on_dequeue(self, step: int) -> float:
         """Called by the serving FRONTEND before dispatching batch

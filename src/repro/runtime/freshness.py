@@ -1,0 +1,485 @@
+"""Online embedding freshness: versioned row deltas over the BLS wire
+with bounded staleness, atomic apply and crash-safe rollback (DESIGN.md
+§10).
+
+Recommenders retrain continuously, so serving must absorb embedding row
+updates without draining.  The paper's bounded-lag idea extends from
+*iterations* to *parameter versions*: exactly as a member may consume an
+exchange up to k iterations late, a member may serve rows up to
+``k_fresh`` versions stale — and exactly as the fastest producer blocks
+at the bound, the fastest *updater* blocks when a member falls
+``k_fresh`` versions behind.
+
+The moving parts, all host-side except the wire:
+
+  * An update source (``data.synthetic.delta_stream``) emits
+    :class:`~repro.data.synthetic.DeltaBatch` objects with monotone
+    versions.  ``FreshnessManager`` pulls from it through the staleness
+    gate: version v is admitted only while
+    ``v − min_m applied[m] ≤ k_fresh``.
+  * Deltas ride the SAME fused exchange as the embedding payload: one
+    extra ``"xdelta"`` :class:`~repro.core.alltoallv.WireField` whose
+    bytes are their own fused sub-layout
+    (:func:`~repro.core.alltoallv.delta_wire_layout`), packed with
+    ``pack_ragged_tree`` inside stage_a and routed to each row's OWNING
+    member — zero extra collectives (the jaxpr assertion in
+    tests/test_freshness.py counts them).
+  * Each member applies its harvested rows ATOMICALLY between flushes:
+    scatter into a staging copy of the tables, refresh the hot cache's
+    copies (``hot_cache.refresh_rows``), then swap both references.  A
+    crash inside the window (``FaultInjector.on_apply``) discards the
+    staging copy — the previous version was never touched, so PR 6's
+    evict → replay recovery replays from it and ``on_evict`` re-ships the
+    uncommitted rows under the new geometry.
+  * Every shipped row carries a source-stamped checksum
+    (:func:`row_checksum`); the receiver verifies the exact bytes that
+    arrived and rejects + re-requests corrupted rows
+    (``FaultPlan.with_delta_corruption``) instead of applying garbage.
+  * A per-member :class:`VersionLedger` tracks the committed version of
+    every member; its ``versions_behind`` is the invariant the tests
+    sweep (``≤ k_fresh`` at every flush, under burst × straggler ×
+    crash), and its exact per-flush counters land in ``ServeStats``.
+
+Degraded members (PR 6's serve-around path) and updater stragglers
+(``FaultPlan.with_updater_straggler``) simply keep serving their
+last-good version: their rows stay buffered, their lag holds back the
+gate, and traffic never stops.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.elastic import NodeFailure
+from repro.serving import hot_cache as hc_mod
+
+
+@jax.jit
+def _scatter_rows(tables, tab, row, upd):
+    """One fused compiled call per bucket shape: the eager op chain costs
+    milliseconds of per-op dispatch in the apply window, which sits on
+    the serving path.  jit keeps committed-ness follow-the-inputs (an
+    uncommitted table stack stays uncommitted — see the no-device_put
+    note in ``FreshnessManager.apply``)."""
+    return tables.at[tab, row].set(upd.astype(tables.dtype), mode="drop")
+
+_CS_GID = np.uint64(2654435761)      # Knuth multiplicative constants: mix
+_CS_VER = np.uint64(2654435789)      # identity into the byte sum
+_CS_MASK = np.uint64(0xFFFFFFFF)
+
+
+def row_checksum(vec, gid, ver):
+    """Per-row uint32 checksum over the row's WIRE BYTES plus its identity
+    (gid, version).
+
+    ``vec``: (..., s) array of any fixed-width dtype; ``gid``/``ver``
+    broadcast against the leading shape.  The byte sum is position-
+    weighted (weight (i mod 251) + 1, all nonzero), so any single-byte
+    flip changes the sum by a nonzero amount < 2^16 — detected exactly
+    under the 2^32 mask — and byte swaps change it too.  Identity mixing
+    means a row delivered to the wrong (gid, version) slot also rejects.
+    Pure numpy: both the source stamp and the receiver verify run on
+    host, over the exact bytes the bitcast wire round-trips."""
+    v = np.ascontiguousarray(vec)
+    u8 = v.view(np.uint8).reshape(v.shape[:-1] + (-1,)).astype(np.uint64)
+    w = (np.arange(u8.shape[-1], dtype=np.uint64) % np.uint64(251)
+         + np.uint64(1))
+    s = (u8 * w).sum(axis=-1)
+    s = s + _CS_GID * np.asarray(gid, np.uint64) \
+        + _CS_VER * np.asarray(ver, np.uint64)
+    return (s & _CS_MASK).astype(np.uint32)
+
+
+@dataclasses.dataclass
+class VersionLedger:
+    """Per-member committed-version bookkeeping.
+
+    ``applied[m]`` is the highest version v such that member m's shard
+    holds EVERY row of every version ≤ v (members start at 0, the base
+    tables).  ``shipped_max`` is the highest version that has entered the
+    wire.  The bounded-staleness invariant the whole subsystem enforces:
+    ``versions_behind = shipped_max − min(applied) ≤ k_fresh``."""
+    k_fresh: int
+    applied: np.ndarray          # (P,) int64 committed version per member
+    shipped_max: int = 0
+
+    @property
+    def min_applied(self) -> int:
+        return int(self.applied.min()) if self.applied.size else 0
+
+    @property
+    def versions_behind(self) -> int:
+        return max(0, self.shipped_max - self.min_applied)
+
+    def may_ship(self, version: int) -> bool:
+        """The staleness gate: fastest updaters BLOCK (mirror of the BLS
+        bound's fastest-producer stall)."""
+        return version - self.min_applied <= self.k_fresh
+
+
+class FreshnessManager:
+    """Host half of the delta subsystem: pulls versions from the source
+    through the staleness gate, fills the per-(member, microbatch) wire
+    slices ``DLRMEngine`` threads into the jitted step, verifies +
+    buffers what each member harvests, and runs the atomic apply between
+    flushes.
+
+    ``slice_cap`` is the static per-slice row capacity (the delta
+    sub-wire's bucket cap — a slice holds ≤ slice_cap rows, so the
+    in-step repack into slice_cap-cap buckets can NEVER drop);
+    ``versions_per_flush`` the nominal pull rate, scaled by the fault
+    plan's ``update_factor`` under an injected update burst.
+
+    Lifecycle of one row, all states host-side:
+    ``_sendq`` (admitted, waiting for wire room) → ``_inflight`` (on the
+    wire this flush; restored to the queue if the flush dies before
+    ingest) → ``_apply_buf`` (arrived + checksum-verified, waiting for
+    the owner's apply window) → committed (dropped from ``_remaining``;
+    a fully committed version is pruned entirely).  ``on_evict`` collapses
+    every un-committed state back to ``_sendq`` — ownership is recomputed
+    from the post-eviction geometry at the next ship, so replay after a
+    crash (mid-flush OR mid-apply) loses nothing."""
+
+    def __init__(self, source: Iterator, *, k_fresh: int = 2,
+                 slice_cap: int = 8, versions_per_flush: int = 1):
+        if k_fresh < 1:
+            raise ValueError(f"k_fresh must be >= 1, got {k_fresh}")
+        if slice_cap < 1:
+            raise ValueError(f"slice_cap must be >= 1, got {slice_cap}")
+        self.source = source
+        self.k_fresh = int(k_fresh)
+        self.slice_cap = int(slice_cap)
+        self.versions_per_flush = int(versions_per_flush)
+        self._sendq: list = []       # [(version, gid)] version-sorted
+        self._inflight: list = []    # [(version, gid)] on the wire now
+        self._banked: list = []      # [(version, gid)] harvested, unverified
+        self._apply_buf: list = []   # [(version, gid)] verified, unapplied
+        self._remaining: dict = {}   # version -> set(gid) not committed
+        self._batches: dict = {}     # version -> (DeltaBatch, {gid: row_i})
+        self.latest_pulled = 0
+        self.ledger = VersionLedger(self.k_fresh, np.zeros(0, np.int64))
+        # -- exact counters (mirrored into ServeStats per flush) -----------
+        self.rows_applied = 0        # delta rows committed into the tables
+        self.delta_rejects = 0       # checksum-rejected (and re-shipped)
+        self.rollbacks = 0           # applies abandoned by a mid-apply crash
+        self.applies = 0             # committed apply windows
+        self.source_blocked = 0      # pulls refused by the staleness gate
+        self.cache_refreshed = 0     # cached rows updated in place
+        self.behind_trace: list = [] # versions_behind per verify window
+        self._held = None            # last flush's staged wire, unverified
+
+    # -- geometry ----------------------------------------------------------
+
+    def _geometry(self, engine):
+        p, t_pad, _, _ = engine._exchange_geometry()
+        r = engine.params["tables"].shape[1]
+        return p, t_pad // p, r
+
+    def _owner(self, gid: int, t_loc: int, r: int) -> int:
+        return (gid // r) // t_loc
+
+    def _refresh_ledger(self, engine):
+        p, t_loc, r = self._geometry(engine)
+        applied = np.full(p, self.latest_pulled, np.int64)
+        for v, gids in self._remaining.items():
+            if not gids:
+                continue
+            for m in {self._owner(g, t_loc, r) for g in gids}:
+                applied[m] = min(applied[m], v - 1)
+        self.ledger = VersionLedger(self.k_fresh, applied,
+                                    self.ledger.shipped_max)
+
+    @property
+    def fully_committed(self) -> bool:
+        return not (self._sendq or self._inflight or self._banked
+                    or self._apply_buf or self._remaining)
+
+    # -- ship (host -> wire) ----------------------------------------------
+
+    def next_wire(self, engine, step: int) -> dict:
+        """Build this flush's delta wire slices: numpy leaves keyed
+        ``dcnt/dcs/dgid/dvec/dver`` shaped ``(P, microbatches, ...)`` —
+        one single-version slice per (member, microbatch), each row
+        checksum-stamped.  Pulls new versions through the staleness gate
+        first (scaled by any injected update burst) and injects the fault
+        plan's wire corruption AFTER stamping, so the receiver's verify
+        is what catches it."""
+        p, t_loc, r = self._geometry(engine)
+        mb = engine.microbatches
+        s = engine.params["tables"].shape[2]
+        emb_dt = np.dtype(engine.params["tables"].dtype)
+        dcap = self.slice_cap
+        # a flush that died between ship and ingest (crash, replay) left
+        # rows marked in-flight that never arrived anywhere: re-ship them
+        if self._inflight:
+            self._sendq = sorted(set(self._sendq) | set(self._inflight))
+            self._inflight = []
+        self._refresh_ledger(engine)
+        factor = (engine.faults.update_factor(step)
+                  if engine.faults is not None else 1.0)
+        want = max(0, int(round(self.versions_per_flush * factor)))
+        for _ in range(want):
+            v = self.latest_pulled + 1
+            if not self.ledger.may_ship(v):
+                self.source_blocked += 1    # fastest updater blocks
+                break
+            try:
+                b = next(self.source)
+            except StopIteration:
+                break
+            if b.version != v:
+                raise ValueError(
+                    f"delta source must be monotone: expected version {v}, "
+                    f"got {b.version}")
+            gids = (b.tab.astype(np.int64) * r + b.row).astype(np.int64)
+            self._batches[v] = (b, {int(g): i for i, g in enumerate(gids)})
+            self._remaining[v] = {int(g) for g in gids}
+            self._sendq.extend((v, int(g)) for g in gids)
+            self.latest_pulled = v
+            self._refresh_ledger(engine)
+        self._sendq.sort()
+        dvec = np.zeros((p, mb, dcap, s), emb_dt)
+        dgid = np.zeros((p, mb, dcap), np.int32)
+        dcs = np.zeros((p, mb, dcap), np.uint32)
+        dcnt = np.zeros((p, mb, 1), np.int32)
+        dver = np.zeros((p, mb, 1), np.int32)
+        slices = [(m, j) for m in range(p) for j in range(mb)]
+        si = 0
+        while self._sendq and si < len(slices):
+            v0 = self._sendq[0][0]
+            take = []
+            while self._sendq and self._sendq[0][0] == v0 \
+                    and len(take) < dcap:
+                take.append(self._sendq.pop(0))
+            m, j = slices[si]
+            si += 1
+            b, gix = self._batches[v0]
+            for i, (_, g) in enumerate(take):
+                dvec[m, j, i] = np.asarray(b.vec[gix[g]], emb_dt)
+                dgid[m, j, i] = g
+            n = len(take)
+            dcnt[m, j, 0] = n
+            dver[m, j, 0] = v0
+            dcs[m, j, :n] = row_checksum(dvec[m, j, :n], dgid[m, j, :n], v0)
+            self._inflight.extend(take)
+            self.ledger.shipped_max = max(self.ledger.shipped_max, v0)
+        # wire corruption: byte flips AFTER the stamp — exactly what the
+        # receiver-side verify exists to catch
+        if engine.faults is not None:
+            for pos, n_rows in engine.faults.corrupt_rows(step):
+                left = n_rows
+                for j in range(mb):
+                    c = min(int(dcnt[pos, j, 0]), left)
+                    if c > 0:
+                        dvec[pos, j, :c].view(np.uint8)[...] ^= 0x55
+                        left -= c
+                    if left == 0:
+                        break
+        return {"dcnt": dcnt, "dcs": dcs, "dgid": dgid, "dvec": dvec,
+                "dver": dver}
+
+    # -- harvest (wire -> apply buffer) -----------------------------------
+
+    def ingest(self, staged, engine, step: int) -> None:
+        """Bank this flush's harvested wire slices WITHOUT reading them.
+        The leaves are still device-resident; fetching them immediately
+        would block the host on the step it just dispatched and destroy
+        the flush pipeline's host/device overlap (measured: the sync
+        alone costs more than the whole delta path).  Instead the
+        PREVIOUS flush's banked harvest — long since materialized — is
+        verified now, while this flush's step runs, and its rows commit
+        in the next apply window between flushes."""
+        self._process_held(engine)
+        self._held = staged
+        self._banked = self._inflight
+        self._inflight = []
+
+    def _process_held(self, engine) -> None:
+        """Verify the banked harvest.  Leaves are ``(P_dst, mb, P_src,
+        ...)``: destination m's per-source buckets.  Checksum-verified
+        rows move to the apply buffer; mismatches are rejected and
+        RE-REQUESTED (back onto the send queue) — a corrupted delta is a
+        retried delta, never a lost or a poisoned one."""
+        if self._held is None:
+            return
+        staged, self._held = self._held, None
+        dd = {k: np.asarray(v) for k, v in jax.device_get(staged).items()}
+        p_dst, mb, p_src = dd["dgid"].shape[:3]
+        requeue = []
+        # hot path: counts are host-side metadata, so empty slices (the
+        # steady state once a stream drains) cost one sum, not a sweep
+        if dd["dcnt"].any():
+            for m in range(p_dst):
+                for j in range(mb):
+                    for q in range(p_src):
+                        c = int(dd["dcnt"][m, j, q, 0])
+                        if c == 0:
+                            continue
+                        v = int(dd["dver"][m, j, q, 0])
+                        rem = self._remaining.get(v, set())
+                        gids = dd["dgid"][m, j, q, :c].astype(np.int64)
+                        # one vectorized checksum per slice, not per row
+                        got = np.asarray(row_checksum(
+                            dd["dvec"][m, j, q, :c], gids, np.int64(v)),
+                            np.uint32)
+                        ok = got == dd["dcs"][m, j, q, :c]
+                        for i, g in enumerate(int(x) for x in gids):
+                            if g not in rem:
+                                continue  # already committed elsewhere
+                            if ok[i]:
+                                self._apply_buf.append((v, g))
+                            else:
+                                self.delta_rejects += 1
+                                requeue.append((v, g))
+        self._banked = []
+        if requeue:
+            self._sendq = sorted(set(self._sendq) | set(requeue))
+        self._refresh_ledger(engine)
+        self.behind_trace.append(self.ledger.versions_behind)
+
+    # -- atomic apply (between flushes) -----------------------------------
+
+    def apply(self, engine, step: int) -> None:
+        """Apply buffered rows atomically: scatter into a STAGING copy of
+        the tables, refresh the hot cache's copies into a staging cache,
+        fire the injector's mid-apply crash point, then swap both
+        references.  A crash discards the staging pair — the serving
+        tables still hold the previous version (that is the rollback) and
+        the rows stay buffered for replay.  Members being served around
+        (degraded) or under an injected apply stall keep their last-good
+        version: their rows stay buffered and their lag holds the gate."""
+        if not self._apply_buf:
+            return
+        p, t_loc, r = self._geometry(engine)
+        skip = {int(d) for d in engine.degraded_members}
+        if engine.faults is not None:
+            skip |= engine.faults.stalled_positions(step)
+        ready, hold = [], []
+        for v, g in self._apply_buf:
+            (hold if self._owner(g, t_loc, r) in skip else ready).append(
+                (v, g))
+        if not ready:
+            self._apply_buf = hold
+            return
+        # a gid touched by several buffered versions commits once, at the
+        # HIGHEST version — identical to applying them in version order
+        best: dict = {}
+        for v, g in sorted(ready):
+            best[g] = v
+        gids = np.array(sorted(best), np.int64)
+        vecs = np.stack([
+            self._batches[best[g]][0].vec[self._batches[best[g]][1][g]]
+            for g in gids])
+        tab = gids // r
+        row = gids % r
+        prev_tables = engine.params["tables"]
+        prev_cache = engine.cache
+        # pad the scatter operands to a power-of-two bucket (floor 64):
+        # the eager scatter compiles once per operand SHAPE, and per-apply
+        # row counts vary flush to flush — unbucketed, every new count
+        # pays a fresh compile INSIDE the serving path.  Padding rows
+        # carry an out-of-range table id and are dropped by the scatter
+        # (and counted as misses by the cache refresh), so they are
+        # value- and ledger-neutral.
+        bucket = max(64, 1 << (len(gids) - 1).bit_length())
+        if bucket > len(gids):
+            pad = bucket - len(gids)
+            tab = np.concatenate([tab, np.full(pad, prev_tables.shape[0],
+                                               tab.dtype)])
+            row = np.concatenate([row, np.zeros(pad, row.dtype)])
+            vecs = np.concatenate(
+                [vecs, np.zeros((pad,) + vecs.shape[1:], vecs.dtype)])
+        upd = jnp.asarray(vecs).astype(prev_tables.dtype)
+        # NOTE: no device_put — the scatter result inherits the serving
+        # tables' placement, and pinning it (committing to a concrete
+        # device set) would fight the jitted step's shard_map mesh
+        staged_tables = _scatter_rows(prev_tables, tab, row, upd)
+        staged_cache, refreshed = prev_cache, 0
+        if prev_cache is not None and prev_cache.cache_rows > 0:
+            staged_cache, refreshed = hc_mod.refresh_rows(
+                prev_cache, tab, row, upd)
+        try:
+            if engine.faults is not None:
+                engine.faults.on_apply(step, mesh=engine._active_mesh())
+        except NodeFailure:
+            # crash mid-apply: drop the staging pair on the floor — the
+            # published tables/cache refs were never touched, and the
+            # buffered rows replay after recovery
+            self.rollbacks += 1
+            raise
+        # the commit: two reference swaps.  Same shapes, and the cache
+        # rides the jitted step as ARGUMENTS — no re-jit, no serving gap.
+        engine.params["tables"] = staged_tables
+        engine.cache = staged_cache
+        engine._staged_plan = None       # staged plans predate the swap
+        self._apply_buf = hold
+        for v, g in ready:
+            rem = self._remaining.get(v)
+            if rem is not None:
+                rem.discard(g)
+                if not rem:              # fully committed: prune
+                    del self._remaining[v]
+                    del self._batches[v]
+        self.rows_applied += len(ready)
+        self.cache_refreshed += int(refreshed)
+        self.applies += 1
+        self._refresh_ledger(engine)
+
+    # -- recovery ----------------------------------------------------------
+
+    def on_evict(self, engine) -> None:
+        """Post-eviction reset (called by ``DLRMEngine.evict`` after the
+        new mesh is installed): every un-committed row — verified-but-
+        unapplied AND in-flight — returns to the send queue.  Ownership is
+        a pure function of the CURRENT geometry, so the next ship routes
+        them to their new owners; committed rows live in the tables, which
+        eviction itself re-fits."""
+        requeue = (list(self._apply_buf) + list(self._inflight)
+                   + list(self._banked))
+        self._apply_buf = []
+        self._inflight = []
+        self._banked = []
+        # the banked harvest predates the eviction: its geometry is gone,
+        # and every row it carried is in the requeued sets above
+        self._held = None
+        if requeue:
+            self._sendq = sorted(set(self._sendq) | set(requeue))
+        self._refresh_ledger(engine)
+
+    # -- serving-side staleness accounting --------------------------------
+
+    def count_stale_served(self, engine, idx, mask) -> int:
+        """Exact count of (sample, table) bags in this flush's batch that
+        touched a row with a PENDING (admitted but not yet committed)
+        newer version — the rows_stale_served column of the ledger.
+        Bounded staleness makes these legitimate serves; the ledger makes
+        them visible."""
+        if not self._remaining:
+            return 0
+        pend: set = set()
+        for gids in self._remaining.values():
+            pend |= gids
+        if not pend:
+            return 0
+        _, _, r = self._geometry(engine)
+        idx = np.asarray(idx)
+        mask = np.asarray(mask)
+        t = np.arange(idx.shape[1], dtype=np.int64)[None, :, None]
+        gids_b = t * r + idx.astype(np.int64)
+        hit = np.isin(gids_b, np.fromiter(pend, np.int64, len(pend))) \
+            & (mask > 0)
+        return int(hit.any(axis=-1).sum())
+
+
+def oracle_tables(base_tables, batches):
+    """The apply-all-up-front oracle the bit-exactness tests compare
+    against: every batch's rows applied in version order onto the base
+    stack, wholly outside the wire/ledger machinery."""
+    out = np.array(jax.device_get(base_tables))
+    for b in sorted(batches, key=lambda x: x.version):
+        out[b.tab, b.row] = np.asarray(b.vec, out.dtype)
+    return jnp.asarray(out)

@@ -27,6 +27,10 @@ from repro.runtime.straggler import (CapAutotuner, StragglerMonitor,
                                      detect_stragglers)
 from repro.train import steps as steps_mod
 
+# host <-> step argument order of the delta wire leaves (sorted, matching
+# the dict order FreshnessManager.next_wire emits)
+DELTA_KEYS = ("dcnt", "dcs", "dgid", "dvec", "dver")
+
 
 @dataclasses.dataclass
 class ServeStats:
@@ -42,6 +46,12 @@ class ServeStats:
     replays: int = 0            # batches re-dispatched after a NodeFailure
     recovery_s: float = 0.0     # wall time inside evict(): remesh ->
                                 # repartition -> re-jit
+    # -- freshness ledger (versioned delta updates, DESIGN.md §10) ---------
+    rows_applied: int = 0       # delta rows committed into the tables
+    rows_stale_served: int = 0  # bags served that touched a pending row
+    versions_behind: int = 0    # ledger spread after the last flush
+    delta_rejects: int = 0      # checksum-rejected (re-shipped) delta rows
+    apply_rollbacks: int = 0    # applies abandoned by a mid-apply crash
 
     @property
     def throughput_rps(self) -> float:
@@ -124,6 +134,7 @@ class DLRMEngine:
                  deadline_s: Optional[float] = None,
                  on_deadline: str = "block",
                  faults=None,
+                 freshness=None,
                  degraded_fallback: str = "zero",
                  confirm_after: int = 2,
                  max_retries: int = 2,
@@ -159,9 +170,16 @@ class DLRMEngine:
                 "fault injection drives recovery through the synchronous "
                 "flush path; plan_pipeline's deferred harvest would tear "
                 "the replay boundary — run chaos without plan_pipeline")
+        if freshness is not None and plan_pipeline:
+            raise ValueError(
+                "freshness applies deltas atomically BETWEEN synchronous "
+                "flushes; plan_pipeline's deferred harvest would tear the "
+                "apply/replay boundary — serve updates without "
+                "plan_pipeline")
         self.deadline_s = deadline_s
         self.on_deadline = on_deadline
         self.faults = faults
+        self.freshness = freshness
         self.degraded_fallback = degraded_fallback
         self.confirm_after = max(1, int(confirm_after))
         self.max_retries = max(0, int(max_retries))
@@ -239,23 +257,32 @@ class DLRMEngine:
             return (jax.nn.sigmoid(logits), diag.live_max, diag.drops,
                     diag.approx_rows)
 
-        def forward(params, dense, idx, mask, cache, plan):
-            return _finish(dlrm_mod.forward_distributed(
+        def forward(params, dense, idx, mask, cache, plan, *dargs):
+            # dargs: the delta wire leaves in DELTA_KEYS order (freshness
+            # serving only) — the staged harvest rides the step output
+            deltas = dict(zip(DELTA_KEYS, dargs)) if dargs else None
+            res = dlrm_mod.forward_distributed(
                 params, cfg, dense, idx, mask, bound=bound,
                 microbatches=microbatches, unroll=self.unroll,
                 cache=cache, wire_dtype=wire,
                 exchange=ex, ragged_cap=cap, exchange_pipeline=pipe,
-                row_block=rblk, pool_mode=pool, plan=plan,
+                row_block=rblk, pool_mode=pool, plan=plan, deltas=deltas,
                 degraded_members=deg, degraded_fallback=fb,
-                return_diag=diag_on))
+                return_diag=diag_on)
+            if deltas is not None:
+                *core, staged = res
+                return _finish(core[0] if len(core) == 1
+                               else tuple(core)) + (staged,)
+            return _finish(res)
 
         if self.cache is None:
             if self.plan_pipeline:
                 def step(params, dense, idx, mask, plan):
                     return forward(params, dense, idx, mask, None, plan)
             else:
-                def step(params, dense, idx, mask):
-                    return forward(params, dense, idx, mask, None, None)
+                def step(params, dense, idx, mask, *dargs):
+                    return forward(params, dense, idx, mask, None, None,
+                                   *dargs)
             return step
 
         from repro.serving.hot_cache import HotCache
@@ -271,10 +298,10 @@ class DLRMEngine:
                              slot_of=slot_of)
                 return forward(params, dense, idx, mask, c, plan)
         else:
-            def step(params, dense, idx, mask, hot_rows, slot_of):
+            def step(params, dense, idx, mask, hot_rows, slot_of, *dargs):
                 c = HotCache(hot_ids=None, hot_rows=hot_rows,
                              slot_of=slot_of)
-                return forward(params, dense, idx, mask, c, None)
+                return forward(params, dense, idx, mask, c, None, *dargs)
 
         return step
 
@@ -486,12 +513,32 @@ class DLRMEngine:
         re-dispatched on the shrunken mesh — zero requests lost."""
         for attempt in range(self.max_retries + 1):
             try:
+                if self.freshness is not None:
+                    # the atomic apply window sits BETWEEN flushes: rows
+                    # harvested last flush commit (or roll back) before
+                    # this flush's batch is dispatched
+                    self.freshness.apply(self, step_no)
                 if self.faults is not None:
                     self.faults.on_flush(step_no, mesh=self._active_mesh(),
                                          exclude=self.degraded_members)
-                args = self._step_args(*self._fit_batch(d, i, m))
+                fd, fi, fm = self._fit_batch(d, i, m)
+                args = self._step_args(fd, fi, fm)
+                if self.freshness is not None:
+                    dw = self.freshness.next_wire(self, step_no)
+                    args = args + tuple(jnp.asarray(dw[k])
+                                        for k in DELTA_KEYS)
                 with self._mesh_ctx():
                     out, *diag = self._step(*args)
+                if self.freshness is not None:
+                    staged = diag.pop()
+                    self.freshness.ingest(staged, self, step_no)
+                    fr = self.freshness
+                    self.stats.rows_stale_served += \
+                        fr.count_stale_served(self, fi, fm)
+                    self.stats.rows_applied = fr.rows_applied
+                    self.stats.delta_rejects = fr.delta_rejects
+                    self.stats.apply_rollbacks = fr.rollbacks
+                    self.stats.versions_behind = fr.ledger.versions_behind
                 return out, diag
             except NodeFailure as e:
                 if attempt >= self.max_retries:
@@ -656,6 +703,10 @@ class DLRMEngine:
         self.degraded_members = ()   # positions renumbered: start clean
         self._streak.clear()
         self._step = jax.jit(self._make_step(self.bound, self.microbatches))
+        if self.freshness is not None:
+            # un-committed delta rows re-queue; ownership is recomputed
+            # from the new geometry at the next ship
+            self.freshness.on_evict(self)
         self.stats.evictions += 1
         self.stats.recovery_s += time.perf_counter() - t_rec
 
@@ -719,10 +770,16 @@ class DLRMEngine:
         use_ragged, cap = dlrm_mod.resolve_exchange(
             self.exchange, use_cache=use_cache, cap=self.ragged_cap,
             dense_rows=dense_rows)
+        delta_bytes = 0
+        if self.freshness is not None:
+            delta_bytes = a2a_mod.delta_wire_layout(
+                p, self.freshness.slice_cap, s,
+                self.params["tables"].dtype).slot_bytes
         layout = a2a_mod.exchange_wire_layout(
             ragged=use_ragged, n_dest=p, cap=cap, bs=bs, t_loc=t_pad // p,
             embed_dim=s, wire_dtype=self.wire_dtype,
-            emb_dtype=self.params["tables"].dtype)
+            emb_dtype=self.params["tables"].dtype,
+            delta_bytes=delta_bytes)
         recv = {"buf": jax.ShapeDtypeStruct((p, layout.slot_bytes),
                                             jnp.uint8)}
         side = [jax.ShapeDtypeStruct((bs, s), jnp.dtype(cfg.dtype))]

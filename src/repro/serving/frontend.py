@@ -23,6 +23,13 @@ limiting: tail latency, not mean throughput):
   * **Deadline-aware shedding at dequeue** — requests whose deadline
     precedes the predicted completion are dropped before they waste a
     flush; the decision is monotone in the deadline.
+  * **Per-tenant weighted-fair dequeue** — with ``tenant_weights`` set,
+    batch formation runs integer-weight deficit round-robin across
+    per-tenant FIFO queues AHEAD of the deadline-monotone shed pass: a
+    weight-2 tenant gets ~2× the batch slots of a weight-1 tenant under
+    contention, no tenant starves, per-tenant arrival order is
+    preserved, and the conservation invariant is untouched (requests
+    only move between queues and the ledger, never vanish).
   * **Graceful-degradation ladder** — sustained overload (served-p99 over
     SLO, or queue near its bound) escalates FULL → DEGRADED (the engine's
     ``degrade`` approximate serve from DESIGN.md §8, quality loss still
@@ -248,6 +255,10 @@ class ServingFrontend:
       warm_every / warm_threshold   rebuild the hot cache from observed
                         counts when the peeked hit rate sinks below the
                         threshold (0 disables).
+      tenant_weights    dict tenant -> integer weight enabling the
+                        weighted-fair (deficit round-robin) dequeue;
+                        None (default) keeps the single global FIFO.
+                        Unlisted tenants get ``default_weight``.
       faults            a ``runtime.faults.FaultInjector`` whose
                         ``on_dequeue`` stalls batch dispatch (chaos).
       clock             injectable monotonic clock (tests use a virtual
@@ -267,6 +278,8 @@ class ServingFrontend:
                  window: int = 128,
                  lookahead: Optional[bool] = None,
                  warm_every: int = 0, warm_threshold: float = 0.5,
+                 tenant_weights: Optional[dict] = None,
+                 default_weight: int = 1,
                  faults=None,
                  clock: Callable[[], float] = time.perf_counter):
         if admission not in ("slo", "queue", "none"):
@@ -286,6 +299,16 @@ class ServingFrontend:
         self.degrade_members = tuple(degrade_members)
         self.escalate_after = max(1, int(escalate_after))
         self.deescalate_after = max(1, int(deescalate_after))
+        if tenant_weights is not None:
+            tenant_weights = {str(t): int(w)
+                              for t, w in dict(tenant_weights).items()}
+            bad = {t: w for t, w in tenant_weights.items() if w < 1}
+            if bad:
+                raise ValueError(f"tenant weights must be >= 1: {bad}")
+        if int(default_weight) < 1:
+            raise ValueError("default_weight must be >= 1")
+        self.tenant_weights = tenant_weights
+        self.default_weight = int(default_weight)
         self.faults = faults
         self._clock = clock
         self._rng = np.random.default_rng(seed)
@@ -304,6 +327,13 @@ class ServingFrontend:
         engine.stats = self.stats
 
         self._queue: collections.deque = collections.deque()
+        # weighted-fair mode: per-tenant FIFO queues + DRR bookkeeping
+        # (registration order is the round-robin order; deficits are
+        # integers, so selection is exactly reproducible)
+        self._tq: dict = {}                  # tenant -> deque[_Request]
+        self._deficit: dict = {}             # tenant -> int DRR deficit
+        self._rr: list = []                  # tenant registration order
+        self._rr_pos = 0                     # next tenant to visit
         self._rid = 0
         self._ewma_flush: Optional[float] = \
             float(init_flush_s) if init_flush_s > 0 else None
@@ -319,6 +349,107 @@ class ServingFrontend:
         if self.lookahead and getattr(engine, "cache", None) is not None:
             t, r = engine.params["tables"].shape[:2]
             self._counts = np.zeros((t, r))
+
+    # -- the queue surface (single FIFO, or per-tenant DRR) ----------------
+    # Every queue touch goes through these helpers.  With tenant_weights
+    # None they delegate straight to the one global deque — behavior
+    # identical to the pre-DRR frontend; with weights set, requests live
+    # in per-tenant FIFOs and BATCH FORMATION order comes from integer
+    # deficit round-robin.
+
+    @property
+    def weighted(self) -> bool:
+        return self.tenant_weights is not None
+
+    def _weight(self, tenant: str) -> int:
+        return max(1, self.tenant_weights.get(tenant, self.default_weight))
+
+    def _qlen(self) -> int:
+        if not self.weighted:
+            return len(self._queue)
+        return sum(len(q) for q in self._tq.values())
+
+    def _qappend(self, r: "_Request") -> None:
+        if not self.weighted:
+            self._queue.append(r)
+            return
+        q = self._tq.get(r.tenant)
+        if q is None:
+            q = self._tq[r.tenant] = collections.deque()
+            self._deficit[r.tenant] = 0
+            self._rr.append(r.tenant)
+        q.append(r)
+
+    def _drr_select(self, n: int, commit: bool) -> list:
+        """Up to ``n`` requests in deficit-round-robin order.  Each visit
+        to a non-empty tenant queue adds the tenant's weight to its
+        deficit and takes that many of its oldest requests (FIFO within
+        tenant), so over sustained contention tenant slot shares converge
+        to the weight ratios while an idle tenant costs nothing (its
+        deficit resets when its queue empties — no banked credit).
+        ``commit=False`` is the non-destructive peek the batch-shaping
+        and lookahead paths use: identical order, no state touched."""
+        sel: list = []
+        if not self._rr:
+            return sel
+        taken = {t: 0 for t in self._rr}
+        deficit = dict(self._deficit)
+        pos = self._rr_pos % len(self._rr)
+        last = pos
+        while len(sel) < n:
+            if not any(len(self._tq[t]) - taken[t] > 0 for t in self._rr):
+                break
+            t = self._rr[pos]
+            last = pos
+            pos = (pos + 1) % len(self._rr)
+            avail = len(self._tq[t]) - taken[t]
+            if avail <= 0:
+                continue
+            deficit[t] += self._weight(t)
+            k = min(deficit[t], avail, n - len(sel))
+            q = self._tq[t]
+            sel.extend(q[taken[t] + j] for j in range(k))
+            taken[t] += k
+            deficit[t] -= k
+            if len(q) - taken[t] == 0:
+                deficit[t] = 0
+        if commit:
+            for t, k in taken.items():
+                for _ in range(k):
+                    self._tq[t].popleft()
+            self._deficit = deficit
+            self._rr_pos = (last + 1) % len(self._rr)
+        return sel
+
+    def _qpeek(self, n: int) -> list:
+        if not self.weighted:
+            return list(self._queue)[:n]
+        return self._drr_select(n, commit=False)
+
+    def _qtake(self, n: int) -> list:
+        if not self.weighted:
+            return [self._queue.popleft()
+                    for _ in range(min(n, len(self._queue)))]
+        return self._drr_select(n, commit=True)
+
+    def _oldest_arrival(self) -> float:
+        if not self.weighted:
+            return self._queue[0].t_arrive
+        return min(q[0].t_arrive for q in self._tq.values() if q)
+
+    def _qshed(self, cutoff: float) -> None:
+        """Deadline-monotone shed over every queue (one cutoff per pass,
+        applied uniformly — fairness weights never shield expired
+        work)."""
+        queues = [self._queue] if not self.weighted \
+            else list(self._tq.values())
+        for q in queues:
+            for _ in range(len(q)):
+                r = q.popleft()
+                if r.deadline < cutoff:
+                    self.stats.shed += 1
+                else:
+                    q.append(r)
 
     # -- prediction --------------------------------------------------------
 
@@ -363,18 +494,18 @@ class ServingFrontend:
         self.stats.offered += 1
         deadline = now + (self.slo_s if deadline_s is None
                           else float(deadline_s))
-        if self.admission != "none" and len(self._queue) >= self.max_queue:
+        if self.admission != "none" and self._qlen() >= self.max_queue:
             return self._reject(tenant, "queue_full")
         if self.admission == "slo" and \
-                now + self.predicted_wait_s(len(self._queue) + 1) > deadline:
+                now + self.predicted_wait_s(self._qlen() + 1) > deadline:
             return self._reject(tenant, "predicted_slo_breach")
         rid = self._rid
         self._rid += 1
-        self._queue.append(_Request(rid, tenant, np.asarray(dense),
-                                    np.asarray(idx), np.asarray(mask),
-                                    now, deadline))
+        self._qappend(_Request(rid, tenant, np.asarray(dense),
+                               np.asarray(idx), np.asarray(mask),
+                               now, deadline))
         self.stats.admitted += 1
-        self.stats.queued = len(self._queue)
+        self.stats.queued = self._qlen()
         if self._reject_streak.pop(tenant, 0):
             self.stats.retried += 1      # backpressure worked: retry landed
         if self._counts is not None:
@@ -401,17 +532,17 @@ class ServingFrontend:
         waiting (EWMA·headroom), when the oldest request has lingered its
         budget, or unconditionally at the SHED ladder level (drain
         fast)."""
-        if not self._queue:
+        if self._qlen() == 0:
             return False
         b = self.engine.batch_size
-        if len(self._queue) >= b or self.stats.level >= LEVEL_SHED:
+        if self._qlen() >= b or self.stats.level >= LEVEL_SHED:
             return True
-        head = list(self._queue)[:b]
+        head = self._qpeek(b)
         tightest = min(r.deadline for r in head)
         if now + self.predicted_flush_s() * self.dispatch_headroom \
                 >= tightest:
             return True
-        return now - self._queue[0].t_arrive >= self.linger_s
+        return now - self._oldest_arrival() >= self.linger_s
 
     def pump(self, now: Optional[float] = None) -> list:
         """One scheduling round: shed expired work, dispatch a batch if
@@ -422,7 +553,7 @@ class ServingFrontend:
         completed: list = []
         if self._dispatch_due(now):
             completed = self._dispatch(now)
-        elif self._dispatched and not self._queue:
+        elif self._dispatched and self._qlen() == 0:
             # pipeline tail: nothing to send, but a deferred batch may be
             # ready — an empty flush harvests without dispatching
             out = self.engine.flush()
@@ -430,31 +561,22 @@ class ServingFrontend:
                 completed = self._complete(out, self.now())
         self._maybe_prefetch()
         self._update_ladder(self.now() if completed else now)
-        self.stats.queued = len(self._queue)
+        self.stats.queued = self._qlen()
         return completed
 
     def _shed_pass(self, now: float) -> None:
         if not self.shed:
             return
-        cutoff = self.shed_cutoff(now)
-        kept: collections.deque = collections.deque()
-        while self._queue:
-            r = self._queue.popleft()
-            if r.deadline < cutoff:
-                self.stats.shed += 1
-            else:
-                kept.append(r)
-        self._queue = kept
+        self._qshed(self.shed_cutoff(now))
 
     def _dispatch(self, now: float) -> list:
         self._shed_pass(now)
-        if not self._queue:
+        if self._qlen() == 0:
             self.stats.queued = 0
             return []
         b = self.engine.batch_size
-        batch = [self._queue.popleft()
-                 for _ in range(min(b, len(self._queue)))]
-        self.stats.queued = len(self._queue)
+        batch = self._qtake(b)
+        self.stats.queued = self._qlen()
         if self.faults is not None and hasattr(self.faults, "on_dequeue"):
             self.faults.on_dequeue(self._n_dispatched)
         t0 = self.now()
@@ -510,7 +632,7 @@ class ServingFrontend:
     def overloaded(self) -> bool:
         """Sustained-overload signal: served p99 (recent window) over the
         SLO, or the queue within 80% of its bound."""
-        if len(self._queue) >= 0.8 * self.max_queue:
+        if self._qlen() >= 0.8 * self.max_queue:
             return True
         if len(self._recent_e2e) >= 8:
             xs = sorted(self._recent_e2e)
@@ -554,7 +676,7 @@ class ServingFrontend:
     # -- lookahead prefetch (BagPipe over the PR 4 hooks) ------------------
 
     def _peek_batch(self) -> list:
-        return list(self._queue)[:self.engine.batch_size]
+        return self._qpeek(self.engine.batch_size)
 
     def _maybe_prefetch(self) -> None:
         if not self.lookahead:
@@ -602,7 +724,7 @@ class ServingFrontend:
         conservation invariant is exact: admitted == served +
         degraded_served + shed."""
         completed: list = []
-        while self._queue:
+        while self._qlen():
             completed += self._dispatch(self.now())
         out = self.engine.drain()
         t_done = self.now()
@@ -618,5 +740,5 @@ class ServingFrontend:
                     f"drain attribution drifted: {len(out)} CTRs for "
                     f"{off} dispatched requests")
         self._set_level(LEVEL_FULL)
-        self.stats.queued = len(self._queue)
+        self.stats.queued = self._qlen()
         return completed

@@ -98,6 +98,64 @@ def hit_rate(cache: HotCache, idx, mask) -> float:
     return float(jnp.sum(hit) / total)
 
 
+def refresh_rows(cache: HotCache, tab, row, vec):
+    """Incremental refresh: overwrite the cached copies of rows
+    ``(tab[i], row[i])`` with ``vec[i]`` — the delta-apply fast path
+    (DESIGN.md §10).  Rows not currently cached are silently skipped (the
+    table scatter already updated their only copy), so a delta touching c
+    cached rows costs O(c) instead of a full ``build`` recompute of
+    ``slot_of`` over (T, R).  Returns ``(cache', n_refreshed)``; the input
+    cache is untouched — callers swap the reference atomically with the
+    table swap, so a crash between the two cannot publish a half-updated
+    pair."""
+    tab = jnp.asarray(tab, jnp.int32)
+    row = jnp.asarray(row, jnp.int32)
+    c = cache.cache_rows
+    if c == 0 or tab.shape[0] == 0:
+        return cache, 0
+    # out-of-range (tab, row) entries are misses by definition — the
+    # delta-apply path pads its scatter batch with OOB-high sentinel rows
+    # (shape bucketing), and jnp indexing would otherwise WRAP them
+    t_all, r_all = cache.slot_of.shape
+    in_range = (tab >= 0) & (tab < t_all) & (row >= 0) & (row < r_all)
+    slots = cache.slot_of[jnp.clip(tab, 0, t_all - 1),
+                          jnp.clip(row, 0, r_all - 1)]  # (n,) slot or -1
+    hit = in_range & (slots >= 0)
+    # route misses OUT OF RANGE high and drop them: -1 would WRAP to the
+    # last table under jnp indexing, silently clobbering a cached row
+    tgt_t = jnp.where(hit, tab, cache.hot_rows.shape[0])
+    new_rows = cache.hot_rows.at[tgt_t, jnp.clip(slots, 0, c - 1)].set(
+        jnp.asarray(vec, cache.hot_rows.dtype), mode="drop")
+    return (HotCache(hot_ids=cache.hot_ids, hot_rows=new_rows,
+                     slot_of=cache.slot_of), int(hit.sum()))
+
+
+def invalidate(cache: HotCache, tab, row):
+    """Evict rows ``(tab[i], row[i])`` from the cache: their slots become
+    misses (``slot_of`` -> -1, ids -> -1, cached vectors zeroed) and the
+    next lookup takes the distributed path.  The coarse alternative to
+    :func:`refresh_rows` when the new row VALUE is not at hand (e.g. a
+    tiered store dropped it).  Returns ``(cache', n_invalidated)``; the
+    input cache is untouched."""
+    tab = jnp.asarray(tab, jnp.int32)
+    row = jnp.asarray(row, jnp.int32)
+    c = cache.cache_rows
+    if c == 0 or tab.shape[0] == 0:
+        return cache, 0
+    slots = cache.slot_of[tab, row]
+    hit = slots >= 0
+    t_all = cache.hot_rows.shape[0]
+    tgt_t = jnp.where(hit, tab, t_all)                  # miss -> dropped
+    slot_c = jnp.clip(slots, 0, c - 1)
+    new_slot = cache.slot_of.at[tgt_t, row].set(-1, mode="drop")
+    new_rows = cache.hot_rows.at[tgt_t, slot_c].set(0.0, mode="drop")
+    new_ids = cache.hot_ids
+    if new_ids is not None:
+        new_ids = new_ids.at[tgt_t, slot_c].set(-1, mode="drop")
+    return (HotCache(hot_ids=new_ids, hot_rows=new_rows, slot_of=new_slot),
+            int(hit.sum()))
+
+
 def build_from_batch(tables: jnp.ndarray, idx, mask, cache_rows: int
                      ) -> HotCache:
     """Calibrate a cache from one observed batch (the serving engine's

@@ -570,6 +570,151 @@ class TestRealEngine:
             <= set(js)
 
 
+# ---------------------------------------------------------------------------
+# per-tenant weighted-fair dequeue (deficit round-robin)
+# ---------------------------------------------------------------------------
+
+
+class TestWeightedFairness:
+    def _fe(self, clock, *, weights, batch_size=8, **kw):
+        eng = FakeEngine(clock, batch_size=batch_size, service_s=0.004)
+        kw.setdefault("admission", "none")
+        kw.setdefault("shed", False)
+        return eng, ServingFrontend(eng, slo_s=10.0, clock=clock,
+                                    tenant_weights=weights, **kw)
+
+    def _submit(self, fe, tenant, n):
+        r = next(iter(_reqs(1, seed=3)))
+        for _ in range(n):
+            assert fe.try_submit(r.dense, r.idx, r.mask,
+                                 tenant=tenant).admitted
+
+    def test_slot_shares_converge_to_weight_ratio(self):
+        """Sustained contention between a weight-3 and a weight-1 tenant:
+        every batch of 8 carries slots in the 3:1 ratio (6 vs 2)."""
+        clock = VClock()
+        eng, fe = self._fe(clock, weights={"a": 3, "b": 1})
+        self._submit(fe, "a", 32)
+        self._submit(fe, "b", 32)
+        for _ in range(4):
+            done = fe.pump()
+            by = {t: sum(1 for c in done if c.tenant == t)
+                  for t in ("a", "b")}
+            assert by == {"a": 6, "b": 2}, by
+
+    def test_fifo_preserved_within_each_tenant(self):
+        clock = VClock()
+        eng, fe = self._fe(clock, weights={"a": 2, "b": 1})
+        self._submit(fe, "a", 20)
+        self._submit(fe, "b", 20)
+        done = []
+        while fe.stats.queued:
+            done += fe.pump()
+        done += fe.drain()
+        for t in ("a", "b"):
+            rids = [c.request_id for c in done if c.tenant == t]
+            assert rids == sorted(rids), t
+
+    def test_light_tenant_never_starves(self):
+        """A 10:1 weight ratio (quantum larger than the batch) still
+        reaches the light tenant: the round-robin cursor rotates across
+        batches, so within any two consecutive batches the light tenant
+        lands at least one slot — starvation is bounded, never
+        indefinite."""
+        clock = VClock()
+        eng, fe = self._fe(clock, weights={"heavy": 10, "light": 1},
+                           batch_size=8)
+        self._submit(fe, "heavy", 40)
+        self._submit(fe, "light", 8)
+        light_per_batch = []
+        for _ in range(6):
+            done = fe.pump()
+            light_per_batch.append(
+                sum(1 for c in done if c.tenant == "light"))
+        for i in range(len(light_per_batch) - 1):
+            assert light_per_batch[i] + light_per_batch[i + 1] >= 1, \
+                (i, light_per_batch)
+
+    def test_idle_tenant_banks_no_credit(self):
+        """A tenant whose queue EMPTIES forfeits its deficit: coming back
+        after sitting out rounds, it gets its fair share, not a burst of
+        banked slots."""
+        clock = VClock()
+        eng, fe = self._fe(clock, weights={"a": 1, "b": 1})
+        self._submit(fe, "a", 16)
+        while fe.stats.queued:          # two all-"a" batches; "b" is idle
+            fe.pump()
+        self._submit(fe, "a", 8)
+        self._submit(fe, "b", 8)
+        done = fe.pump()
+        by = {t: sum(1 for c in done if c.tenant == t) for t in ("a", "b")}
+        assert by == {"a": 4, "b": 4}, by
+
+    def test_single_tenant_drr_equals_global_fifo(self):
+        """With one tenant the weighted queue degenerates to the global
+        FIFO: identical completion order to the weights-None frontend
+        under the same virtual-clock schedule."""
+        orders = []
+        for weights in (None, {"default": 2}):
+            clock = VClock()
+            eng = FakeEngine(clock, batch_size=8, service_s=0.004)
+            fe = ServingFrontend(eng, slo_s=0.05, max_queue=24,
+                                 admission="slo", init_flush_s=0.004,
+                                 clock=clock, seed=1,
+                                 tenant_weights=weights)
+            completed, _ = drive(fe, clock, _reqs(200, seed=11))
+            assert fe.stats.accounted
+            orders.append([(c.request_id, c.ctr) for c in completed])
+        assert orders[0] == orders[1]
+
+    def test_conservation_invariant_with_weights_under_load(self):
+        """The exact accounting invariant survives weighted multi-tenant
+        traffic with admission + shedding active."""
+        clock = VClock()
+        eng = FakeEngine(clock, batch_size=8, service_s=0.004)
+        fe = ServingFrontend(eng, slo_s=0.03, max_queue=16,
+                             admission="slo", shed=True,
+                             init_flush_s=0.004, clock=clock, seed=2,
+                             tenant_weights={"a": 3, "b": 1},
+                             default_weight=2)
+        rng = np.random.default_rng(5)
+        completed = []
+        for i, r in enumerate(_reqs(300, seed=13)):
+            if r.t_arrive > clock.t:
+                clock.t = r.t_arrive
+            fe.try_submit(r.dense, r.idx, r.mask,
+                          tenant=str(rng.choice(["a", "b", "c"])))
+            completed += fe.pump()
+            assert fe.stats.accounted, "invariant broke mid-stream"
+        completed += fe.drain()
+        st = fe.stats
+        assert st.queued == 0 and st.inflight == 0
+        assert st.admitted == st.served + st.degraded_served + st.shed
+        rids = [c.request_id for c in completed]
+        assert len(rids) == len(set(rids)) == st.completed
+
+    def test_shed_pass_reaches_every_tenant_queue(self):
+        clock = VClock()
+        eng, fe = self._fe(clock, weights={"a": 1, "b": 1}, shed=True)
+        self._submit(fe, "a", 4)
+        self._submit(fe, "b", 4)
+        clock.advance(100.0)            # every queued deadline expires
+        fe._observe_flush(0.004)
+        done = fe.pump()
+        assert done == [] and fe.stats.shed == 8
+        assert fe.stats.accounted
+
+    def test_invalid_weights_rejected(self):
+        clock = VClock()
+        eng = FakeEngine(clock)
+        with pytest.raises(ValueError):
+            ServingFrontend(eng, slo_s=1.0, clock=clock,
+                            tenant_weights={"a": 0})
+        with pytest.raises(ValueError):
+            ServingFrontend(eng, slo_s=1.0, clock=clock,
+                            tenant_weights={"a": 1}, default_weight=0)
+
+
 def test_serve_example_frontend_smoke():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")

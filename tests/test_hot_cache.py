@@ -64,3 +64,95 @@ def test_cache_larger_than_table_is_safe():
     assert float(jnp.sum(miss_mask)) == 0.0
     full = apply_emb(tables, idx, mask)
     assert jnp.allclose(hits, full, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Incremental refresh + invalidate (the DESIGN.md §10 delta-apply fast path)
+# ---------------------------------------------------------------------------
+
+
+def test_refresh_rows_parity_with_full_rebuild():
+    """The O(c) incremental refresh lands EXACTLY where a full ``build``
+    from the updated tables would: same hot ids, same cached vectors —
+    only the touched slots change."""
+    tables, cache, idx, mask = _setup()
+    rng = np.random.default_rng(3)
+    # update a mix of cached and uncached rows
+    cold0 = int(np.asarray((cache.slot_of[0] < 0).nonzero()[0])[0])
+    cold2 = int(np.asarray((cache.slot_of[2] < 0).nonzero()[0])[0])
+    tab = np.array([0, 0, 1, 2, 2], np.int32)
+    row = np.array([int(cache.hot_ids[0, 0]), cold0,
+                    int(cache.hot_ids[1, 3]), int(cache.hot_ids[2, 7]),
+                    cold2], np.int32)
+    vec = rng.standard_normal((5, 8)).astype(np.float32)
+    new_tables = np.array(tables)
+    new_tables[tab, row] = vec
+    new_tables = jnp.asarray(new_tables)
+
+    fresh, n = HC.refresh_rows(cache, tab, row, vec)
+    counts = HC.observe(np.zeros((3, 500)), np.asarray(idx),
+                        np.asarray(mask))
+    rebuilt = HC.build(new_tables, counts, cache.cache_rows)
+    assert jnp.array_equal(fresh.hot_ids, rebuilt.hot_ids)
+    assert jnp.array_equal(fresh.slot_of, rebuilt.slot_of)
+    assert jnp.array_equal(fresh.hot_rows, rebuilt.hot_rows)
+    # exactly the cached subset was refreshed; the input cache untouched
+    cached = np.asarray(cache.slot_of)[tab, row] >= 0
+    assert n == int(cached.sum()) and 0 < n < 5
+    assert not jnp.array_equal(cache.hot_rows, fresh.hot_rows)
+
+
+def test_refresh_rows_lookup_matches_updated_tables():
+    tables, cache, idx, mask = _setup()
+    rng = np.random.default_rng(4)
+    tab = np.asarray(cache.hot_ids[:, :4]).astype(np.int32)
+    tabs = np.repeat(np.arange(3, dtype=np.int32), 4)
+    rows = tab.reshape(-1)
+    vecs = rng.standard_normal((12, 8)).astype(np.float32)
+    new_tables = np.array(tables)
+    new_tables[tabs, rows] = vecs
+    new_tables = jnp.asarray(new_tables)
+    fresh, _ = HC.refresh_rows(cache, tabs, rows, vecs)
+    hits, miss_mask = HC.lookup(fresh, idx, mask)
+    misses = apply_emb(new_tables, idx, miss_mask)
+    full = apply_emb(new_tables, idx, mask)
+    assert jnp.allclose(hits + misses, full, atol=1e-5)
+
+
+def test_refresh_rows_all_misses_is_identity():
+    _, cache, _, _ = _setup(cache_rows=4)
+    cold = np.asarray((cache.slot_of[0] < 0).nonzero()[0][:3]).astype(
+        np.int32)
+    fresh, n = HC.refresh_rows(cache, np.zeros(3, np.int32), cold,
+                               np.ones((3, 8), np.float32))
+    assert n == 0
+    assert jnp.array_equal(fresh.hot_rows, cache.hot_rows)
+
+
+def test_invalidate_turns_hits_into_misses():
+    tables, cache, idx, mask = _setup()
+    hr0 = HC.hit_rate(cache, idx, mask)
+    # evict the head (hottest) slot of every table
+    tabs = np.arange(3, dtype=np.int32)
+    rows = np.asarray(cache.hot_ids[:, 0]).astype(np.int32)
+    inv, n = HC.invalidate(cache, tabs, rows)
+    assert n == 3
+    assert (np.asarray(inv.slot_of)[tabs, rows] == -1).all()
+    assert HC.hit_rate(inv, idx, mask) < hr0
+    # correctness is preserved: hits + misses still == full lookup
+    hits, miss_mask = HC.lookup(inv, idx, mask)
+    misses = apply_emb(tables, idx, miss_mask)
+    full = apply_emb(tables, idx, mask)
+    assert jnp.allclose(hits + misses, full, atol=1e-5)
+    # the input cache is untouched (atomic-swap discipline)
+    assert (np.asarray(cache.slot_of)[tabs, rows] >= 0).all()
+
+
+def test_invalidate_uncached_rows_is_identity():
+    _, cache, _, _ = _setup(cache_rows=4)
+    cold = np.asarray((cache.slot_of[1] < 0).nonzero()[0][:2]).astype(
+        np.int32)
+    inv, n = HC.invalidate(cache, np.ones(2, np.int32), cold)
+    assert n == 0
+    assert jnp.array_equal(inv.slot_of, cache.slot_of)
+    assert jnp.array_equal(inv.hot_rows, cache.hot_rows)
