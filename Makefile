@@ -14,7 +14,7 @@
 
 PY ?= python
 
-.PHONY: test bench bench-smoke chaos-smoke serve-smoke fresh-smoke
+.PHONY: test bench bench-smoke chaos-smoke serve-smoke fresh-smoke reshard-smoke
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -53,3 +53,15 @@ serve-smoke:
 # the existing wire, it is not a second serving path).
 fresh-smoke:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/bench_freshness.py --smoke
+
+# placement gate (DESIGN.md §11): a drifting hot-set makes the static
+# layout's per-member imbalance visible; the online rebalance ships rows
+# over the fused wire while serving continues, commits an atomic cutover,
+# ends strictly more level (and faster under the paper's schedule
+# simulator), stays BIT-exact vs the static engine with zero requests
+# lost, and keeps migration-flush p99 within 3x steady state; a member
+# killed at EVERY distinct migration step (ship/bank/verify/install/
+# commit) recovers via evict -> replay with zero lost + rows bit-exact
+# + a fresh rebalance on the shrunken geometry.
+reshard-smoke:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/bench_placement.py --smoke

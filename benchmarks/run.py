@@ -18,8 +18,8 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))
 def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (bench_alltoallv, bench_dlrm, bench_faults,
-                            bench_freshness, bench_kernels, bench_serve,
-                            bench_sim)
+                            bench_freshness, bench_kernels,
+                            bench_placement, bench_serve, bench_sim)
 
     bench_sim.run()            # paper Figs 7 & 8 (+ straggler control)
     bench_alltoallv.main()     # paper Fig 6 analogue
@@ -34,6 +34,9 @@ def main() -> None:
     # freshness: flush p50/p99 with vs without a live delta stream,
     # rows/s absorbed, apply-window cost, staleness + chaos recovery
     dlrm_payload["freshness"] = bench_freshness.run()
+    # placement: skewed vs uniform vs rebalanced imbalance + flush p99,
+    # migration ledger/overhead, predicted makespans, chaos grid
+    dlrm_payload["placement"] = bench_placement.run()
 
     # perf trajectory: BENCH_dlrm.json keyed by git SHA
     path = bench_dlrm.write_bench_json(dlrm_payload)

@@ -270,7 +270,8 @@ def exchange_wire_layout(*, ragged: bool, n_dest: int, cap: int, bs: int,
                          wire_dtype: str = "float32",
                          emb_dtype=jnp.float32,
                          n_slots: int = 0,
-                         delta_bytes: int = 0) -> WireLayout:
+                         delta_bytes: int = 0,
+                         mig_bytes: int = 0) -> WireLayout:
     """The ONE layout both halves of a DLRM exchange agree on.
 
     ragged: per destination ``cap`` codec rows + narrow slot ids + an
@@ -285,7 +286,14 @@ def exchange_wire_layout(*, ragged: bool, n_dest: int, cap: int, bs: int,
     (DESIGN.md §10).  The blob's internal structure is its own
     :func:`delta_wire_layout`; from THIS layout's point of view it is a
     single byte field, so freshness updates ride the existing fused
-    buffer and the exchange stays exactly one collective."""
+    buffer and the exchange stays exactly one collective.
+
+    ``mig_bytes > 0`` adds a second opaque field, ``"xmig"``, by the same
+    construction (DESIGN.md §11): live resharding ships table rows from
+    their current owner to their future owner inside the serving
+    exchange.  Its internal structure is :func:`mig_wire_layout`; the
+    exchange still issues exactly one collective with both riders
+    aboard."""
     wire = canon_wire(wire_dtype)
     qdt = {"float32": jnp.dtype(emb_dtype), "bfloat16": jnp.bfloat16,
            "int8": jnp.int8}[wire]
@@ -301,6 +309,8 @@ def exchange_wire_layout(*, ragged: bool, n_dest: int, cap: int, bs: int,
             fields["scale"] = ((bs, t_loc, 1), jnp.bfloat16)
     if delta_bytes:
         fields["xdelta"] = ((int(delta_bytes),), jnp.uint8)
+    if mig_bytes:
+        fields["xmig"] = ((int(mig_bytes),), jnp.uint8)
     return wire_layout(n_dest, fields)
 
 
@@ -322,6 +332,30 @@ def delta_wire_layout(n_dest: int, cap: int, embed_dim: int,
         "dcs": ((cap,), jnp.uint32),
         "dcnt": ((1,), jnp.int32),
         "dver": ((1,), jnp.int32),
+    })
+
+
+def mig_wire_layout(n_dest: int, cap: int, embed_dim: int,
+                    emb_dtype=jnp.float32) -> WireLayout:
+    """Sub-layout of the live-resharding blob that rides the fused
+    exchange as its single ``"xmig"`` field (DESIGN.md §11): per
+    destination (= future owner) up to ``cap`` full-precision embedding
+    rows (``mvec``) gathered by the CURRENT owner from its own shard,
+    their flat ORIGINAL global ids (``mgid`` = table · R_max + row —
+    placement-independent, so banked copies survive a cutover), per-row
+    uint32 checksums stamped ON DEVICE by the shipper (``mcs`` — same
+    fold as the freshness path's ``row_checksum``, verified host-side
+    against the exact bytes that arrived), the valid-row count
+    (``mcnt``) and the migration epoch (``mepoch`` — rows from an
+    aborted epoch are discarded at the bank).  Same
+    :func:`fuse_wire`/:func:`defuse_wire` bitcast discipline as the
+    embedding payload and the delta blob."""
+    return wire_layout(n_dest, {
+        "mvec": ((cap, embed_dim), jnp.dtype(emb_dtype)),
+        "mgid": ((cap,), jnp.int32),
+        "mcs": ((cap,), jnp.uint32),
+        "mcnt": ((1,), jnp.int32),
+        "mepoch": ((1,), jnp.int32),
     })
 
 

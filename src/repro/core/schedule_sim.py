@@ -90,6 +90,31 @@ def make_workload(n_procs: int, n_iters: int, *,
     return w
 
 
+def make_skew_workload(n_procs: int, n_iters: int, member_load, *,
+                       t_emb: float = 2.0e-3, t_bot: float = 1.0e-3,
+                       t_top: float = 1.0e-3, t_wire: float = 1.0e-3,
+                       delay_max: float = 0.0, seed: int = 0) -> Workload:
+    """A workload whose per-member embedding and wire stage times scale
+    with ``member_load`` (relative to its mean) — the cost model behind
+    skew-aware placement (DESIGN.md §11): a member owning hot tables
+    pools more rows (t_emb) and ships more bytes (t_wire), while the
+    MLP stages are load-independent.  A uniform ``member_load``
+    reproduces :func:`make_workload` exactly, so placement predictions
+    and the paper-figure workloads share one simulator."""
+    ml = np.asarray(member_load, np.float64)
+    if ml.shape != (n_procs,):
+        raise ValueError(
+            f"member_load must be ({n_procs},), got {ml.shape}")
+    w = make_workload(n_procs, n_iters, t_emb=t_emb, t_bot=t_bot,
+                      t_top=t_top, t_wire=t_wire, delay_max=delay_max,
+                      seed=seed)
+    mean = ml.mean()
+    rel = ml / mean if mean > 0 else np.ones(n_procs)
+    w.t_emb = w.t_emb * rel[:, None]
+    w.t_wire = w.t_wire * rel[:, None]
+    return w
+
+
 @dataclasses.dataclass
 class SimResult:
     makespan: float

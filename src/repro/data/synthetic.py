@@ -10,6 +10,11 @@
                bag sizes; the regime the fused cache+quantized-wire exchange
                is benchmarked under (message raggedness for BLS, head skew
                for the cache).
+``drift``    — drifting hot set (DESIGN.md §11): zipf row ids AND per-table
+               bag sizes drawn from a phase-seeded table-heat profile
+               (``table_heat``), so exchange load is skewed ACROSS tables
+               and ``FaultPlan.with_skew_shift`` moves the hot set
+               mid-stream — the workload skew-aware placement re-levels.
 
 ``open_loop_arrivals`` / ``request_stream`` add the TIME dimension: an
 open-loop, optionally bursty (Markov-modulated Poisson) arrival process
@@ -53,29 +58,55 @@ class Batch:
     labels: np.ndarray   # (B,) float32 in {0, 1}
 
 
+def table_heat(n_tables: int, phase: int, *, seed: int = 0) -> np.ndarray:
+    """Per-table relative heat of one drift phase: a Zipf profile
+    (1/rank) over a PHASE-seeded permutation of the tables, normalized
+    to max 1.  Deterministic in (seed, phase) and independent of step,
+    so any consumer — the traffic generator, a placement oracle, a
+    bench — can recompute which tables are hot at a given phase without
+    streaming."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 0xD21F, phase]))
+    order = rng.permutation(n_tables)
+    heat = np.empty(n_tables)
+    heat[order] = 1.0 / (1.0 + np.arange(n_tables))
+    return heat
+
+
 def make_batch(cfg: DLRMConfig, batch: int, *, mode: str = "uniform",
                t_pad: Optional[int] = None, powerlaw_alpha: float = 1.05,
-               seed: int = 0, step: int = 0) -> Batch:
+               seed: int = 0, step: int = 0, phase: int = 0) -> Batch:
     rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
     t = cfg.n_tables
     t_pad = t_pad or t
-    ragged = mode in ("hetero", "powerlaw_hetero")
+    ragged = mode in ("hetero", "powerlaw_hetero", "drift")
     hot = cfg.max_hot if ragged else 1
     dense = rng.standard_normal((batch, cfg.n_dense_features),
                                 dtype=np.float32)
     idx = np.zeros((batch, t_pad, hot), np.int32)
     mask = np.zeros((batch, t_pad, hot), np.float32)
     sizes = np.asarray(cfg.table_sizes)
+    # drifting hot set: per-table bag sizes follow a Zipf heat profile
+    # over a PHASE-seeded table permutation — hot tables pool near-full
+    # bags, cold ones near-singletons — so per-member exchange load is
+    # skewed, and a skew_shift (FaultPlan) re-rolls WHICH tables are
+    # hot mid-stream.  ``phase`` only permutes heat; row ids and bag
+    # noise stay (seed, step)-deterministic.
+    heat = table_heat(t, phase, seed=seed) if mode == "drift" else None
     for ti in range(t):
         n = sizes[ti]
-        if mode.startswith("powerlaw"):
+        if mode.startswith("powerlaw") or mode == "drift":
             # Zipf-ish skew clipped to the table size
             raw = rng.zipf(powerlaw_alpha, size=(batch, hot))
             idx[:, ti] = np.minimum(raw - 1, n - 1).astype(np.int32)
         else:
             idx[:, ti] = rng.integers(0, n, size=(batch, hot),
                                       dtype=np.int32)
-        if ragged:
+        if mode == "drift":
+            counts = 1 + rng.binomial(cfg.max_hot - 1, heat[ti],
+                                      size=batch)
+            mask[:, ti] = (np.arange(hot)[None, :]
+                           < counts[:, None]).astype(np.float32)
+        elif ragged:
             counts = rng.integers(1, cfg.max_hot + 1, size=batch)
             mask[:, ti] = (np.arange(hot)[None, :]
                            < counts[:, None]).astype(np.float32)

@@ -331,6 +331,8 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                         pool_mode: Optional[str] = None,
                         plan=None,
                         deltas=None,
+                        migration=None,
+                        table_inv=None,
                         degraded_members: tuple = (),
                         degraded_fallback: str = "zero",
                         return_diag: bool = False):
@@ -412,6 +414,32 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
     ``staged`` output — the FORWARD never mutates tables; the atomic
     apply between flushes does, which is what keeps a degraded member
     serving its last-good version instead of blocking traffic.
+
+    ``migration`` (DESIGN.md §11) threads live-resharding row shipments
+    through the same fused exchange as a SECOND rider field, ``"xmig"``:
+    a dict of ``(P, microbatches, ...)`` leaves — ``mgid (…, mcap)``
+    flat ORIGINAL table·R+row ids of rows the member currently owns,
+    ``mdst (…, mcap)`` the future owner each row ships to, ``mcnt``/
+    ``mepoch`` per-slice count and migration epoch — built by
+    ``runtime.reshard.ReshardExecutor.next_wire``.  Each member's
+    stage_a GATHERS the row vectors from its own table shard on device,
+    stamps per-row checksums (the freshness path's ``row_checksum``
+    fold, computed on device over the exact bytes that ship), repacks by
+    destination and fuses into the ``"xmig"`` sub-blob; stage_b returns
+    the harvested per-source buckets as an extra staged output.  Zero
+    extra collectives, and the forward never mutates tables — the
+    executor banks, verifies and commits on the host between flushes.
+
+    ``table_inv`` activates a non-identity table PLACEMENT (DESIGN.md
+    §11): a replicated ``(T_pad,)`` int32 array mapping original table
+    id -> physical slot (column of idx/mask, stack position of the
+    sharded tables).  The caller permutes idx/mask/tables/cache into
+    physical order; the forward only (a) routes delta rows to
+    ``inv[gid // R] // t_loc`` instead of ``(gid // R) // t_loc`` and
+    (b) un-permutes the exchanged table columns right before
+    ``dot_interaction`` — a traced gather, so a cutover swaps the array
+    without retracing.  ``None`` keeps every code path bit-identical to
+    the pre-placement forward.
     """
     mesh = partition.current_mesh()
     if deltas is not None and (mesh is None
@@ -419,6 +447,11 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
         raise ValueError(
             "forward_distributed: deltas ride the model-axis exchange — "
             "install a model mesh via partition.axis_rules")
+    if migration is not None and (mesh is None
+                                  or "model" not in mesh.axis_names):
+        raise ValueError(
+            "forward_distributed: migration rows ride the model-axis "
+            "exchange — install a model mesh via partition.axis_rules")
     if mesh is None or "model" not in mesh.axis_names:
         if cache is not None or (wire_dtype or cfg.wire_dtype) != "float32":
             import warnings
@@ -467,14 +500,22 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
     dlayout = a2a_mod.delta_wire_layout(
         n_shards, dcap, params["tables"].shape[2], emb_dtype) \
         if has_delta else None
+    has_mig = migration is not None
+    mcap = int(migration["mgid"].shape[-1]) if has_mig else 0
+    mlayout = a2a_mod.mig_wire_layout(
+        n_shards, mcap, params["tables"].shape[2], emb_dtype) \
+        if has_mig else None
+    has_inv = table_inv is not None
     # the ONE static layout both exchange halves (and the BLS ring slot)
     # agree on: the whole payload as a (P, slot_bytes) uint8 buffer —
-    # delta rows included, as the single opaque "xdelta" byte field
+    # delta rows and migrating rows included, as the opaque "xdelta" /
+    # "xmig" byte fields
     layout = a2a_mod.exchange_wire_layout(
         ragged=use_ragged, n_dest=n_shards, cap=cap, bs=bs_g,
         t_loc=t_loc_g, embed_dim=params["tables"].shape[2],
         wire_dtype=wire, emb_dtype=emb_dtype,
-        delta_bytes=dlayout.slot_bytes if has_delta else 0)
+        delta_bytes=dlayout.slot_bytes if has_delta else 0,
+        mig_bytes=mlayout.slot_bytes if has_mig else 0)
     if plan is not None and use_ragged:
         raise ValueError(
             "forward_distributed: precomputed stream plans describe the "
@@ -520,7 +561,8 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
         b_row = dense_s.shape[0]
         bs = b_row // (mb * n_shards)  # rows per (microbatch, member)
         # positional unpacking of the optional extras, in append order:
-        # cache (2) | fb_rows (1) | plan (1) | deltas (1)
+        # cache (2) | fb_rows (1) | plan (1) | deltas (1) | migration (1)
+        # | table_inv (1)
         ei = 0
         cache_args = ()
         if use_cache:
@@ -540,6 +582,19 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
         if has_delta:
             deltas_s = jax.tree.map(lambda a: a[0], extra[ei])
             ei += 1
+        # member migration slices: strip the model-slot axis
+        mig_s = None
+        if has_mig:
+            mig_s = jax.tree.map(lambda a: a[0], extra[ei])
+            ei += 1
+        # original table -> physical slot (replicated; identity when the
+        # placement is trivial but migration still needs the array)
+        inv_s = None
+        if has_inv:
+            inv_s = extra[ei]
+            ei += 1
+        elif has_mig:
+            inv_s = jnp.arange(n_shards * t_loc, dtype=jnp.int32)
 
         def local_miss(ix, mk):
             """This member's local-table (idx, residual mask) slice."""
@@ -557,15 +612,19 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
         def pack_delta(dx):
             """One (member, microbatch) delta slice -> the per-destination
             "xdelta" sub-blob: route each valid row to its OWNING member
-            ((gid // R) // t_loc), repack into dcap-cap buckets (a slice
-            holds <= dcap rows, so drops are structurally impossible) and
-            fuse per the sub-layout.  Checksums ride verbatim — stamped at
-            the source, verified by the receiving HOST."""
+            (the row's table's PHYSICAL slot // t_loc — gids stay in
+            original space on the wire; placement only redirects them),
+            repack into dcap-cap buckets (a slice holds <= dcap rows, so
+            drops are structurally impossible) and fuse per the
+            sub-layout.  Checksums ride verbatim — stamped at the source,
+            verified by the receiving HOST."""
             r_rows = tables.shape[1]
             n_valid = dx["dcnt"].reshape(())
             valid = jnp.arange(dcap, dtype=jnp.int32) < n_valid
             gid = dx["dgid"].astype(jnp.int32)
-            dest = jnp.where(valid, (gid // r_rows) // t_loc, -1)
+            phys = gid // r_rows if inv_s is None \
+                else jnp.take(inv_s, gid // r_rows, mode="clip")
+            dest = jnp.where(valid, phys // t_loc, -1)
             bk, cnts, _ = a2a_mod.pack_ragged_tree(
                 {"dvec": dx["dvec"].astype(emb_dtype), "dgid": gid,
                  "dcs": dx["dcs"]}, dest, n_shards, dcap)
@@ -575,6 +634,52 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                 {"dvec": bk["dvec"], "dgid": bk["dgid"], "dcs": bk["dcs"],
                  "dcnt": cnts.reshape(n_shards, 1), "dver": ver}, dlayout)
 
+        def mig_checksum(vec, gid, epoch):
+            """Device-side replica of ``runtime.freshness.row_checksum``:
+            fold the row's exact wire bytes (bitcast, little-endian — the
+            same bytes fuse_wire ships) with position weights, mix in gid
+            and epoch, wrap in uint32.  uint32 wraparound arithmetic is
+            congruent mod 2^32 to the host's uint64-then-mask, so the
+            receiving host verifies with the numpy original."""
+            b = jax.lax.bitcast_convert_type(vec, jnp.uint8)
+            b = b.reshape(vec.shape[0], -1).astype(jnp.uint32)
+            w = (jnp.arange(b.shape[1], dtype=jnp.uint32) % 251) + 1
+            s = jnp.sum(b * w[None, :], axis=1, dtype=jnp.uint32)
+            return (s + jnp.uint32(2654435761) * gid.astype(jnp.uint32)
+                    + jnp.uint32(2654435789) * epoch.astype(jnp.uint32))
+
+        def pack_mig(mx):
+            """One (member, microbatch) migration slice -> the
+            per-destination "xmig" sub-blob: the CURRENT owner gathers
+            each valid row's vector from its own table shard (original
+            gid -> physical slot via ``inv`` -> local slot on this
+            member), stamps the checksum on device over the exact bytes
+            that ship, routes by the row's FUTURE owner (``mdst``) and
+            fuses per the sub-layout.  A slice holds <= mcap rows, so
+            the mcap-cap buckets can never drop."""
+            r_rows = tables.shape[1]
+            n_valid = mx["mcnt"].reshape(())
+            valid = jnp.arange(mcap, dtype=jnp.int32) < n_valid
+            gid = mx["mgid"].astype(jnp.int32)
+            phys = jnp.take(inv_s, gid // r_rows, mode="clip")
+            # local gather: the executor only fills rows THIS member owns,
+            # so phys - m*t_loc lands in [0, t_loc); jnp clamps the
+            # excluded rows' indices harmlessly
+            vec = tables[jnp.clip(phys - m * t_loc, 0, t_loc - 1),
+                         gid % r_rows]
+            epoch = jnp.broadcast_to(mx["mepoch"].reshape(1),
+                                     (mcap,)).astype(jnp.int32)
+            cs = mig_checksum(vec, gid, epoch)
+            dest = jnp.where(valid, mx["mdst"].astype(jnp.int32), -1)
+            bk, cnts, _ = a2a_mod.pack_ragged_tree(
+                {"mvec": vec.astype(emb_dtype), "mgid": gid, "mcs": cs},
+                dest, n_shards, mcap)
+            ep = jnp.broadcast_to(mx["mepoch"].reshape(1, 1),
+                                  (n_shards, 1)).astype(jnp.int32)
+            return a2a_mod.fuse_wire(
+                {"mvec": bk["mvec"], "mgid": bk["mgid"], "mcs": bk["mcs"],
+                 "mcnt": cnts.reshape(n_shards, 1), "mepoch": ep}, mlayout)
+
         def stage_a(x):
             j, d, ix, mk = x[:4]
             xi = 4
@@ -582,7 +687,11 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
             if has_plan:
                 plan_j = x[xi]
                 xi += 1
-            delta_j = x[xi] if has_delta else None
+            delta_j = None
+            if has_delta:
+                delta_j = x[xi]
+                xi += 1
+            mig_j = x[xi] if has_mig else None
             ix_loc, miss_mk = local_miss(ix, mk)
             if use_cache:
                 hot_rows, slot_of = cache_args
@@ -621,6 +730,8 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                     a2a_mod.encode_wire(pooled, wire))
             if has_delta:
                 payload["xdelta"] = pack_delta(delta_j)
+            if has_mig:
+                payload["xmig"] = pack_mig(mig_j)
             # one flat uint8 leaf per destination: the whole exchange is
             # one collective, and the BLS ring buffers a single array
             buf = a2a_mod.fuse_wire(payload, layout)
@@ -673,46 +784,55 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
             return a2a_mod.defuse_wire(
                 a2a_mod.defuse_wire(chunk, layout)["xdelta"], dlayout)
 
+        def mig_of(chunk):
+            """The "xmig" sub-blob of one source's chunk, defused into
+            its harvested leaves (mcap migrating rows whose FUTURE owner
+            is this member)."""
+            return a2a_mod.defuse_wire(
+                a2a_mod.defuse_wire(chunk, layout)["xmig"], mlayout)
+
         def stage_b(recv, side):
             z0, hits = side
-            staged = None
+            staged = staged_m = None
             if has_delta:
                 # per-source harvest buckets this member will hand its
                 # host: (P_src, dcap, ...) per delta sub-field
                 staged = {f.name: jnp.zeros((n_shards,) + f.shape, f.dtype)
                           for f in dlayout.fields}
+            if has_mig:
+                staged_m = {f.name: jnp.zeros((n_shards,) + f.shape,
+                                              f.dtype)
+                            for f in mlayout.fields}
             if pipe == "ring":
                 # chunked ppermute butterfly: round r+1's shift is in
                 # flight while round r's chunk is defused, decoded,
                 # scattered and hit-corrected into its table slice
                 def consume(out, src, chunk):
-                    if has_delta:
-                        emb, stg = out
-                    else:
-                        emb, stg = out, None
+                    emb, stg, stg_m = out
                     emb = jax.lax.dynamic_update_slice_in_dim(
                         emb, chunk_slice(chunk, hits, src), src * t_loc,
                         axis=1)
                     if has_delta:
                         dd = delta_of(chunk)
                         stg = {k: stg[k].at[src].set(dd[k]) for k in stg}
-                        return emb, stg
-                    return emb
+                    if has_mig:
+                        mm = mig_of(chunk)
+                        stg_m = {k: stg_m[k].at[src].set(mm[k])
+                                 for k in stg_m}
+                    return emb, stg, stg_m
 
                 init = jnp.zeros((bs, n_shards * t_loc,
                                   layout.field("q").shape[-1]), emb_dtype)
-                res = a2a_mod.ring_exchange(
+                emb_all, staged, staged_m = a2a_mod.ring_exchange(
                     recv, "model", n_shards, consume,
-                    (init, staged) if has_delta else init)
-                if has_delta:
-                    emb_all, staged = res
-                else:
-                    emb_all = res
+                    (init, staged, staged_m))
             else:
                 f = a2a_mod.defuse_wire(recv, layout)
                 if has_delta:
                     # (P_src, sub_slot_bytes) -> per-source harvest leaves
                     staged = a2a_mod.defuse_wire(f["xdelta"], dlayout)
+                if has_mig:
+                    staged_m = a2a_mod.defuse_wire(f["xmig"], mlayout)
                 if use_ragged:
                     emb_all = ragged_exchange_unpack(
                         f, t_loc=t_loc, bs=bs, out_dtype=emb_dtype)
@@ -730,11 +850,17 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                 if use_cache:
                     emb_all = emb_all + hits          # pooled-hit correction
             t = cfg.n_tables
-            z = jnp.concatenate([z0[:, None, :], emb_all[:, :t]], axis=1)
+            # placement: exchanged columns are PHYSICAL slots; gather the
+            # real tables back into original order for the interaction
+            # (identity placement keeps the bit-exact static slice)
+            emb_t = jnp.take(emb_all, inv_s[:t], axis=1) if has_inv \
+                else emb_all[:, :t]
+            z = jnp.concatenate([z0[:, None, :], emb_t], axis=1)
             inter = dot_interaction(z)
             top_in = jnp.concatenate([z0, inter.astype(z0.dtype)], axis=-1)
             logits = apply_mlp(top, top_in)[..., 0]
-            return (logits, staged) if has_delta else logits
+            stg = (staged,) * has_delta + (staged_m,) * has_mig
+            return (logits,) + stg if stg else logits
 
         def split(a):  # (B_row, ...) -> (mb, B_row/mb, ...)
             return a.reshape(mb, a.shape[0] // mb, *a.shape[1:])
@@ -770,21 +896,24 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
             xs = xs + (plan_s,)        # leaves already microbatch-major
         if has_delta:
             xs = xs + (deltas_s,)      # leaves (mb, dcap, ...)
+        if has_mig:
+            xs = xs + (mig_s,)         # leaves (mb, mcap, ...)
+        n_riders = int(has_delta) + int(has_mig)
         if bound == 0 and mb == 1:
             payload, side = stage_a(jax.tree.map(lambda a: a[0], xs))
             res = stage_b(collective(payload), side)
-            if has_delta:
-                lg, staged = res
+            if n_riders:
+                lg, *stg = res
                 # + microbatch and model-slot axes for the out_specs
-                return (lg[None],) + diag + (
-                    jax.tree.map(lambda a: a[None, None], staged),)
+                return (lg[None],) + diag + tuple(
+                    jax.tree.map(lambda a: a[None, None], s) for s in stg)
             return (res[None],) + diag
         outs, _ = bls_mod.bls_pipeline(stage_a, collective, stage_b, xs,
                                        bound, unroll=unroll)
-        if has_delta:
-            lg, staged = outs          # staged leaves (mb, P_src, ...)
-            return (lg,) + diag + (
-                jax.tree.map(lambda a: a[None], staged),)
+        if n_riders:
+            lg, *stg = outs            # staged leaves (mb, P_src, ...)
+            return (lg,) + diag + tuple(
+                jax.tree.map(lambda a: a[None], s) for s in stg)
         return (outs,) + diag  # (mb, bs) [, scalar, scalar]
 
     sparse_spec = (P(baxes if baxes else None, None, None) if use_cache
@@ -812,18 +941,29 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
         # delta slices are model-major on axis 0: member m's (mb, ...) rows
         in_specs += [jax.tree.map(lambda _: P("model"), deltas)]
         args += [deltas]
+    if has_mig:
+        # migration slices likewise: member m ships the rows IT owns
+        in_specs += [jax.tree.map(lambda _: P("model"), migration)]
+        args += [migration]
+    if has_inv:
+        in_specs += [P()]              # placement map replicated
+        args += [jnp.asarray(table_inv, jnp.int32)]
     out_spec = P(None, baxes + ("model",) if baxes else "model")
     out_specs = (out_spec, P(), P(), P()) if return_diag else (out_spec,)
     if has_delta:
         # each member's harvest: (P_dst, mb, P_src, ...) per sub-field
         out_specs = out_specs + (
             {f.name: P("model") for f in dlayout.fields},)
+    if has_mig:
+        out_specs = out_specs + (
+            {f.name: P("model") for f in mlayout.fields},)
     out, *rest_out = compat.shard_map(
         shard_fn, mesh=mesh,
         in_specs=tuple(in_specs),
         out_specs=out_specs,
         check_vma=False,
     )(*args)
+    mig_out = rest_out.pop() if has_mig else None
     staged_out = rest_out.pop() if has_delta else None
     diag_out = rest_out
     # out: (mb, B/mb) where each row of size B/mb is laid out
@@ -841,6 +981,8 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
             cap, dense_rows),)
     if has_delta:
         ret = ret + (staged_out,)
+    if has_mig:
+        ret = ret + (mig_out,)
     return ret if len(ret) > 1 else logits
 
 

@@ -69,6 +69,11 @@ class FaultPlan:
     update_burst: tuple = ()                # ((from_step, n_steps, factor),)
     apply_stall: tuple = ()                 # ((member, from_step, n_steps),)
     apply_crash: tuple = ()                 # ((member, step),)
+    # placement-side faults (DESIGN.md §11): a crash at a named step of
+    # an online reshard, and traffic-skew phase shifts that move the
+    # hot-table set mid-stream (the load drift a rebalance answers)
+    mig_crash: tuple = ()                   # ((member, stage, step),)
+    skew_shift: tuple = ()                  # (at_step, ...)
     seed: int = 0
 
     @classmethod
@@ -185,6 +190,33 @@ class FaultPlan:
             self, apply_crash=self.apply_crash
             + ((int(member), int(at_step)),))
 
+    def with_mig_crash(self, member: int, stage: str, *,
+                       at_step: int = 0) -> "FaultPlan":
+        """A crash at a named step of an online reshard (DESIGN.md §11):
+        ``stage`` is one of ``ship`` (filling wire installments),
+        ``bank`` (holding the harvest), ``verify`` (checksum pass),
+        ``install`` (building the staged stack) or ``commit`` (between
+        the cutover's two reference swaps).  Sticky at ``>= at_step``,
+        like :meth:`with_apply_crash` — migrations pause under ladder
+        pressure, so the first time the named stage RUNS at-or-after the
+        step discovers the crash."""
+        from repro.runtime.reshard import MIG_STAGES
+        if stage not in MIG_STAGES:
+            raise ValueError(
+                f"unknown migration stage {stage!r}: one of {MIG_STAGES}")
+        return dataclasses.replace(
+            self, mig_crash=self.mig_crash
+            + ((int(member), str(stage), int(at_step)),))
+
+    def with_skew_shift(self, at_step: int) -> "FaultPlan":
+        """A traffic-skew phase shift: from ``at_step`` on, the drifting
+        hot-set generator (``data.synthetic.make_batch(mode='drift')``)
+        draws its hot-TABLE permutation from the next phase — the
+        mid-stream load drift that turns a once-balanced placement
+        skewed.  Shifts compose; ``skew_phase`` counts them."""
+        return dataclasses.replace(
+            self, skew_shift=self.skew_shift + (int(at_step),))
+
     # -- queries -----------------------------------------------------------
 
     def delay_of(self, member: int, step: int) -> float:
@@ -237,6 +269,12 @@ class FaultPlan:
 
     def apply_crashes_at(self, step: int) -> list:
         return [m for m, s in self.apply_crash if s == step]
+
+    def skew_phase(self, step: int) -> int:
+        """Traffic-skew phase at ``step``: the number of shifts already
+        past — the ``phase`` argument the drift traffic generator
+        consumes."""
+        return sum(1 for s in self.skew_shift if step >= s)
 
     def transient_only(self) -> bool:
         return not self.crash_step and not self.sustained_from
@@ -370,6 +408,27 @@ class FaultInjector:
                 self.fired.add(m)
                 self.live.remove(m)
                 raise NodeFailure(self._survivors(mesh, pos))
+
+    def on_migrate(self, step: int, stage: str, *, mesh=None) -> None:
+        """Called by the reshard executor at each named migration step
+        (``ship``/``bank``/``verify``/``install``/``commit``): raises
+        NodeFailure for matching ``mig_crash`` entries.  Sticky
+        (``>= at_step``) and sharing crash bookkeeping with
+        :meth:`on_flush`/:meth:`on_apply` — a member dies exactly once
+        however it dies, and the evict→replay path that catches this is
+        the same one that aborts the reshard."""
+        for m in list(self.live):
+            if m in self.fired:
+                continue
+            if any(cm == m and cstage == stage and step >= cs
+                   for cm, cstage, cs in self.plan.mig_crash):
+                pos = self.live.index(m)
+                self.fired.add(m)
+                self.live.remove(m)
+                raise NodeFailure(self._survivors(mesh, pos))
+
+    def skew_phase(self, step: int) -> int:
+        return self.plan.skew_phase(step)
 
     def corrupt_rows(self, step: int) -> list:
         """[(current_pos, n_rows)] outbound delta slices to corrupt at

@@ -179,16 +179,30 @@ class FreshnessManager:
         r = engine.params["tables"].shape[1]
         return p, t_pad // p, r
 
-    def _owner(self, gid: int, t_loc: int, r: int) -> int:
-        return (gid // r) // t_loc
+    @staticmethod
+    def _inv_of(engine):
+        """The engine's placement inverse (original table -> physical
+        slot), or None under the identity boot layout.  Ownership follows
+        the CURRENT placement, so versioned deltas route to a row's
+        current owner across a cutover."""
+        pm = getattr(engine, "pmap", None)
+        if pm is None or pm.is_identity:
+            return None
+        return pm.inv_array()
+
+    def _owner(self, gid: int, t_loc: int, r: int, inv=None) -> int:
+        tab = gid // r
+        phys = int(inv[tab]) if inv is not None else tab
+        return phys // t_loc
 
     def _refresh_ledger(self, engine):
         p, t_loc, r = self._geometry(engine)
+        inv = self._inv_of(engine)
         applied = np.full(p, self.latest_pulled, np.int64)
         for v, gids in self._remaining.items():
             if not gids:
                 continue
-            for m in {self._owner(g, t_loc, r) for g in gids}:
+            for m in {self._owner(g, t_loc, r, inv) for g in gids}:
                 applied[m] = min(applied[m], v - 1)
         self.ledger = VersionLedger(self.k_fresh, applied,
                                     self.ledger.shipped_max)
@@ -355,13 +369,14 @@ class FreshnessManager:
         if not self._apply_buf:
             return
         p, t_loc, r = self._geometry(engine)
+        inv = self._inv_of(engine)
         skip = {int(d) for d in engine.degraded_members}
         if engine.faults is not None:
             skip |= engine.faults.stalled_positions(step)
         ready, hold = [], []
         for v, g in self._apply_buf:
-            (hold if self._owner(g, t_loc, r) in skip else ready).append(
-                (v, g))
+            (hold if self._owner(g, t_loc, r, inv) in skip
+             else ready).append((v, g))
         if not ready:
             self._apply_buf = hold
             return
@@ -374,7 +389,13 @@ class FreshnessManager:
         vecs = np.stack([
             self._batches[best[g]][0].vec[self._batches[best[g]][1][g]]
             for g in gids])
+        # delta gids live in ORIGINAL table space; the scatter (and the
+        # cache refresh) target PHYSICAL slots, so a non-identity
+        # placement translates through its inverse here — the one point
+        # where freshness touches layout
         tab = gids // r
+        if inv is not None:
+            tab = inv[tab].astype(np.int64)
         row = gids % r
         prev_tables = engine.params["tables"]
         prev_cache = engine.cache
@@ -416,6 +437,15 @@ class FreshnessManager:
         engine.params["tables"] = staged_tables
         engine.cache = staged_cache
         engine._staged_plan = None       # staged plans predate the swap
+        # reshard interop: a live migration's banked/in-flight copies of
+        # just-committed rows are stale now — patch or dirty them so the
+        # eventual cutover installs post-apply values (bit-exact vs the
+        # from-scratch oracle)
+        resh = getattr(engine, "reshard", None)
+        if resh is not None and resh.active:
+            dt = np.dtype(prev_tables.dtype)
+            for k, g in enumerate(gids):
+                resh.note_applied(int(g), vecs[k], dt)
         self._apply_buf = hold
         for v, g in ready:
             rem = self._remaining.get(v)
@@ -468,7 +498,14 @@ class FreshnessManager:
         _, _, r = self._geometry(engine)
         idx = np.asarray(idx)
         mask = np.asarray(mask)
-        t = np.arange(idx.shape[1], dtype=np.int64)[None, :, None]
+        # idx columns are PHYSICAL under a non-identity placement
+        # (engine._fit_batch permutes); pending gids are original — map
+        # each column back through the placement before forming gids
+        pm = getattr(engine, "pmap", None)
+        if pm is not None and not pm.is_identity:
+            t = pm.perm_array().astype(np.int64)[None, :, None]
+        else:
+            t = np.arange(idx.shape[1], dtype=np.int64)[None, :, None]
         gids_b = t * r + idx.astype(np.int64)
         hit = np.isin(gids_b, np.fromiter(pend, np.int64, len(pend))) \
             & (mask > 0)

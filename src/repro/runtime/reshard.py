@@ -1,0 +1,332 @@
+"""Crash-safe online resharding: the executor half of DESIGN.md §11.
+
+A :class:`~repro.runtime.placement.MigrationPlan` says which tables move
+where; this module moves them WHILE SERVING CONTINUES, over the same
+fused single-buffer exchange the batches ride — one extra ``"xmig"``
+WireField (PR 8's ``"xdelta"`` pattern), zero extra collectives, in
+``slice_cap``-bounded installments per flush.  The life of one row:
+
+  queued → on the wire (stage_a of the CURRENT owner gathers the vector
+  from its live shard, stamps a device-side checksum over the exact
+  bytes that ship, routes to the FUTURE owner) → held (harvest banked
+  un-read, verified one flush later — same host/device-overlap deferral
+  as the freshness path) → banked (checksum-verified host copy) →
+  installed (the commit builds the new stack with banked rows).
+
+Double ownership is the safety story: the OLD owner keeps serving every
+in-flight table from its live shard until the commit — the wire ships
+COPIES, never moves state — so at every instant before the final swap,
+serving is bit-exact on the pre-move layout.  The commit itself is two
+reference swaps: (1) tables + partition map together, (2) the hot
+cache.  Rollback is the ABSENCE of the swap: a crash, straggler
+confirmation or injected fault at any earlier step (ship, bank, verify,
+install) leaves the published references untouched and PR 6's
+evict→replay path recovers on the pre-move layout with zero rows or
+requests lost; a crash BETWEEN the two swaps is the one window where
+tables and cache could disagree, which is why ``DLRMEngine.evict``
+cold-invalidates the cache whenever a reshard was in flight.
+
+Freshness interop: versioned deltas keep flowing during a migration.
+``FreshnessManager.apply`` calls :meth:`ReshardExecutor.note_applied`
+for every committed row — a banked copy is patched in place, an
+in-flight copy is marked dirty and re-shipped (the next gather reads
+the post-apply shard), so the committed stack equals the from-scratch
+oracle bit-for-bit.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.freshness import row_checksum
+
+
+@jax.jit
+def _install_stack(tables, order, mov_slots, slot_ix, row_ix, vals):
+    """Build the post-cutover stack on device: keepers gathered by
+    ``order`` (new slot -> old slot), moved slots zeroed, banked rows
+    scattered in.  jit keeps committed-ness follow-the-inputs — an
+    explicit ``device_put`` would COMMIT the stack to its current
+    devices and fight the jitted step's shard_map mesh (same no-
+    device_put rule as ``freshness._scatter_rows``)."""
+    new = jnp.take(tables, order, axis=0)
+    new = new.at[mov_slots].set(0.0, mode="drop")
+    return new.at[slot_ix, row_ix].set(vals.astype(tables.dtype),
+                                       mode="drop")
+
+# Engine-side argument order for the migration wire leaves (name-sorted,
+# matching jax.tree flattening of the dict the jitted step rebuilds).
+MIG_KEYS = ("mcnt", "mdst", "mepoch", "mgid")
+
+# The five distinct migration steps a fault plan can kill
+# (FaultPlan.with_mig_crash): shipping installments, banking the
+# harvest, verifying checksums, installing the staged stack, and the
+# window between the two commit swaps.
+MIG_STAGES = ("ship", "bank", "verify", "install", "commit")
+
+
+class ReshardExecutor:
+    """Executes one :class:`MigrationPlan` in installments between
+    flushes.  All state is host-side; the device only ever gathers,
+    checksums and routes copies.  ``epoch`` uniquely stamps this
+    reshard's wire traffic (mixed into every row checksum), so slices
+    from an aborted predecessor can never bank into a successor."""
+
+    def __init__(self, plan, *, epoch: int, slice_cap: int = 8):
+        if plan.is_noop:
+            raise ValueError("refusing to execute a noop migration plan")
+        if slice_cap < 1:
+            raise ValueError(f"slice_cap must be >= 1, got {slice_cap}")
+        self.plan = plan
+        self.epoch = int(epoch)
+        self.slice_cap = int(slice_cap)
+        self.state = "idle"          # idle|shipping|committed|aborted
+        self._src: dict = {}         # gid -> current owner (ships it)
+        self._dst: dict = {}         # gid -> future owner
+        self._expected: set = set()  # every gid the plan moves
+        self._queued: set = set()    # waiting for wire room
+        self._inflight: set = set()  # on the wire this flush
+        self._arriving: set = set()  # harvested, banked un-read
+        self._dirty: set = set()     # delta landed while in flight
+        self.banked: dict = {}       # gid -> verified host row copy
+        self._held = None            # last flush's staged harvest
+        self._held_step = 0
+        # -- exact counters (mirrored into ServeStats) --------------------
+        self.shipped_rows = 0        # row installments on the wire
+        self.reships = 0             # re-sent (lost flush / dirty / reject)
+        self.rejects = 0             # checksum-verify failures
+        self.installments = 0        # flushes that carried migration rows
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self, engine) -> None:
+        """Build the send queues from the plan against the engine's live
+        geometry.  Only real (unpadded) rows ship — a move of ``rows=0``
+        completes trivially and commits as a pure relabel."""
+        r = int(engine.params["tables"].shape[1])
+        for ti, src, dst, rows in self.plan.moves:
+            for j in range(rows):
+                g = ti * r + j
+                self._src[g] = src
+                self._dst[g] = dst
+                self._expected.add(g)
+                self._queued.add(g)
+        self.state = "shipping"
+
+    @property
+    def active(self) -> bool:
+        return self.state == "shipping"
+
+    @property
+    def complete(self) -> bool:
+        """Every expected row banked and verified, nothing in motion —
+        the precondition for the commit (double ownership ends only
+        here)."""
+        return (self.state == "shipping" and not self._queued
+                and not self._inflight and not self._arriving
+                and self._held is None and not self._dirty
+                and set(self.banked) == self._expected)
+
+    def abort(self) -> None:
+        self.state = "aborted"
+
+    # -- ship (host -> wire) ----------------------------------------------
+
+    def next_wire(self, engine, step: int) -> dict:
+        """Fill this flush's migration wire slices: numpy leaves keyed
+        ``mcnt/mdst/mepoch/mgid`` shaped ``(P, microbatches, ...)``.
+        Slice (m, j) may only carry rows member m CURRENTLY owns — the
+        device gathers the vectors from m's live shard.  At most
+        ``slice_cap`` rows per slice bound the per-flush overhead."""
+        if engine.faults is not None:
+            engine.faults.on_migrate(step, "ship",
+                                     mesh=engine._active_mesh())
+        # a flush that died between ship and ingest left rows marked
+        # in-flight that never arrived: re-ship them
+        if self._inflight:
+            self.reships += len(self._inflight)
+            self._queued |= self._inflight
+            self._inflight = set()
+        p, _, _, _ = engine._exchange_geometry()
+        mb = engine.microbatches
+        cap = self.slice_cap
+        mgid = np.zeros((p, mb, cap), np.int32)
+        mdst = np.zeros((p, mb, cap), np.int32)
+        mcnt = np.zeros((p, mb, 1), np.int32)
+        mepoch = np.full((p, mb, 1), self.epoch, np.int32)
+        carried = False
+        for m in range(p):
+            gids = sorted(g for g in self._queued if self._src[g] == m)
+            gids = gids[:mb * cap]
+            for j in range(mb):
+                chunk = gids[j * cap:(j + 1) * cap]
+                if not chunk:
+                    break
+                n = len(chunk)
+                mgid[m, j, :n] = chunk
+                mdst[m, j, :n] = [self._dst[g] for g in chunk]
+                mcnt[m, j, 0] = n
+                self._queued.difference_update(chunk)
+                self._inflight.update(chunk)
+                self.shipped_rows += n
+                carried = True
+        if carried:
+            self.installments += 1
+        return {"mcnt": mcnt, "mdst": mdst, "mepoch": mepoch, "mgid": mgid}
+
+    # -- harvest (wire -> bank) -------------------------------------------
+
+    def ingest(self, staged, engine, step: int) -> None:
+        """Bank this flush's harvested slices WITHOUT reading them (the
+        leaves are device-resident; an immediate fetch would sync the
+        host against the step it just dispatched).  The PREVIOUS flush's
+        harvest — long since materialized — is verified now."""
+        self._process_held(engine)
+        if engine.faults is not None:
+            engine.faults.on_migrate(step, "bank",
+                                     mesh=engine._active_mesh())
+        self._held = staged
+        self._held_step = step
+        self._arriving = self._inflight
+        self._inflight = set()
+
+    def _process_held(self, engine) -> None:
+        """Verify the banked harvest: leaves are ``(P_dst, mb, P_src,
+        ...)``.  Checksum-verified rows bank as host copies; mismatches
+        reject and re-ship (a corrupted installment is a retried one,
+        never a lost or a poisoned one); rows a delta dirtied while they
+        flew also re-ship, so the bank always equals the live shard."""
+        if self._held is None:
+            return
+        if engine.faults is not None:
+            engine.faults.on_migrate(self._held_step, "verify",
+                                     mesh=engine._active_mesh())
+        import jax
+        staged, self._held = self._held, None
+        dd = {k: np.asarray(v) for k, v in jax.device_get(staged).items()}
+        p_dst, mb, p_src = dd["mgid"].shape[:3]
+        if dd["mcnt"].any():
+            for m in range(p_dst):
+                for j in range(mb):
+                    for q in range(p_src):
+                        c = int(dd["mcnt"][m, j, q, 0])
+                        if c == 0:
+                            continue
+                        ep = int(dd["mepoch"][m, j, q, 0])
+                        if ep != self.epoch:
+                            continue   # a dead reshard's stragglers
+                        gids = dd["mgid"][m, j, q, :c].astype(np.int64)
+                        got = np.asarray(row_checksum(
+                            dd["mvec"][m, j, q, :c], gids, np.int64(ep)),
+                            np.uint32)
+                        ok = got == dd["mcs"][m, j, q, :c]
+                        for i, g in enumerate(int(x) for x in gids):
+                            if g not in self._arriving:
+                                continue  # duplicate delivery
+                            self._arriving.discard(g)
+                            if not ok[i]:
+                                self.rejects += 1
+                                self.reships += 1
+                                self._queued.add(g)
+                            elif g in self._dirty:
+                                self._dirty.discard(g)
+                                self.reships += 1
+                                self._queued.add(g)
+                            else:
+                                self.banked[g] = np.array(
+                                    dd["mvec"][m, j, q, i])
+        # anything expected that never arrived re-ships
+        if self._arriving:
+            self.reships += len(self._arriving)
+            self._queued |= self._arriving
+            self._arriving = set()
+
+    # -- freshness interop -------------------------------------------------
+
+    def note_applied(self, gid: int, vec, dtype) -> None:
+        """A versioned delta just committed into the live tables for
+        ``gid``.  The banked copy (if any) is patched to the identical
+        post-apply value; an in-flight copy is marked dirty so its stale
+        bytes re-ship from the post-apply shard.  Queued rows need
+        nothing — their gather reads the live shard at ship time."""
+        g = int(gid)
+        if g not in self._expected:
+            return
+        if g in self.banked:
+            self.banked[g] = np.asarray(vec).astype(dtype).copy()
+        elif g in self._inflight or g in self._arriving:
+            self._dirty.add(g)
+
+    # -- commit (two swaps) ------------------------------------------------
+
+    def try_commit(self, engine, step: int) -> bool:
+        """Atomic cutover, if and only if every moved row is banked and
+        verified.  Builds the NEW physical stack host-side — keepers
+        gathered from the old stack, movers installed from the BANKED
+        wire-shipped rows (padding beyond each table's real size stays
+        zero; those rows are never pooled) — then swaps: (1) tables +
+        partition map together, (2) the hot cache, with the injectable
+        ``"commit"`` crash point between them.  Before swap (1) nothing
+        published has changed: rollback is the absence of the swap."""
+        self._process_held(engine)
+        if not self.complete:
+            return False
+        if engine.faults is not None:
+            engine.faults.on_migrate(step, "install",
+                                     mesh=engine._active_mesh())
+        old = engine.params["tables"]
+        r = int(old.shape[1])
+        s = int(old.shape[2])
+        old_inv = engine.pmap.inv_array()
+        new_map = self.plan.new_map
+        new_perm = new_map.perm_array()
+        new_inv = new_map.inv_array()
+        order = old_inv[new_perm]        # new slot -> old slot
+        mov_slots, slot_ix, row_ix, vals = [], [], [], []
+        for ti, _, _, rows in self.plan.moves:
+            slot = int(new_inv[ti])
+            mov_slots.append(slot)
+            for j in range(rows):
+                slot_ix.append(slot)
+                row_ix.append(j)
+                vals.append(self.banked[ti * r + j])
+        vals_a = (np.stack(vals).astype(np.float32) if vals
+                  else np.zeros((0, s), np.float32))
+        staged_tables = _install_stack(
+            old,
+            jnp.asarray(order.astype(np.int32)),
+            jnp.asarray(np.asarray(mov_slots, np.int32)),
+            jnp.asarray(np.asarray(slot_ix, np.int32)),
+            jnp.asarray(np.asarray(row_ix, np.int32)),
+            jnp.asarray(vals_a))
+        staged_cache = engine.cache
+        if engine.cache is not None:
+            from repro.serving import hot_cache as hc_mod
+            staged_cache = hc_mod.permute_tables(engine.cache, order)
+        # swap 1: the stack and the map that interprets it, together —
+        # every consumer reads both through the engine, so the pair is
+        # atomic with respect to the next flush
+        engine.params["tables"] = staged_tables
+        engine._pmap = new_map
+        if engine.faults is not None:
+            engine.faults.on_migrate(step, "commit",
+                                     mesh=engine._active_mesh())
+        # swap 2: the cache copies, permuted to the new physical order
+        engine.cache = staged_cache
+        self.state = "committed"
+        return True
+
+    def summary(self) -> dict:
+        return {
+            "state": self.state,
+            "epoch": self.epoch,
+            "moved_rows": self.plan.moved_rows,
+            "banked": len(self.banked),
+            "shipped_rows": self.shipped_rows,
+            "reships": self.reships,
+            "rejects": self.rejects,
+            "installments": self.installments,
+        }

@@ -38,6 +38,12 @@ class StragglerMonitor:
     def observe(self, seconds: float) -> None:
         self.lat.append(seconds)
 
+    def reset(self) -> None:
+        """Forget the window: latencies observed under the OLD table
+        layout are not evidence about the new one (called on placement
+        cutover and on eviction — both change per-member work)."""
+        self.lat.clear()
+
     def percentile(self, q: float) -> float:
         if not self.lat:
             return 0.0
@@ -98,6 +104,17 @@ class CapAutotuner:
         self.live.append(int(live_max))
         self.drops += int(drops)
         self.total_drops += int(drops)
+
+    def reset(self) -> None:
+        """Recalibrate: live-count quantiles measured under the OLD
+        table layout say nothing about the new one (a repartition moves
+        exactly the hot tables, so the stale window would recommend a
+        cap sized for skew that no longer exists).  Called on placement
+        cutover AND on eviction — both used to silently carry the
+        window over.  ``total_drops`` is a lifetime counter and
+        survives."""
+        self.live.clear()
+        self.drops = 0
 
     def __len__(self) -> int:
         return len(self.live)

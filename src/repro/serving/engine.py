@@ -22,7 +22,9 @@ from repro.configs.base import DLRMConfig, ModelConfig
 from repro.core import alltoallv as a2a_mod
 from repro.core import bls as bls_mod
 from repro.models import api, dlrm as dlrm_mod
+from repro.runtime import placement as plc_mod
 from repro.runtime.elastic import NodeFailure
+from repro.runtime.reshard import MIG_KEYS, ReshardExecutor
 from repro.runtime.straggler import (CapAutotuner, StragglerMonitor,
                                      detect_stragglers)
 from repro.train import steps as steps_mod
@@ -52,6 +54,16 @@ class ServeStats:
     versions_behind: int = 0    # ledger spread after the last flush
     delta_rejects: int = 0      # checksum-rejected (re-shipped) delta rows
     apply_rollbacks: int = 0    # applies abandoned by a mid-apply crash
+    # -- placement ledger (skew-aware resharding, DESIGN.md §11) -----------
+    reshards: int = 0           # committed placement cutovers
+    reshard_aborts: int = 0     # in-flight reshards torn down by evict()
+    migrated_rows: int = 0      # embedding rows moved by committed cutovers
+    imbalance_ratio: float = 1.0   # max/mean per-member pooled-row load
+    flush_time_ratio: float = 1.0  # max/mean per-member flush-time estimate
+    # per-member exchange telemetry (EWMA pooled rows / exchanged bytes,
+    # dispatch_stats-sourced) — lists so the JSON view keeps the member axis
+    member_rows: list = dataclasses.field(default_factory=list)
+    member_bytes: list = dataclasses.field(default_factory=list)
 
     @property
     def throughput_rps(self) -> float:
@@ -118,6 +130,18 @@ class DLRMEngine:
     the engine recovers from in place — rebuild the mesh from survivors,
     repartition the table stack (and cache), re-jit, and replay the
     in-flight batch with bounded backoff — zero requests lost.
+
+    **Skew-aware placement** (DESIGN.md §11): ``rebalance=True`` arms the
+    background rebalance policy.  Every flush's live-bag counts feed a
+    per-table ``runtime.placement.TableLoadModel``; per-member imbalance
+    sustained over ``rebalance_threshold`` for ``rebalance_patience``
+    flushes (paused while the serving ladder is off FULL) plans a minimal
+    LPT migration and executes it ONLINE (``runtime.reshard``): moved rows
+    ride the fused wire in ``mig_slice_cap``-bounded installments while
+    serving continues bit-exact on the pre-move layout, then one atomic
+    swap cuts over.  Eviction aborts any in-flight reshard (rollback is
+    the absence of the swap) and makes a rebalance on the shrunken pod
+    mandatory.
     """
 
     def __init__(self, params, cfg: DLRMConfig, *, batch_size: int = 512,
@@ -138,7 +162,11 @@ class DLRMEngine:
                  degraded_fallback: str = "zero",
                  confirm_after: int = 2,
                  max_retries: int = 2,
-                 retry_backoff_s: float = 0.0):
+                 retry_backoff_s: float = 0.0,
+                 rebalance: bool = False,
+                 rebalance_threshold: float = 1.25,
+                 rebalance_patience: int = 8,
+                 mig_slice_cap: int = 8):
         self.params, self.cfg = params, cfg
         self.batch_size = batch_size
         self.bound, self.microbatches = bound, microbatches
@@ -176,6 +204,11 @@ class DLRMEngine:
                 "flushes; plan_pipeline's deferred harvest would tear the "
                 "apply/replay boundary — serve updates without "
                 "plan_pipeline")
+        if rebalance and plan_pipeline:
+            raise ValueError(
+                "online resharding migrates rows through the synchronous "
+                "flush path; plan_pipeline's deferred harvest would tear "
+                "the cutover boundary — rebalance without plan_pipeline")
         self.deadline_s = deadline_s
         self.on_deadline = on_deadline
         self.faults = faults
@@ -200,7 +233,22 @@ class DLRMEngine:
         # the next pipelined flush adopts it when its batch matches
         self._staged_plan = None
         self.plan_stage_hits = 0       # flushes served a prefetched plan
-        self._step = jax.jit(self._make_step(bound, microbatches))
+        # -- skew-aware placement + online resharding (DESIGN.md §11) ------
+        self.rebalance = bool(rebalance)
+        self.rebalance_threshold = float(rebalance_threshold)
+        self.rebalance_patience = max(1, int(rebalance_patience))
+        self.mig_slice_cap = max(1, int(mig_slice_cap))
+        self._pmap = None              # None == identity boot placement
+        self.reshard = None            # in-flight ReshardExecutor
+        self._reshard_epoch = 0        # fences dead reshards' wire slices
+        self.load_model = None         # lazy TableLoadModel (sized per mesh)
+        self._member_ewma = None       # EWMA per-member pooled live rows
+        self._imb_streak = 0           # consecutive over-threshold flushes
+        self._rebalance_pending = False  # mandatory rebalance after evict()
+        # bumped on every layout change (cutover AND eviction): the
+        # frontend's flush-EWMA keys off it to recalibrate
+        self.layout_version = 0
+        self._rebuild_step()
 
     def calibrate_cache(self, idx: np.ndarray, mask: np.ndarray,
                         cache_rows: Optional[int] = None):
@@ -210,7 +258,7 @@ class DLRMEngine:
         rows = cache_rows if cache_rows is not None else self.cfg.cache_rows
         self.cache = HC.build_from_batch(self.params["tables"], idx, mask,
                                          rows)
-        self._step = jax.jit(self._make_step(self.bound, self.microbatches))
+        self._rebuild_step()
         return self.cache
 
     def adopt_cache(self, cache):
@@ -219,9 +267,46 @@ class DLRMEngine:
         re-jit the step around it.  Pass None to drop the cache."""
         self.cache = cache
         self._staged_plan = None       # plan applicability may change
-        self._step = jax.jit(self._make_step(self.bound, self.microbatches))
+        self._rebuild_step()
 
-    def _make_step(self, bound, microbatches):
+    # -- placement-conditioned step construction ---------------------------
+
+    @property
+    def pmap(self) -> "plc_mod.PartitionMap":
+        """The live table placement.  ``None`` internally means the
+        identity boot layout (materialized lazily — t_pad depends on the
+        active mesh, which __init__ may not have yet)."""
+        if self._pmap is None:
+            _, t_pad, _, _ = self._exchange_geometry()
+            return plc_mod.PartitionMap.identity(t_pad)
+        return self._pmap
+
+    def _step_flags(self):
+        """(with_mig, with_inv): whether the step signature carries the
+        migration wire leaves and/or the placement inverse permutation.
+        The inv rides whenever a migration is live (so the cutover is an
+        ARRAY swap, not a signature change) or the map is non-identity."""
+        with_mig = self.reshard is not None and self.reshard.active
+        with_inv = with_mig or (self._pmap is not None
+                                and not self._pmap.is_identity)
+        return with_mig, with_inv
+
+    def _rebuild_step(self):
+        with_mig, with_inv = self._step_flags()
+        self._step_key = (with_mig, with_inv)
+        self._step = jax.jit(self._make_step(
+            self.bound, self.microbatches,
+            with_mig=with_mig, with_inv=with_inv))
+
+    def _ensure_step(self):
+        """Re-jit only when the step's SIGNATURE flags drifted from the
+        compiled one (migration started/ended) — every other layout
+        change flows through the table_inv argument without a retrace."""
+        if self._step_flags() != self._step_key:
+            self._rebuild_step()
+
+    def _make_step(self, bound, microbatches, *, with_mig=False,
+                   with_inv=False):
         cfg, wire = self.cfg, self.wire_dtype
         ex, cap = self.exchange, self.ragged_cap
         pipe = self.exchange_pipeline
@@ -257,22 +342,33 @@ class DLRMEngine:
             return (jax.nn.sigmoid(logits), diag.live_max, diag.drops,
                     diag.approx_rows)
 
-        def forward(params, dense, idx, mask, cache, plan, *dargs):
-            # dargs: the delta wire leaves in DELTA_KEYS order (freshness
-            # serving only) — the staged harvest rides the step output
-            deltas = dict(zip(DELTA_KEYS, dargs)) if dargs else None
+        def forward(params, dense, idx, mask, cache, plan, *xargs):
+            # xargs tail, in order: delta wire leaves (DELTA_KEYS,
+            # freshness serving), migration wire leaves (MIG_KEYS, live
+            # resharding), then the placement inverse permutation.
+            # Presence of each group is a trace-time constant baked into
+            # this step variant, so the split below is static
+            rest = list(xargs)
+            table_inv = rest.pop() if with_inv else None
+            migration = None
+            if with_mig:
+                migration = dict(zip(MIG_KEYS, rest[-len(MIG_KEYS):]))
+                del rest[-len(MIG_KEYS):]
+            deltas = dict(zip(DELTA_KEYS, rest)) if rest else None
             res = dlrm_mod.forward_distributed(
                 params, cfg, dense, idx, mask, bound=bound,
                 microbatches=microbatches, unroll=self.unroll,
                 cache=cache, wire_dtype=wire,
                 exchange=ex, ragged_cap=cap, exchange_pipeline=pipe,
                 row_block=rblk, pool_mode=pool, plan=plan, deltas=deltas,
+                migration=migration, table_inv=table_inv,
                 degraded_members=deg, degraded_fallback=fb,
                 return_diag=diag_on)
-            if deltas is not None:
-                *core, staged = res
+            n_staged = int(deltas is not None) + int(migration is not None)
+            if n_staged:
+                core, staged = res[:-n_staged], res[-n_staged:]
                 return _finish(core[0] if len(core) == 1
-                               else tuple(core)) + (staged,)
+                               else tuple(core)) + tuple(staged)
             return _finish(res)
 
         if self.cache is None:
@@ -280,9 +376,9 @@ class DLRMEngine:
                 def step(params, dense, idx, mask, plan):
                     return forward(params, dense, idx, mask, None, plan)
             else:
-                def step(params, dense, idx, mask, *dargs):
+                def step(params, dense, idx, mask, *xargs):
                     return forward(params, dense, idx, mask, None, None,
-                                   *dargs)
+                                   *xargs)
             return step
 
         from repro.serving.hot_cache import HotCache
@@ -298,10 +394,10 @@ class DLRMEngine:
                              slot_of=slot_of)
                 return forward(params, dense, idx, mask, c, plan)
         else:
-            def step(params, dense, idx, mask, hot_rows, slot_of, *dargs):
+            def step(params, dense, idx, mask, hot_rows, slot_of, *xargs):
                 c = HotCache(hot_ids=None, hot_rows=hot_rows,
                              slot_of=slot_of)
-                return forward(params, dense, idx, mask, c, None, *dargs)
+                return forward(params, dense, idx, mask, c, None, *xargs)
 
         return step
 
@@ -376,6 +472,7 @@ class DLRMEngine:
             self.retune_cap()
         if step_no is not None:
             self._after_flush(step_no, end - t0)
+            self.maybe_rebalance()
         return out[:n]
 
     def _harvest(self):
@@ -493,17 +590,24 @@ class DLRMEngine:
         padding: eviction changes P, and with it t_pad = padded_tables(cfg,
         P).  Cropping is safe (padding tables beyond n_tables carry mask 0
         and are never indexed); growth pads with dead (idx 0, mask 0)
-        slots."""
+        slots.  A non-identity placement then PERMUTES the table axis —
+        physical column p serves original table perm[p], so the shard a
+        bag lands on is the one that owns its table."""
         _, t_pad, _, _ = self._exchange_geometry()
         have = i.shape[1]
-        if have == t_pad:
-            return d, i, m
         if have > t_pad:
-            return d, i[:, :t_pad], m[:, :t_pad]
-        iz = np.zeros((i.shape[0], t_pad - have, i.shape[2]), i.dtype)
-        mz = np.zeros((m.shape[0], t_pad - have, m.shape[2]), m.dtype)
-        return (d, np.concatenate([i, iz], axis=1),
-                np.concatenate([m, mz], axis=1))
+            i, m = i[:, :t_pad], m[:, :t_pad]
+        elif have < t_pad:
+            iz = np.zeros((i.shape[0], t_pad - have, i.shape[2]), i.dtype)
+            mz = np.zeros((m.shape[0], t_pad - have, m.shape[2]), m.dtype)
+            i = np.concatenate([i, iz], axis=1)
+            m = np.concatenate([m, mz], axis=1)
+        pm = self._pmap
+        if pm is not None and not pm.is_identity:
+            perm = pm.perm_array()
+            i = np.take(i, perm, axis=1)
+            m = np.take(m, perm, axis=1)
+        return d, i, m
 
     def _run_batch(self, d, i, m, step_no):
         """Dispatch one batch with fault injection + bounded-retry
@@ -518,6 +622,13 @@ class DLRMEngine:
                     # harvested last flush commit (or roll back) before
                     # this flush's batch is dispatched
                     self.freshness.apply(self, step_no)
+                # the cutover window sits between flushes too: once every
+                # migrated row is banked and verified, the atomic swap
+                # happens here, BEFORE this flush's batch is dispatched
+                resh = self.reshard
+                if resh is not None and resh.try_commit(self, step_no):
+                    self._finish_cutover(resh)
+                self._ensure_step()
                 if self.faults is not None:
                     self.faults.on_flush(step_no, mesh=self._active_mesh(),
                                          exclude=self.degraded_members)
@@ -527,8 +638,18 @@ class DLRMEngine:
                     dw = self.freshness.next_wire(self, step_no)
                     args = args + tuple(jnp.asarray(dw[k])
                                         for k in DELTA_KEYS)
+                mig_live = self.reshard is not None and self.reshard.active
+                if mig_live:
+                    mw = self.reshard.next_wire(self, step_no)
+                    args = args + tuple(jnp.asarray(mw[k])
+                                        for k in MIG_KEYS)
+                if self._step_key[1]:        # with_inv
+                    args = args + (jnp.asarray(self.pmap.inv_array()),)
                 with self._mesh_ctx():
                     out, *diag = self._step(*args)
+                if mig_live:
+                    # migration harvest rides LAST in the step output
+                    self.reshard.ingest(diag.pop(), self, step_no)
                 if self.freshness is not None:
                     staged = diag.pop()
                     self.freshness.ingest(staged, self, step_no)
@@ -539,6 +660,7 @@ class DLRMEngine:
                     self.stats.delta_rejects = fr.delta_rejects
                     self.stats.apply_rollbacks = fr.rollbacks
                     self.stats.versions_behind = fr.ledger.versions_behind
+                self._observe_load(fm, step_no)
                 return out, diag
             except NodeFailure as e:
                 if attempt >= self.max_retries:
@@ -548,6 +670,139 @@ class DLRMEngine:
                 self.evict(e.surviving_devices)
                 self.stats.replays += 1
         raise AssertionError("unreachable")
+
+    # -- skew-aware placement: telemetry, policy, online resharding --------
+
+    def _observe_load(self, fm, step_no):
+        """Per-table / per-member load telemetry from the flushed batch's
+        live (unmasked) bags — the placement cost model's input and the
+        ``ServeStats`` imbalance mirror.  ``fm`` is the FITTED (already
+        permuted) mask, so the physical-column counts are mapped back to
+        ORIGINAL table space before they feed the EWMA: observations
+        survive cutovers and evictions unchanged."""
+        p, t_pad, _, _ = self._exchange_geometry()
+        live = np.asarray(np.asarray(fm) > 0).sum(axis=(0, 2)) \
+            .astype(np.float64)
+        pm = self._pmap
+        if pm is not None and not pm.is_identity:
+            orig = np.empty_like(live)
+            orig[pm.perm_array()] = live
+        else:
+            orig = live
+        if self.load_model is None or self.load_model.n_tables != t_pad:
+            self.load_model = plc_mod.TableLoadModel(t_pad)
+        row_b = self.cfg.embed_dim * (
+            a2a_mod.WIRE_ITEMSIZE[a2a_mod.canon_wire(self.wire_dtype)]
+        ) + a2a_mod.WIRE_SCALE_BYTES[a2a_mod.canon_wire(self.wire_dtype)]
+        self.load_model.observe(orig, row_bytes=row_b)
+        # per-member pooled rows (physical slot ranges ARE the members)
+        mrows = live.reshape(p, -1).sum(axis=1)
+        if self._member_ewma is None or len(self._member_ewma) != p:
+            self._member_ewma = mrows.copy()
+        else:
+            self._member_ewma = 0.75 * self._member_ewma + 0.25 * mrows
+        st = self.stats
+        st.member_rows = [float(x) for x in self._member_ewma]
+        st.member_bytes = [
+            float(a2a_mod.dispatch_stats(
+                np.asarray([c]), int(np.ceil(max(float(c), 1.0))),
+                row_b).useful_bytes)
+            for c in self._member_ewma]
+        st.imbalance_ratio = plc_mod.imbalance(self._member_ewma)
+        if self.faults is not None:
+            base = self.monitor.percentile(0.5) or 1e-3
+            lats = np.asarray(sorted(
+                self.faults.latencies(step_no, base).values()), np.float64)
+            st.flush_time_ratio = float(lats.max() / lats.mean()) \
+                if lats.size and lats.mean() > 0 else 1.0
+        else:
+            # lockstep SPMD gives no per-member clock: the exchange-load
+            # ratio is the best flush-time estimate available
+            st.flush_time_ratio = st.imbalance_ratio
+
+    def _table_rows(self, t_pad):
+        """Real (unpadded) per-original-table row counts over the padded
+        stack — what a migration of each table actually ships."""
+        rows = np.zeros(t_pad, np.int64)
+        sizes = np.asarray(self.cfg.table_sizes, np.int64)[:t_pad]
+        rows[:sizes.shape[0]] = sizes
+        return rows
+
+    def maybe_rebalance(self, *, force=False):
+        """The background rebalance policy, run once per harvested batch:
+        start an online reshard when per-member imbalance stayed over
+        ``rebalance_threshold`` for ``rebalance_patience`` consecutive
+        flushes, or unconditionally after an eviction re-leveled the
+        geometry (``_rebalance_pending``).  Pauses whenever the serving
+        ladder is off FULL (``stats.level > 0``: under overload, moving
+        rows competes with serving for the wire).  Returns the started
+        :class:`ReshardExecutor`, or None."""
+        if self.plan_pipeline or (not self.rebalance and not force):
+            return None
+        if self.reshard is not None:
+            return None
+        lm = self.load_model
+        if lm is None or not lm.ready:
+            return None
+        if getattr(self.stats, "level", 0) > 0:   # LEVEL_FULL only
+            return None
+        p, t_pad, _, _ = self._exchange_geometry()
+        if p < 2:
+            return None
+        ml = plc_mod.member_loads(lm.loads, self.pmap, p)
+        imb = plc_mod.imbalance(ml)
+        if not (force or self._rebalance_pending):
+            if imb < self.rebalance_threshold:
+                self._imb_streak = 0
+                return None
+            self._imb_streak += 1
+            if self._imb_streak < self.rebalance_patience:
+                return None
+        plan = plc_mod.plan_migration(
+            self.pmap, lm.loads, p, table_rows=self._table_rows(t_pad))
+        self._imb_streak = 0
+        self._rebalance_pending = False
+        if plan.is_noop:
+            return None
+        return self.start_reshard(plan)
+
+    def start_reshard(self, plan, *, slice_cap=None):
+        """Begin a crash-safe online reshard onto ``plan`` (DESIGN.md
+        §11).  Serving continues throughout: moved rows ride the fused
+        wire in ``slice_cap``-bounded installments; a later flush
+        performs the atomic cutover once every row is banked and
+        verified.  Until then serving is bit-exact on the pre-move
+        layout, and any crash rolls back via evict()."""
+        if self.plan_pipeline:
+            raise ValueError(
+                "online resharding migrates rows through the synchronous "
+                "flush path; plan_pipeline's deferred harvest would tear "
+                "the cutover boundary — rebalance without plan_pipeline")
+        if self.reshard is not None:
+            raise ValueError("a reshard is already in flight")
+        self._reshard_epoch += 1
+        ex = ReshardExecutor(plan, epoch=self._reshard_epoch,
+                             slice_cap=slice_cap or self.mig_slice_cap)
+        ex.start(self)
+        self.reshard = ex
+        self._rebuild_step()
+        return ex
+
+    def _finish_cutover(self, resh):
+        """Post-commit bookkeeping: the layout just changed, so every
+        layout-conditioned estimator restarts — the cap autotuner's
+        live-count window and the straggler monitor's latency window
+        describe skew that no longer exists (they used to silently carry
+        over; the frontend's flush EWMA resets off ``layout_version``)."""
+        self.stats.reshards += 1
+        self.stats.migrated_rows += resh.plan.moved_rows
+        self.reshard = None
+        self.layout_version += 1
+        self.cap_tuner.reset()
+        self.monitor.reset()
+        self._staged_plan = None
+        self._imb_streak = 0
+        self._rebuild_step()
 
     def _after_flush(self, step_no, elapsed):
         """Deadline policy.  A breach is classified by straggler telemetry:
@@ -601,7 +856,7 @@ class DLRMEngine:
         if bound == self.bound:
             return
         self.bound = bound
-        self._step = jax.jit(self._make_step(bound, self.microbatches))
+        self._rebuild_step()
 
     def degrade(self, members):
         """Serve AROUND the given model-axis members: their shards'
@@ -613,7 +868,7 @@ class DLRMEngine:
         if members == self.degraded_members:
             return
         self.degraded_members = members
-        self._step = jax.jit(self._make_step(self.bound, self.microbatches))
+        self._rebuild_step()
 
     def evict_member(self, pos: int):
         """Evict ONE member by model-axis position: its mesh column is
@@ -646,6 +901,13 @@ class DLRMEngine:
         if not survivors:
             raise ValueError("evict: no surviving devices")
         t_rec = time.perf_counter()
+        # an in-flight reshard rolls back by the ABSENCE of its commit:
+        # abort it, recover on the canonical layout, and let the mandatory
+        # post-evict rebalance re-plan against the shrunken geometry
+        resh, self.reshard = self.reshard, None
+        if resh is not None:
+            resh.abort()
+            self.stats.reshard_aborts += 1
         old = self._active_mesh()
         n_data = 1
         if old is not None:
@@ -669,6 +931,16 @@ class DLRMEngine:
         def host(a):
             return np.asarray(jax.device_get(a))
 
+        # recovery CANONICALIZES placement: undo the live permutation
+        # FIRST — fit_t's crop assumes original table order, and under a
+        # non-identity map a real table could sit in a high physical slot
+        # and be cropped away as "padding"
+        pm = self._pmap
+        inv = None if pm is None or pm.is_identity else pm.inv_array()
+
+        def canon(a):
+            return a[inv] if inv is not None else a
+
         def fit_t(a, fill=0):
             """Crop/zero-pad a (T_pad_old, ...) stack to the new t_pad —
             padding tables are never indexed (mask 0), so this is exact."""
@@ -678,7 +950,7 @@ class DLRMEngine:
                           a.dtype)
             return np.concatenate([a, pad], axis=0)
 
-        params = {"tables": fit_t(host(self.params["tables"])),
+        params = {"tables": fit_t(canon(host(self.params["tables"]))),
                   "bot": jax.tree.map(host, self.params["bot"]),
                   "top": jax.tree.map(host, self.params["top"])}
         shardings = {
@@ -691,18 +963,50 @@ class DLRMEngine:
         if self.cache is not None:
             rep = NamedSharding(mesh, P())
             ids = self.cache.hot_ids
-            self.cache = HotCache(
-                hot_ids=(jax.device_put(fit_t(host(ids)), rep)
-                         if ids is not None else None),
-                hot_rows=jax.device_put(fit_t(host(self.cache.hot_rows)),
-                                        rep),
-                # -1 = miss: resurrected padding tables stay cold
-                slot_of=jax.device_put(fit_t(host(self.cache.slot_of),
-                                             fill=-1), rep))
+            if resh is not None:
+                # mid-cutover the cache's physical order is untrustworthy
+                # (the crash may sit BETWEEN the commit's two swaps, where
+                # tables and cache disagree): cold-start it — shapes
+                # refit, every slot a miss, warmed back by serving
+                from repro.serving import hot_cache as hc_mod
+                cold = hc_mod.cold(HotCache(
+                    hot_ids=(host(ids) if ids is not None else None),
+                    hot_rows=host(self.cache.hot_rows),
+                    slot_of=host(self.cache.slot_of)))
+                self.cache = HotCache(
+                    hot_ids=(jax.device_put(
+                        fit_t(np.asarray(cold.hot_ids), fill=-1), rep)
+                        if ids is not None else None),
+                    hot_rows=jax.device_put(
+                        fit_t(np.asarray(cold.hot_rows)), rep),
+                    slot_of=jax.device_put(
+                        fit_t(np.asarray(cold.slot_of), fill=-1), rep))
+            else:
+                self.cache = HotCache(
+                    hot_ids=(jax.device_put(fit_t(canon(host(ids))), rep)
+                             if ids is not None else None),
+                    hot_rows=jax.device_put(
+                        fit_t(canon(host(self.cache.hot_rows))), rep),
+                    # -1 = miss: resurrected padding tables stay cold
+                    slot_of=jax.device_put(
+                        fit_t(canon(host(self.cache.slot_of)), fill=-1),
+                        rep))
         self._mesh = mesh
         self.degraded_members = ()   # positions renumbered: start clean
         self._streak.clear()
-        self._step = jax.jit(self._make_step(self.bound, self.microbatches))
+        # post-recovery placement is the identity boot layout; every
+        # layout-conditioned estimator recalibrates (the cap window and
+        # latency window used to silently carry over an eviction), and a
+        # rebalance against the shrunken geometry becomes mandatory
+        self._pmap = None
+        self.layout_version += 1
+        self.load_model = None
+        self._member_ewma = None
+        self._imb_streak = 0
+        self._rebalance_pending = True
+        self.cap_tuner.reset()
+        self.monitor.reset()
+        self._rebuild_step()
         if self.freshness is not None:
             # un-committed delta rows re-queue; ownership is recomputed
             # from the new geometry at the next ship
@@ -750,8 +1054,7 @@ class DLRMEngine:
         if grow or shrink:
             self.ragged_cap = rec.cap
             self.stats.retunes += 1
-            self._step = jax.jit(self._make_step(self.bound,
-                                                 self.microbatches))
+            self._rebuild_step()
         return rec
 
     def slot_bytes(self) -> int:
@@ -775,11 +1078,16 @@ class DLRMEngine:
             delta_bytes = a2a_mod.delta_wire_layout(
                 p, self.freshness.slice_cap, s,
                 self.params["tables"].dtype).slot_bytes
+        mig_bytes = 0
+        if self.reshard is not None and self.reshard.active:
+            mig_bytes = a2a_mod.mig_wire_layout(
+                p, self.reshard.slice_cap, s,
+                self.params["tables"].dtype).slot_bytes
         layout = a2a_mod.exchange_wire_layout(
             ragged=use_ragged, n_dest=p, cap=cap, bs=bs, t_loc=t_pad // p,
             embed_dim=s, wire_dtype=self.wire_dtype,
             emb_dtype=self.params["tables"].dtype,
-            delta_bytes=delta_bytes)
+            delta_bytes=delta_bytes, mig_bytes=mig_bytes)
         recv = {"buf": jax.ShapeDtypeStruct((p, layout.slot_bytes),
                                             jnp.uint8)}
         side = [jax.ShapeDtypeStruct((bs, s), jnp.dtype(cfg.dtype))]

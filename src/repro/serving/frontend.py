@@ -337,6 +337,10 @@ class ServingFrontend:
         self._rid = 0
         self._ewma_flush: Optional[float] = \
             float(init_flush_s) if init_flush_s > 0 else None
+        # flush-time EWMA is layout-conditioned: a placement cutover or an
+        # eviction changes per-member work, so the predictor recalibrates
+        # whenever the engine's layout_version moves
+        self._layout_seen = getattr(engine, "layout_version", 0)
         self._reject_streak: dict = {}       # tenant -> consecutive rejects
         self._dispatched: collections.deque = collections.deque()
         self._n_dispatched = 0
@@ -462,6 +466,15 @@ class ServingFrontend:
         return self._ewma_flush if self._ewma_flush is not None else 0.0
 
     def _observe_flush(self, seconds: float) -> None:
+        lv = getattr(self.engine, "layout_version", 0)
+        if lv != self._layout_seen:
+            # the layout changed under this flush (cutover / eviction):
+            # forget the old layout's EWMA AND skip this observation —
+            # the flush that spans the swap carries one-off re-jit cost
+            # that would poison the fresh estimate
+            self._layout_seen = lv
+            self._ewma_flush = None
+            return
         s = max(float(seconds), 0.0)
         self._ewma_flush = s if self._ewma_flush is None else \
             (1 - self.ewma_alpha) * self._ewma_flush + self.ewma_alpha * s

@@ -156,6 +156,36 @@ def invalidate(cache: HotCache, tab, row):
             int(hit.sum()))
 
 
+def permute_tables(cache: HotCache, order) -> HotCache:
+    """Re-order the cache along the TABLE axis: ``order[new_slot] =
+    old_slot`` — the hot-cache half of a placement cutover (DESIGN.md
+    §11).  Per-table contents (ids, cached vectors, slot map) are
+    position-independent, so a pure take moves them; the caller swaps
+    the returned cache as the SECOND of the commit's two reference
+    swaps.  Returns a new cache; the input is untouched."""
+    order = jnp.asarray(order, jnp.int32)
+    ids = cache.hot_ids
+    if ids is not None:
+        ids = jnp.take(ids, order, axis=0)
+    return HotCache(hot_ids=ids,
+                    hot_rows=jnp.take(cache.hot_rows, order, axis=0),
+                    slot_of=jnp.take(cache.slot_of, order, axis=0))
+
+
+def cold(cache: HotCache) -> HotCache:
+    """Invalidate EVERYTHING, keeping shapes: every slot becomes a miss
+    and every cached vector zeroes.  The recovery path for a crash
+    between a cutover's two swaps — the one window where the tables and
+    the cache could disagree — where per-row invalidation has nothing
+    trustworthy to key off."""
+    ids = cache.hot_ids
+    if ids is not None:
+        ids = jnp.full_like(ids, -1)
+    return HotCache(hot_ids=ids,
+                    hot_rows=jnp.zeros_like(cache.hot_rows),
+                    slot_of=jnp.full_like(cache.slot_of, -1))
+
+
 def build_from_batch(tables: jnp.ndarray, idx, mask, cache_rows: int
                      ) -> HotCache:
     """Calibrate a cache from one observed batch (the serving engine's
