@@ -1,0 +1,234 @@
+"""Silent-data-corruption self-healing benchmark + CI gate
+(DESIGN.md §12).
+
+Serves a continuous batch stream with the background integrity scrubber
+armed, and measures what self-healing costs and what it catches:
+
+  * ``no_scrub`` — the control: the same engine, scrubber off;
+  * ``live``     — clean stream, scrubber auditing its block budget every
+    flush: per-flush latency distribution, blocks/s audited, full-sweep
+    period — the price of verification when nothing is wrong;
+  * ``corrupt``  — injected bit flips (resident rows) plus a corrupted
+    wire segment: detection latency in flushes, bit-exact repair vs the
+    uncorrupted oracle, zero requests lost.
+
+``scrub_smoke`` is the ``make scrub-smoke`` CI gate; ``run`` returns the
+machine-readable payload for BENCH_dlrm.json's ``scrub`` key.  Both
+spawn the measurement in a subprocess with a forced 8-device host pod.
+The gate asserts, at smoke scale:
+
+  * every injected flip is detected within the scrub window
+    (``ceil(total_blocks / budget)`` flushes, plus slack for the repair
+    round trip sharing the flush cadence);
+  * repaired tables match the uncorrupted oracle BIT for bit, with zero
+    requests lost — detection, quarantine, repair shipping and apply all
+    happen between flushes of a live stream;
+  * the corrupted wire segment is rejected at consume (``wire_rejects``)
+    and serving stays finite throughout;
+  * served flush p99 with the scrubber armed stays within
+    ``MAX_P99_RATIO`` (1.15×) of the no-scrub baseline — integrity is a
+    bounded-budget background audit plus a rider on the existing wire,
+    not a second serving path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+MAX_P99_RATIO = 1.15     # scrub-armed flush p99 vs no-scrub baseline
+SCRUB_BUDGET = 32        # blocks audited per flush (the live/corrupt legs)
+DETECT_SLACK = 4         # flushes of grace past the analytic sweep period
+
+
+def _scrub_payload():
+    """Measure in THIS process (spawned with forced host devices)."""
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.configs.base import DLRMConfig
+    from repro.data import synthetic as S
+    from repro.models import dlrm as D
+    from repro.runtime import elastic
+    from repro.runtime.faults import FaultInjector, FaultPlan
+    from repro.serving.engine import DLRMEngine
+    from repro.sharding import partition
+
+    # compute-realistic scale, for the same reason as bench_freshness:
+    # the scrubber's per-flush cost is a bounded constant (budget blocks
+    # folded on device + a host compare of that many uint32 words), so
+    # the model must do real work per flush for the ratio gate to
+    # measure the audit against a realistic denominator
+    cfg = DLRMConfig("scrub", table_sizes=(400, 600, 300, 500, 200, 700),
+                     embed_dim=64, n_dense_features=4,
+                     bottom_mlp=(512, 256, 64), top_mlp=(512, 256, 1),
+                     sparse_backend="ref")
+    P, B = 4, 480
+    mesh = elastic.make_mesh_from(jax.devices()[:P], model=P)
+    params = D.init_dlrm(jax.random.PRNGKey(0), cfg, n_shards=P)
+    t_pad = D.padded_tables(cfg, P)
+    batches = [S.make_batch(cfg, B, mode="powerlaw", t_pad=t_pad, seed=9,
+                            step=s) for s in range(8)]
+    oracle = np.array(jax.device_get(params["tables"]))
+
+    def one_run(*, scrub_budget=0, faults=None, n_flushes=100):
+        eng = DLRMEngine(params, cfg, batch_size=B, bound=1,
+                         microbatches=2, exchange="dense", faults=faults,
+                         retry_backoff_s=0.0, scrub_budget=scrub_budget)
+        flushes = []
+        with partition.axis_rules(mesh):
+            # warm flushes eat the compiles (and, scrub-armed, the first
+            # repair-rider jit); timing starts after them
+            b0 = batches[0]
+            for _ in range(3):
+                for r in range(B):
+                    eng.submit(b0.dense[r], b0.idx[r], b0.mask[r])
+            eng.stats = type(eng.stats)()
+            t_start = time.perf_counter()
+            for s in range(n_flushes):
+                b = batches[s % len(batches)]
+                t0 = time.perf_counter()
+                for r in range(B):
+                    out = eng.submit(b.dense[r], b.idx[r], b.mask[r])
+                flushes.append(time.perf_counter() - t0)
+                if out is not None:
+                    assert np.isfinite(np.asarray(out)).all()
+            wall_s = time.perf_counter() - t_start
+        xs = sorted(flushes)
+        st = eng.stats
+        out = {
+            "n_flushes": len(flushes), "wall_s": wall_s,
+            "flush_p50_ms": xs[len(xs) // 2] * 1e3,
+            "flush_p99_ms": xs[min(len(xs) - 1,
+                                   int(0.99 * len(xs)))] * 1e3,
+            "requests": st.requests,
+            "zero_lost": st.requests == len(flushes) * B,
+        }
+        if eng.scrub is not None:
+            total_blocks = int(eng.scrub.ledger.block_cs.size)
+            out.update({
+                "scrub_budget": eng.scrub.budget,
+                "total_blocks": total_blocks,
+                "sweep_flushes": -(-total_blocks // eng.scrub.budget),
+                "blocks_scrubbed": st.blocks_scrubbed,
+                "blocks_per_s": st.blocks_scrubbed / max(wall_s, 1e-9),
+                "detections": st.detections,
+                "repaired_rows": st.repaired_rows,
+                "quarantined_served": st.quarantined_served,
+                "wire_rejects": st.wire_rejects,
+                "detection_lag_flushes": st.detection_lag_flushes,
+                "fully_repaired": eng.scrub.fully_repaired,
+            })
+        return out, eng
+
+    base, _ = one_run()
+    live, _ = one_run(scrub_budget=SCRUB_BUDGET)
+    assert live["detections"] == 0 and live["wire_rejects"] == 0
+
+    # corruption leg: two resident-row flips on different tables plus one
+    # corrupted wire segment, all while serving
+    plan = (FaultPlan.none(P, 64)
+            .with_bitflip(1, 2, 7, 5, when=2)
+            .with_bitflip(0, 5, 123, 17, when=3)
+            .with_wire_corruption(2, 0, when=4))
+    corrupt, ceng = one_run(scrub_budget=SCRUB_BUDGET,
+                            faults=FaultInjector(plan), n_flushes=24)
+    got = np.array(jax.device_get(ceng.params["tables"]))
+    corrupt["oracle_exact"] = all(
+        np.array_equal(oracle[t, :sz], got[t, :sz])
+        for t, sz in enumerate(cfg.table_sizes))
+
+    return {
+        "P": P, "B": B,
+        "no_scrub": base, "live": live, "corrupt": corrupt,
+        "p99_ratio": (live["flush_p99_ms"]
+                      / max(base["flush_p99_ms"], 1e-9)),
+        "max_p99_ratio": MAX_P99_RATIO,
+        "detect_window_flushes": corrupt["sweep_flushes"] + DETECT_SLACK,
+    }
+
+
+def _spawn_payload(devices: int = 8, timeout: int = 900) -> dict:
+    here = os.path.abspath(__file__)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") +
+        f" --xla_force_host_platform_device_count={devices}").strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(here), "..", "src"),
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    r = subprocess.run([sys.executable, here, "--scrub-payload"],
+                       env=env, capture_output=True, text=True,
+                       timeout=timeout)
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"scrub payload run failed:\n{r.stdout}\n{r.stderr}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def scrub_smoke() -> dict:
+    """CI gate (``make scrub-smoke``): the acceptance clauses of
+    DESIGN.md §12 at smoke scale."""
+    p = _spawn_payload()
+    live, corrupt = p["live"], p["corrupt"]
+    window = p["detect_window_flushes"]
+    # every flip detected within the scrub window
+    assert corrupt["detections"] >= 2, \
+        f"injected flips went undetected: {corrupt}"
+    assert corrupt["detection_lag_flushes"] <= window, \
+        (f"detection lag {corrupt['detection_lag_flushes']} flushes "
+         f"exceeds the scrub window {window}")
+    # bit-exact repair, zero requests lost, wire segment rejected
+    assert corrupt["repaired_rows"] >= 2 and corrupt["fully_repaired"], \
+        f"corruption not fully repaired: {corrupt}"
+    assert corrupt["oracle_exact"], \
+        "repaired tables diverged from the uncorrupted oracle"
+    assert corrupt["zero_lost"], f"requests lost: {corrupt}"
+    assert corrupt["wire_rejects"] >= 1, \
+        f"corrupted wire segment was consumed unverified: {corrupt}"
+    # the clean path: audited continuously, detected nothing, and the
+    # whole apparatus stays inside the latency envelope
+    assert live["blocks_scrubbed"] > 0 and live["zero_lost"]
+    assert p["p99_ratio"] <= MAX_P99_RATIO, \
+        (f"scrub-armed flush p99 {live['flush_p99_ms']:.2f}ms exceeds "
+         f"{MAX_P99_RATIO}x the no-scrub baseline "
+         f"{p['no_scrub']['flush_p99_ms']:.2f}ms")
+    print(f"scrub-smoke OK: {corrupt['detections']} corruptions "
+          f"detected (lag {corrupt['detection_lag_flushes']} <= window "
+          f"{window} flushes), {corrupt['repaired_rows']} rows repaired "
+          f"bit-exact, {corrupt['wire_rejects']} wire rejects, zero "
+          f"requests lost")
+    print(f"scrub-smoke OK: {live['blocks_per_s']:.0f} blocks/s audited "
+          f"(full sweep every {live['sweep_flushes']} flushes); p99 "
+          f"ratio {p['p99_ratio']:.2f} <= {MAX_P99_RATIO}")
+    return p
+
+
+def run() -> dict:
+    """BENCH_dlrm.json ``scrub`` payload (flush p50/p99 with and without
+    the scrubber, audit throughput, detection/repair ledger under
+    injected corruption)."""
+    return _spawn_payload()
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate instead of the payload print")
+    ap.add_argument("--scrub-payload", action="store_true",
+                    help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+    if args.scrub_payload:
+        print(json.dumps(_scrub_payload()))
+    elif args.smoke:
+        scrub_smoke()
+    else:
+        print(json.dumps(run(), indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -19,7 +19,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (bench_alltoallv, bench_dlrm, bench_faults,
                             bench_freshness, bench_kernels,
-                            bench_placement, bench_serve, bench_sim)
+                            bench_placement, bench_scrub, bench_serve,
+                            bench_sim)
 
     bench_sim.run()            # paper Figs 7 & 8 (+ straggler control)
     bench_alltoallv.main()     # paper Fig 6 analogue
@@ -37,6 +38,9 @@ def main() -> None:
     # placement: skewed vs uniform vs rebalanced imbalance + flush p99,
     # migration ledger/overhead, predicted makespans, chaos grid
     dlrm_payload["placement"] = bench_placement.run()
+    # integrity: flush p50/p99 with vs without the background scrubber,
+    # audit throughput, detection/repair ledger under injected corruption
+    dlrm_payload["scrub"] = bench_scrub.run()
 
     # perf trajectory: BENCH_dlrm.json keyed by git SHA
     path = bench_dlrm.write_bench_json(dlrm_payload)

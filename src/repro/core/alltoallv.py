@@ -271,7 +271,9 @@ def exchange_wire_layout(*, ragged: bool, n_dest: int, cap: int, bs: int,
                          emb_dtype=jnp.float32,
                          n_slots: int = 0,
                          delta_bytes: int = 0,
-                         mig_bytes: int = 0) -> WireLayout:
+                         mig_bytes: int = 0,
+                         rep_bytes: int = 0,
+                         wire_check: bool = False) -> WireLayout:
     """The ONE layout both halves of a DLRM exchange agree on.
 
     ragged: per destination ``cap`` codec rows + narrow slot ids + an
@@ -293,7 +295,19 @@ def exchange_wire_layout(*, ragged: bool, n_dest: int, cap: int, bs: int,
     their current owner to their future owner inside the serving
     exchange.  Its internal structure is :func:`mig_wire_layout`; the
     exchange still issues exactly one collective with both riders
-    aboard."""
+    aboard.
+
+    ``rep_bytes > 0`` adds a third opaque field, ``"xrep"``, again by the
+    same construction (DESIGN.md §12): integrity REPAIR rows from the
+    host-side authoritative mirror to the owner of a quarantined row.
+    Its internal structure is :func:`rep_wire_layout`.
+
+    ``wire_check`` adds a ``"wcs"`` field — ONE uint32 per destination
+    slot, stamped by the sender over the slot's remaining bytes
+    (:func:`repro.core.integrity.wire_stamp`) and verified at consume in
+    both the mono and ring paths.  This is the end-to-end check on the
+    serving payload itself (pooled embeddings AND every rider): a flip
+    anywhere between fuse and defuse rejects the whole segment."""
     wire = canon_wire(wire_dtype)
     qdt = {"float32": jnp.dtype(emb_dtype), "bfloat16": jnp.bfloat16,
            "int8": jnp.int8}[wire]
@@ -311,6 +325,10 @@ def exchange_wire_layout(*, ragged: bool, n_dest: int, cap: int, bs: int,
         fields["xdelta"] = ((int(delta_bytes),), jnp.uint8)
     if mig_bytes:
         fields["xmig"] = ((int(mig_bytes),), jnp.uint8)
+    if rep_bytes:
+        fields["xrep"] = ((int(rep_bytes),), jnp.uint8)
+    if wire_check:
+        fields["wcs"] = ((1,), jnp.uint32)
     return wire_layout(n_dest, fields)
 
 
@@ -356,6 +374,28 @@ def mig_wire_layout(n_dest: int, cap: int, embed_dim: int,
         "mcs": ((cap,), jnp.uint32),
         "mcnt": ((1,), jnp.int32),
         "mepoch": ((1,), jnp.int32),
+    })
+
+
+def rep_wire_layout(n_dest: int, cap: int, embed_dim: int,
+                    emb_dtype=jnp.float32) -> WireLayout:
+    """Sub-layout of the integrity-repair blob that rides the fused
+    exchange as its single ``"xrep"`` field (DESIGN.md §12): per
+    destination (= owner of a quarantined row) up to ``cap`` known-good
+    embedding rows (``rvec``) from the HOST-side authoritative mirror,
+    their flat ORIGINAL global ids (``rgid`` = table · R_max + row), and
+    per-row uint32 checksums stamped by the mirror over the exact bytes
+    that ship (``rcs`` — the same :func:`repro.core.integrity.row_checksum`
+    fold as the delta and migration riders, version 0: repairs restore
+    bytes, they do not advance versions), plus the valid-row count
+    (``rcnt``).  Same :func:`fuse_wire`/:func:`defuse_wire` bitcast
+    discipline; the exchange still issues exactly one collective with
+    all three riders aboard."""
+    return wire_layout(n_dest, {
+        "rvec": ((cap, embed_dim), jnp.dtype(emb_dtype)),
+        "rgid": ((cap,), jnp.int32),
+        "rcs": ((cap,), jnp.uint32),
+        "rcnt": ((1,), jnp.int32),
     })
 
 

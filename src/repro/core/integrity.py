@@ -1,0 +1,263 @@
+"""Shared integrity primitives (DESIGN.md §12): ONE checksum fold for
+every payload that crosses a trust boundary.
+
+Before this module, three independent copies of the same position-
+weighted byte fold guarded three different payloads: ``freshness``
+stamped delta rows (``dcs``), ``reshard`` stamped migration rows
+(``mcs``), and each had its own host/device replica.  This module is
+now the single source of truth:
+
+  * ``row_checksum``        — the host (numpy) fold, moved verbatim
+    from ``runtime/freshness.py`` (which re-exports it for back-compat);
+  * ``row_checksum_device`` — the device (jnp) replica, formerly
+    ``mig_checksum`` inside ``models/dlrm.py``.  uint32 wraparound is
+    congruent mod 2^32 to the host's uint64-then-mask, so either side
+    can stamp and the other verify;
+  * ``fold_blocks`` / ``fold_rows`` — the scrubber's vectorized audit:
+    checksum a batch of row-blocks on device (the scrubber dispatches
+    the row fold one flush ahead and harvests a few KB of uint32 words
+    the NEXT flush, so the audit never stalls serving on device
+    compute);
+  * ``IntegrityLedger``     — blocked per-(table, row-block) expected
+    checksums in ORIGINAL table space, established at load and re-folded
+    incrementally on every row update (freshness apply, scrub repair).
+    Keying by original table id makes a reshard cutover a ledger no-op:
+    the audit translates original → physical at gather time;
+  * ``wire_fold`` / ``wire_stamp`` — end-to-end serving-payload
+    verification: a per-destination checksum over the fused wire slot's
+    bytes, with the checksum field's own bytes zero-weighted so the
+    stamp does not perturb what it protects.
+
+The fold itself (weights ``(i mod 251) + 1``, Knuth multiplicative
+identity mixing, 2^32 wrap) is pinned by an equivalence test — on-wire
+checksums must stay stable across refactors because host and device
+stamps of OLD payloads in flight verify against NEW code during a
+rolling upgrade.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_CS_GID = np.uint64(2654435761)      # Knuth multiplicative constants: mix
+_CS_VER = np.uint64(2654435789)      # identity into the byte sum
+_CS_MASK = np.uint64(0xFFFFFFFF)
+_CS_MOD = 1 << 32
+
+
+def row_checksum(vec, gid, ver):
+    """Per-row uint32 checksum over the row's WIRE BYTES plus its identity
+    (gid, version).
+
+    ``vec``: (..., s) array of any fixed-width dtype; ``gid``/``ver``
+    broadcast against the leading shape.  The byte sum is position-
+    weighted (weight (i mod 251) + 1, all nonzero), so any single-byte
+    flip changes the sum by a nonzero amount < 2^16 — detected exactly
+    under the 2^32 mask — and byte swaps change it too.  Identity mixing
+    means a row delivered to the wrong (gid, version) slot also rejects.
+    Pure numpy: both the source stamp and the receiver verify run on
+    host, over the exact bytes the bitcast wire round-trips."""
+    v = np.ascontiguousarray(vec)
+    u8 = v.view(np.uint8).reshape(v.shape[:-1] + (-1,)).astype(np.uint64)
+    w = (np.arange(u8.shape[-1], dtype=np.uint64) % np.uint64(251)
+         + np.uint64(1))
+    s = (u8 * w).sum(axis=-1)
+    s = s + _CS_GID * np.asarray(gid, np.uint64) \
+        + _CS_VER * np.asarray(ver, np.uint64)
+    return (s & _CS_MASK).astype(np.uint32)
+
+
+def row_checksum_device(vec, gid, ver):
+    """Device-side replica of ``row_checksum``: fold the row's exact wire
+    bytes (bitcast, little-endian — the same bytes fuse_wire ships) with
+    position weights, mix in gid and version, wrap in uint32.  uint32
+    wraparound arithmetic is congruent mod 2^32 to the host's
+    uint64-then-mask, so either side verifies the other's stamp.
+
+    ``vec``: (n, s) device array; ``gid``/``ver`` broadcast to (n,)."""
+    b = jax.lax.bitcast_convert_type(vec, jnp.uint8)
+    b = b.reshape(vec.shape[0], -1).astype(jnp.uint32)
+    w = (jnp.arange(b.shape[1], dtype=jnp.uint32) % 251) + 1
+    s = jnp.sum(b * w[None, :], axis=1, dtype=jnp.uint32)
+    return (s + jnp.uint32(2654435761)
+            * jnp.broadcast_to(gid, s.shape).astype(jnp.uint32)
+            + jnp.uint32(2654435789)
+            * jnp.broadcast_to(ver, s.shape).astype(jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# Blocked audit folds (the scrubber's device half)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _fold_rows_jit(tables, phys_t, offs, orig_t):
+    """Per-row checksums for a batch of blocks.
+
+    ``tables``: (t_pad, R, s) the live (physical-order) stack;
+    ``phys_t``: (nb,) physical slot each audited block lives in NOW;
+    ``offs``:   (nb, bk) row offsets (entries >= R are padding → 0);
+    ``orig_t``: (nb,) ORIGINAL table id — the checksum identity is the
+    original gid ``orig_t * R + off`` so the ledger survives resharding.
+    Returns (nb, bk) uint32, padding rows folded to 0."""
+    r = tables.shape[1]
+    valid = offs < r
+    rows = tables[phys_t[:, None], jnp.clip(offs, 0, r - 1)]
+    nb, bk = offs.shape
+    gid = (orig_t[:, None].astype(jnp.int32) * jnp.int32(r)
+           + offs.astype(jnp.int32)).reshape(-1)
+    rcs = row_checksum_device(rows.reshape(nb * bk, -1), gid, jnp.int32(0))
+    return jnp.where(valid.reshape(-1), rcs, jnp.uint32(0)).reshape(nb, bk)
+
+
+@jax.jit
+def _fold_blocks_jit(tables, phys_t, offs, orig_t):
+    """Block checksums = per-row checksums summed mod 2^32.  The sum (not
+    a hash tree) is deliberate: it makes the ledger INCREMENTALLY
+    refoldable — replacing one row shifts the block sum by
+    (new_row_cs − old_row_cs), which the host applies in O(1) on every
+    freshness apply and scrub repair.  Returns (nb,) uint32 — the clean
+    audit path fetches these words only, never the rows."""
+    return jnp.sum(_fold_rows_jit(tables, phys_t, offs, orig_t), axis=1,
+                   dtype=jnp.uint32)
+
+
+def fold_rows(tables, phys_t, offs, orig_t):
+    return _fold_rows_jit(tables, jnp.asarray(phys_t, jnp.int32),
+                          jnp.asarray(offs, jnp.int32),
+                          jnp.asarray(orig_t, jnp.int32))
+
+
+def fold_blocks(tables, phys_t, offs, orig_t):
+    return _fold_blocks_jit(tables, jnp.asarray(phys_t, jnp.int32),
+                            jnp.asarray(offs, jnp.int32),
+                            jnp.asarray(orig_t, jnp.int32))
+
+
+@jax.jit
+def _fold_cache_slots_jit(hot_rows, hot_ids, tables, t_sel, c_sel):
+    """Cache-slot audit: does slot (t, c) still hold EXACTLY the bytes of
+    its base row?  Compares checksums (not float ==, which would miss a
+    sign flip on 0.0 and trip on NaN) of the cached copy vs the resident
+    base row, both gathered on device.  Returns (ids, ok): the slot's
+    row id (−1 = unmapped, vacuously ok) and the bitwise-match flag."""
+    ids = hot_ids[t_sel, c_sel]                          # (n,) int32
+    r = tables.shape[1]
+    cached = hot_rows[t_sel, c_sel]                      # (n, s)
+    base = tables[t_sel, jnp.clip(ids, 0, r - 1)]        # (n, s)
+    zero = jnp.int32(0)
+    ok = (row_checksum_device(cached, zero, zero)
+          == row_checksum_device(base, zero, zero)) | (ids < 0)
+    return ids, ok
+
+
+def fold_cache_slots(hot_rows, hot_ids, tables, t_sel, c_sel):
+    return _fold_cache_slots_jit(hot_rows, hot_ids, tables,
+                                 jnp.asarray(t_sel, jnp.int32),
+                                 jnp.asarray(c_sel, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# IntegrityLedger: host-side expected block checksums
+# ---------------------------------------------------------------------------
+
+
+def _host_block_sums(rcs: np.ndarray, block_rows: int) -> np.ndarray:
+    """(R,) per-row uint32 checksums → (nb,) blocked sums mod 2^32."""
+    r = rcs.shape[0]
+    nb = -(-r // block_rows)
+    pad = np.zeros(nb * block_rows, np.uint64)
+    pad[:r] = rcs.astype(np.uint64)
+    return (pad.reshape(nb, block_rows).sum(axis=1)
+            & _CS_MASK).astype(np.uint32)
+
+
+@dataclasses.dataclass
+class IntegrityLedger:
+    """Expected block checksums for the whole (padded) table stack, in
+    ORIGINAL table space.  ``block_cs[t, b]`` covers original rows
+    ``[b*block_rows, min((b+1)*block_rows, R))`` of original table t.
+    Established once at load; ``note_update`` re-folds a single row's
+    contribution in O(1) when an authorized write (freshness apply,
+    scrub repair) lands.  Reshard cutovers permute PHYSICAL slots only,
+    so the ledger — like the mirror — never moves."""
+    block_rows: int
+    n_rows: int                      # R (padded per-table row count)
+    block_cs: np.ndarray             # (t_pad, nb) uint32
+
+    @classmethod
+    def from_tables(cls, tables: np.ndarray, block_rows: int
+                    ) -> "IntegrityLedger":
+        """``tables``: (t_pad, R, s) host array in ORIGINAL order."""
+        t_pad, r = tables.shape[:2]
+        gids = (np.arange(t_pad)[:, None] * r + np.arange(r)[None, :])
+        rcs = row_checksum(tables, gids, 0)              # (t_pad, R)
+        cs = np.stack([_host_block_sums(rcs[t], block_rows)
+                       for t in range(t_pad)])
+        return cls(block_rows=block_rows, n_rows=r, block_cs=cs)
+
+    @property
+    def n_blocks(self) -> int:
+        return self.block_cs.shape[1]
+
+    def block_of(self, gid: int):
+        t, row = divmod(int(gid), self.n_rows)
+        return t, row // self.block_rows
+
+    def note_update(self, gid: int, old_vec, new_vec) -> None:
+        """O(1) incremental refold when row ``gid`` is overwritten."""
+        t, b = self.block_of(gid)
+        old_cs = int(row_checksum(np.asarray(old_vec), gid, 0))
+        new_cs = int(row_checksum(np.asarray(new_vec), gid, 0))
+        cur = int(self.block_cs[t, b])
+        self.block_cs[t, b] = np.uint32((cur - old_cs + new_cs) % _CS_MOD)
+
+    def expected(self, orig_t, blk) -> np.ndarray:
+        return self.block_cs[np.asarray(orig_t), np.asarray(blk)]
+
+    def refit(self, tables: np.ndarray) -> "IntegrityLedger":
+        """Rebuild for a new geometry (post-evict t_pad change)."""
+        return IntegrityLedger.from_tables(tables, self.block_rows)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end wire verification (the "wcs" field)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnums=(1, 2))
+def wire_fold(buf, skip_off: int, skip_len: int):
+    """Checksum a fused wire slot's bytes with the [skip_off,
+    skip_off+skip_len) range ZERO-weighted — that is where the stamp
+    itself lives, so the fold is independent of it.  ``buf``: (..., nb)
+    uint8; returns (...,) uint32.  Same weight schedule as
+    ``row_checksum`` (no identity mixing: the slot position already
+    fixes src/dst)."""
+    pos = jnp.arange(buf.shape[-1], dtype=jnp.uint32)
+    w = (pos % 251) + 1
+    w = jnp.where((pos >= skip_off) & (pos < skip_off + skip_len),
+                  jnp.uint32(0), w)
+    return jnp.sum(buf.astype(jnp.uint32) * w, axis=-1, dtype=jnp.uint32)
+
+
+def wire_stamp(buf, layout):
+    """Stamp every destination row of a fused (P, slot_bytes) buffer with
+    its segment checksum, written into the layout's ``wcs`` field."""
+    f = layout.field("wcs")
+    cs = wire_fold(buf, f.offset, 4)                     # (P,)
+    csb = jax.lax.bitcast_convert_type(cs, jnp.uint8)    # (P, 4)
+    return buf.at[:, f.offset:f.offset + 4].set(csb)
+
+
+def wire_verify(buf, layout):
+    """Recompute a received slot's fold and compare to the stamped
+    ``wcs``.  ``buf``: (..., slot_bytes); returns (...,) bool."""
+    f = layout.field("wcs")
+    got = wire_fold(buf, f.offset, 4)
+    want = jax.lax.bitcast_convert_type(
+        buf[..., f.offset:f.offset + 4], jnp.uint32)
+    return got == want.reshape(got.shape)

@@ -28,6 +28,7 @@ from repro import compat
 from repro.configs.base import DLRMConfig
 from repro.core import alltoallv as a2a_mod
 from repro.core import bls as bls_mod
+from repro.core import integrity as integ_mod
 from repro.models import layers as L
 from repro.serving import hot_cache as hc_mod
 from repro.sharding import partition
@@ -332,6 +333,10 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                         plan=None,
                         deltas=None,
                         migration=None,
+                        repair=None,
+                        quarantine=None,
+                        wire_flip=None,
+                        wire_check: bool = False,
                         table_inv=None,
                         degraded_members: tuple = (),
                         degraded_fallback: str = "zero",
@@ -430,6 +435,40 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
     extra collectives, and the forward never mutates tables — the
     executor banks, verifies and commits on the host between flushes.
 
+    ``repair`` (DESIGN.md §12) threads integrity-repair rows through the
+    same fused exchange as a THIRD rider field, ``"xrep"``: a dict of
+    ``(P, microbatches, ...)`` leaves — ``rvec (…, rcap, s)`` known-good
+    rows from the host-side authoritative mirror, ``rgid (…, rcap)``
+    flat ORIGINAL table·R+row ids, ``rcs`` mirror-stamped checksums,
+    ``rcnt`` per-slice counts — built by
+    ``runtime.scrub.Scrubber.next_wire``.  Each member's stage_a repacks
+    its slice by the quarantined row's OWNER and fuses it into the
+    ``"xrep"`` sub-blob; stage_b returns the harvested per-source
+    buckets as an extra staged output.  Zero extra collectives, and the
+    forward never mutates tables — the scrubber verifies and commits on
+    the host between flushes.
+
+    ``quarantine`` is a replicated ``(Q,)`` int32 array of PHYSICAL flat
+    gids (slot·R + row, −1 padding) currently under quarantine: their
+    bag contributions are mask-excluded at the top of the shard — the
+    zero-fallback degraded serving of PR 6, at row rather than member
+    granularity — on BOTH the cache-hit and the miss-residual path, so
+    a corrupt row is never served while its repair is in flight.  Rides
+    the jitted step as a dynamic arg: quarantining/repairing rows never
+    retraces.
+
+    ``wire_check=True`` adds the ``"wcs"`` segment checksum to the fused
+    layout: stage_a stamps every destination slot after fusing, stage_b
+    verifies each received segment (mono: per source row; ring: per
+    chunk) and ZEROES a corrupt source's entire embedding contribution
+    for that microbatch (its riders are independently checksummed and
+    count-clamped host-side), returning a per-source corrupt-flag leaf
+    the engine escalates through the confirm → degrade → evict ladder.
+    ``wire_flip`` is the matching fault hook: a replicated ``(P, P)``
+    uint8 array; entry (src, dst) != 0 makes member src XOR one payload
+    byte of its slot to dst after stamping — XOR with 0 is the identity,
+    so the clean path stays bit-exact with the hook armed.
+
     ``table_inv`` activates a non-identity table PLACEMENT (DESIGN.md
     §11): a replicated ``(T_pad,)`` int32 array mapping original table
     id -> physical slot (column of idx/mask, stack position of the
@@ -452,6 +491,12 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
         raise ValueError(
             "forward_distributed: migration rows ride the model-axis "
             "exchange — install a model mesh via partition.axis_rules")
+    if (repair is not None or wire_check) and (
+            mesh is None or "model" not in mesh.axis_names):
+        raise ValueError(
+            "forward_distributed: repair rows / wire verification ride "
+            "the model-axis exchange — install a model mesh via "
+            "partition.axis_rules")
     if mesh is None or "model" not in mesh.axis_names:
         if cache is not None or (wire_dtype or cfg.wire_dtype) != "float32":
             import warnings
@@ -505,6 +550,12 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
     mlayout = a2a_mod.mig_wire_layout(
         n_shards, mcap, params["tables"].shape[2], emb_dtype) \
         if has_mig else None
+    has_rep = repair is not None
+    rcap = int(repair["rgid"].shape[-1]) if has_rep else 0
+    rlayout = a2a_mod.rep_wire_layout(
+        n_shards, rcap, params["tables"].shape[2], emb_dtype) \
+        if has_rep else None
+    has_quar = quarantine is not None
     has_inv = table_inv is not None
     # the ONE static layout both exchange halves (and the BLS ring slot)
     # agree on: the whole payload as a (P, slot_bytes) uint8 buffer —
@@ -515,7 +566,13 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
         t_loc=t_loc_g, embed_dim=params["tables"].shape[2],
         wire_dtype=wire, emb_dtype=emb_dtype,
         delta_bytes=dlayout.slot_bytes if has_delta else 0,
-        mig_bytes=mlayout.slot_bytes if has_mig else 0)
+        mig_bytes=mlayout.slot_bytes if has_mig else 0,
+        rep_bytes=rlayout.slot_bytes if has_rep else 0,
+        wire_check=wire_check)
+    if wire_check and wire_flip is None:
+        # the injection hook is a dynamic arg so arming/disarming a
+        # corruption never retraces; default = all-zeros = identity
+        wire_flip = jnp.zeros((n_shards, n_shards), jnp.uint8)
     if plan is not None and use_ragged:
         raise ValueError(
             "forward_distributed: precomputed stream plans describe the "
@@ -562,7 +619,7 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
         bs = b_row // (mb * n_shards)  # rows per (microbatch, member)
         # positional unpacking of the optional extras, in append order:
         # cache (2) | fb_rows (1) | plan (1) | deltas (1) | migration (1)
-        # | table_inv (1)
+        # | repair (1) | quarantine (1) | wire_flip (1) | table_inv (1)
         ei = 0
         cache_args = ()
         if use_cache:
@@ -587,14 +644,47 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
         if has_mig:
             mig_s = jax.tree.map(lambda a: a[0], extra[ei])
             ei += 1
+        # member repair slices: strip the model-slot axis
+        rep_s = None
+        if has_rep:
+            rep_s = jax.tree.map(lambda a: a[0], extra[ei])
+            ei += 1
+        # quarantined PHYSICAL gids (replicated, −1 padding)
+        qgids_s = None
+        if has_quar:
+            qgids_s = extra[ei]
+            ei += 1
+        # wire-corruption injection matrix (replicated)
+        wflip_s = None
+        if wire_check:
+            wflip_s = extra[ei]
+            ei += 1
         # original table -> physical slot (replicated; identity when the
         # placement is trivial but migration still needs the array)
         inv_s = None
         if has_inv:
             inv_s = extra[ei]
             ei += 1
-        elif has_mig:
+        elif has_mig or has_rep:
             inv_s = jnp.arange(n_shards * t_loc, dtype=jnp.int32)
+
+        if has_quar:
+            # quarantine mask (DESIGN.md §12): exclude every index that
+            # resolves to a quarantined PHYSICAL row from its bag — the
+            # zero fallback of PR 6's degraded serving at row granularity,
+            # applied BEFORE the cache/residual split so neither the
+            # cached copy nor the resident row of a corrupt gid is ever
+            # served while its repair is in flight.  idx columns are
+            # physical slots: the full stack when the cache path
+            # replicates idx/mask, this member's t_loc block otherwise.
+            r_rows = tables.shape[1]
+            col0 = jnp.int32(0) if use_cache else m * t_loc
+            colt = col0 + jnp.arange(idx_s.shape[1], dtype=jnp.int32)
+            gid_b = (colt[None, :, None] * r_rows
+                     + idx_s.astype(jnp.int32))         # (B_row, t, hot)
+            quar = (gid_b[..., None] == qgids_s[None, None, None, :]) \
+                .any(-1)
+            mask_s = mask_s * (~quar).astype(mask_s.dtype)
 
         def local_miss(ix, mk):
             """This member's local-table (idx, residual mask) slice."""
@@ -634,19 +724,10 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                 {"dvec": bk["dvec"], "dgid": bk["dgid"], "dcs": bk["dcs"],
                  "dcnt": cnts.reshape(n_shards, 1), "dver": ver}, dlayout)
 
-        def mig_checksum(vec, gid, epoch):
-            """Device-side replica of ``runtime.freshness.row_checksum``:
-            fold the row's exact wire bytes (bitcast, little-endian — the
-            same bytes fuse_wire ships) with position weights, mix in gid
-            and epoch, wrap in uint32.  uint32 wraparound arithmetic is
-            congruent mod 2^32 to the host's uint64-then-mask, so the
-            receiving host verifies with the numpy original."""
-            b = jax.lax.bitcast_convert_type(vec, jnp.uint8)
-            b = b.reshape(vec.shape[0], -1).astype(jnp.uint32)
-            w = (jnp.arange(b.shape[1], dtype=jnp.uint32) % 251) + 1
-            s = jnp.sum(b * w[None, :], axis=1, dtype=jnp.uint32)
-            return (s + jnp.uint32(2654435761) * gid.astype(jnp.uint32)
-                    + jnp.uint32(2654435789) * epoch.astype(jnp.uint32))
+        # device-side stamp: the shared fold from core/integrity (uint32
+        # wraparound, congruent mod 2^32 to the host's uint64-then-mask,
+        # so the receiving host verifies with the numpy original)
+        mig_checksum = integ_mod.row_checksum_device
 
         def pack_mig(mx):
             """One (member, microbatch) migration slice -> the
@@ -680,6 +761,29 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                 {"mvec": bk["mvec"], "mgid": bk["mgid"], "mcs": bk["mcs"],
                  "mcnt": cnts.reshape(n_shards, 1), "mepoch": ep}, mlayout)
 
+        def pack_rep(rx):
+            """One (member, microbatch) repair slice -> the
+            per-destination "xrep" sub-blob: route each valid mirror row
+            to the OWNER of its quarantined physical slot (same
+            original-gid → ``inv`` → owner routing as the delta path),
+            repack into rcap-cap buckets (a slice holds <= rcap rows, so
+            drops are structurally impossible) and fuse per the
+            sub-layout.  Checksums ride verbatim — stamped by the host
+            mirror, verified by the receiving HOST before apply."""
+            r_rows = tables.shape[1]
+            n_valid = rx["rcnt"].reshape(())
+            valid = jnp.arange(rcap, dtype=jnp.int32) < n_valid
+            gid = rx["rgid"].astype(jnp.int32)
+            phys = gid // r_rows if inv_s is None \
+                else jnp.take(inv_s, gid // r_rows, mode="clip")
+            dest = jnp.where(valid, phys // t_loc, -1)
+            bk, cnts, _ = a2a_mod.pack_ragged_tree(
+                {"rvec": rx["rvec"].astype(emb_dtype), "rgid": gid,
+                 "rcs": rx["rcs"]}, dest, n_shards, rcap)
+            return a2a_mod.fuse_wire(
+                {"rvec": bk["rvec"], "rgid": bk["rgid"], "rcs": bk["rcs"],
+                 "rcnt": cnts.reshape(n_shards, 1)}, rlayout)
+
         def stage_a(x):
             j, d, ix, mk = x[:4]
             xi = 4
@@ -691,7 +795,11 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
             if has_delta:
                 delta_j = x[xi]
                 xi += 1
-            mig_j = x[xi] if has_mig else None
+            mig_j = None
+            if has_mig:
+                mig_j = x[xi]
+                xi += 1
+            rep_j = x[xi] if has_rep else None
             ix_loc, miss_mk = local_miss(ix, mk)
             if use_cache:
                 hot_rows, slot_of = cache_args
@@ -732,9 +840,23 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                 payload["xdelta"] = pack_delta(delta_j)
             if has_mig:
                 payload["xmig"] = pack_mig(mig_j)
+            if has_rep:
+                payload["xrep"] = pack_rep(rep_j)
+            if wire_check:
+                payload["wcs"] = jnp.zeros((n_shards, 1), jnp.uint32)
             # one flat uint8 leaf per destination: the whole exchange is
             # one collective, and the BLS ring buffers a single array
             buf = a2a_mod.fuse_wire(payload, layout)
+            if wire_check:
+                # stamp each destination slot's segment checksum, THEN
+                # apply the injected corruption (XOR one payload byte
+                # outside the wcs field; XOR 0 is the identity, so the
+                # clean path is bit-exact with the hook armed) — the
+                # receiver's verify must catch the flip
+                buf = integ_mod.wire_stamp(buf, layout)
+                fb = next(f.offset for f in layout.fields
+                          if f.name != "wcs")
+                buf = buf.at[:, fb].set(buf[:, fb] ^ wflip_s[m])
             # member m's dense rows of microbatch j (matches a2a delivery)
             dm = jax.lax.dynamic_slice_in_dim(d, m * bs, bs, axis=0)
             z0 = apply_mlp(bot, dm)                   # (bs, s)
@@ -751,13 +873,22 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
             # scales, ids and counts together
             return a2a_mod.alltoallv_fused(buf, "model")
 
-        def chunk_slice(chunk, hits, src):
+        def chunk_slice(chunk, hits, src, wok=None):
             """One source's contribution as its dense (bs, t_loc, s)
             table slice: defuse + codec-decode (+ ragged scatter) + that
             source's pooled-hit correction.  Sources own disjoint table
             ranges, so per-peer consumption composes bit-identically to
-            the monolithic defuse."""
+            the monolithic defuse.  ``wok`` (wire_check only) is this
+            chunk's segment-verify flag: a corrupt chunk's contribution
+            is zeroed — jnp.where, not a multiply, because corrupt bytes
+            may decode to NaN and NaN·0 is NaN."""
             f = a2a_mod.defuse_wire(chunk, layout)
+            if use_ragged and wok is not None:
+                # containment: a corrupt chunk's slot ids are garbage —
+                # zeroing its count keeps the scatter from landing rows
+                # anywhere at all
+                f = dict(f)
+                f["counts"] = f["counts"] * wok.astype(f["counts"].dtype)
             if use_ragged:
                 # the chunk is a one-source exchange: with n_dest=1 the
                 # shared unpack's flat slot reduces to exactly the
@@ -773,7 +904,11 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                 # constant member vector, not a Python membership test
                 sl = jnp.where(jnp.asarray(deg_mask, jnp.bool_)[src],
                                jnp.zeros_like(sl), sl)
+            if wok is not None:
+                sl = jnp.where(wok, sl, jnp.zeros_like(sl))
             if use_cache:
+                # hits never rode the wire: they land even for a
+                # rejected segment (same semantics as degraded serving)
                 sl = sl + jax.lax.dynamic_slice_in_dim(
                     hits, src * t_loc, t_loc, axis=1)
             return sl
@@ -791,9 +926,16 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
             return a2a_mod.defuse_wire(
                 a2a_mod.defuse_wire(chunk, layout)["xmig"], mlayout)
 
+        def rep_of(chunk):
+            """The "xrep" sub-blob of one source's chunk, defused into
+            its harvested leaves (rcap repair rows for quarantined rows
+            THIS member owns)."""
+            return a2a_mod.defuse_wire(
+                a2a_mod.defuse_wire(chunk, layout)["xrep"], rlayout)
+
         def stage_b(recv, side):
             z0, hits = side
-            staged = staged_m = None
+            staged = staged_m = staged_r = wbad = None
             if has_delta:
                 # per-source harvest buckets this member will hand its
                 # host: (P_src, dcap, ...) per delta sub-field
@@ -803,15 +945,27 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                 staged_m = {f.name: jnp.zeros((n_shards,) + f.shape,
                                               f.dtype)
                             for f in mlayout.fields}
+            if has_rep:
+                staged_r = {f.name: jnp.zeros((n_shards,) + f.shape,
+                                              f.dtype)
+                            for f in rlayout.fields}
+            if wire_check:
+                # per-source corrupt-segment flags, harvested by the host
+                # like the riders (NO psum: collective counts are a gate)
+                wbad = jnp.zeros((n_shards,), jnp.int32)
             if pipe == "ring":
                 # chunked ppermute butterfly: round r+1's shift is in
                 # flight while round r's chunk is defused, decoded,
                 # scattered and hit-corrected into its table slice
                 def consume(out, src, chunk):
-                    emb, stg, stg_m = out
+                    emb, stg, stg_m, stg_r, wb = out
+                    wok = None
+                    if wire_check:
+                        wok = integ_mod.wire_verify(chunk, layout)
+                        wb = wb.at[src].set((~wok).astype(jnp.int32))
                     emb = jax.lax.dynamic_update_slice_in_dim(
-                        emb, chunk_slice(chunk, hits, src), src * t_loc,
-                        axis=1)
+                        emb, chunk_slice(chunk, hits, src, wok),
+                        src * t_loc, axis=1)
                     if has_delta:
                         dd = delta_of(chunk)
                         stg = {k: stg[k].at[src].set(dd[k]) for k in stg}
@@ -819,20 +973,39 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                         mm = mig_of(chunk)
                         stg_m = {k: stg_m[k].at[src].set(mm[k])
                                  for k in stg_m}
-                    return emb, stg, stg_m
+                    if has_rep:
+                        rr = rep_of(chunk)
+                        stg_r = {k: stg_r[k].at[src].set(rr[k])
+                                 for k in stg_r}
+                    return emb, stg, stg_m, stg_r, wb
 
                 init = jnp.zeros((bs, n_shards * t_loc,
                                   layout.field("q").shape[-1]), emb_dtype)
-                emb_all, staged, staged_m = a2a_mod.ring_exchange(
-                    recv, "model", n_shards, consume,
-                    (init, staged, staged_m))
+                emb_all, staged, staged_m, staged_r, wbad = \
+                    a2a_mod.ring_exchange(
+                        recv, "model", n_shards, consume,
+                        (init, staged, staged_m, staged_r, wbad))
             else:
                 f = a2a_mod.defuse_wire(recv, layout)
+                wok_v = None
+                if wire_check:
+                    wok_v = integ_mod.wire_verify(recv, layout)  # (P,)
+                    wbad = (~wok_v).astype(jnp.int32)
+                    if use_ragged:
+                        # containment: corrupt sources' slot ids are
+                        # garbage and the mono scatter spans ALL sources'
+                        # slots — zero their counts so nothing lands
+                        f = dict(f)
+                        f["counts"] = (f["counts"]
+                                       * wok_v.astype(f["counts"].dtype)
+                                       [:, None])
                 if has_delta:
                     # (P_src, sub_slot_bytes) -> per-source harvest leaves
                     staged = a2a_mod.defuse_wire(f["xdelta"], dlayout)
                 if has_mig:
                     staged_m = a2a_mod.defuse_wire(f["xmig"], mlayout)
+                if has_rep:
+                    staged_r = a2a_mod.defuse_wire(f["xrep"], rlayout)
                 if use_ragged:
                     emb_all = ragged_exchange_unpack(
                         f, t_loc=t_loc, bs=bs, out_dtype=emb_dtype)
@@ -847,6 +1020,12 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
                     keep = 1 - jnp.asarray(deg_mask, emb_all.dtype)
                     emb_all = emb_all * jnp.repeat(keep, t_loc)[None, :,
                                                                 None]
+                if wire_check:
+                    # zero corrupt sources' columns (jnp.where: corrupt
+                    # bytes may decode to NaN)
+                    keep_w = jnp.repeat(wok_v, t_loc)[None, :, None]
+                    emb_all = jnp.where(keep_w, emb_all,
+                                        jnp.zeros_like(emb_all))
                 if use_cache:
                     emb_all = emb_all + hits          # pooled-hit correction
             t = cfg.n_tables
@@ -859,7 +1038,8 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
             inter = dot_interaction(z)
             top_in = jnp.concatenate([z0, inter.astype(z0.dtype)], axis=-1)
             logits = apply_mlp(top, top_in)[..., 0]
-            stg = (staged,) * has_delta + (staged_m,) * has_mig
+            stg = ((staged,) * has_delta + (staged_m,) * has_mig
+                   + (staged_r,) * has_rep + (wbad,) * wire_check)
             return (logits,) + stg if stg else logits
 
         def split(a):  # (B_row, ...) -> (mb, B_row/mb, ...)
@@ -898,7 +1078,10 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
             xs = xs + (deltas_s,)      # leaves (mb, dcap, ...)
         if has_mig:
             xs = xs + (mig_s,)         # leaves (mb, mcap, ...)
-        n_riders = int(has_delta) + int(has_mig)
+        if has_rep:
+            xs = xs + (rep_s,)         # leaves (mb, rcap, ...)
+        n_riders = (int(has_delta) + int(has_mig) + int(has_rep)
+                    + int(wire_check))
         if bound == 0 and mb == 1:
             payload, side = stage_a(jax.tree.map(lambda a: a[0], xs))
             res = stage_b(collective(payload), side)
@@ -945,6 +1128,16 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
         # migration slices likewise: member m ships the rows IT owns
         in_specs += [jax.tree.map(lambda _: P("model"), migration)]
         args += [migration]
+    if has_rep:
+        # repair slices likewise: any member may carry mirror rows
+        in_specs += [jax.tree.map(lambda _: P("model"), repair)]
+        args += [repair]
+    if has_quar:
+        in_specs += [P()]              # quarantine gids replicated
+        args += [jnp.asarray(quarantine, jnp.int32)]
+    if wire_check:
+        in_specs += [P()]              # corruption matrix replicated
+        args += [jnp.asarray(wire_flip, jnp.uint8)]
     if has_inv:
         in_specs += [P()]              # placement map replicated
         args += [jnp.asarray(table_inv, jnp.int32)]
@@ -957,12 +1150,21 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
     if has_mig:
         out_specs = out_specs + (
             {f.name: P("model") for f in mlayout.fields},)
+    if has_rep:
+        out_specs = out_specs + (
+            {f.name: P("model") for f in rlayout.fields},)
+    if wire_check:
+        # per-destination corrupt-source flags: (P_dst · P_src,) global,
+        # reshaped host-side
+        out_specs = out_specs + (P("model"),)
     out, *rest_out = compat.shard_map(
         shard_fn, mesh=mesh,
         in_specs=tuple(in_specs),
         out_specs=out_specs,
         check_vma=False,
     )(*args)
+    wbad_out = rest_out.pop() if wire_check else None
+    rep_out = rest_out.pop() if has_rep else None
     mig_out = rest_out.pop() if has_mig else None
     staged_out = rest_out.pop() if has_delta else None
     diag_out = rest_out
@@ -983,6 +1185,10 @@ def forward_distributed(params, cfg: DLRMConfig, dense, idx, mask, *,
         ret = ret + (staged_out,)
     if has_mig:
         ret = ret + (mig_out,)
+    if has_rep:
+        ret = ret + (rep_out,)
+    if wire_check:
+        ret = ret + (wbad_out,)
     return ret if len(ret) > 1 else logits
 
 

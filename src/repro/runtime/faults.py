@@ -74,6 +74,13 @@ class FaultPlan:
     # hot-table set mid-stream (the load drift a rebalance answers)
     mig_crash: tuple = ()                   # ((member, stage, step),)
     skew_shift: tuple = ()                  # (at_step, ...)
+    # integrity-side faults (DESIGN.md §12): single-bit flips in device-
+    # resident state (a table row or its hot-cache copy) and serving-
+    # payload corruption on a directed wire link — the silent-data-
+    # corruption surface the scrub/quarantine/repair loop exists for
+    bitflip: tuple = ()                     # ((member, table, row, bit,
+    #                                          step, sticky, target),)
+    wire_corrupt: tuple = ()                # ((src, dst, step),)
     seed: int = 0
 
     @classmethod
@@ -207,6 +214,41 @@ class FaultPlan:
         return dataclasses.replace(
             self, mig_crash=self.mig_crash
             + ((int(member), str(stage), int(at_step)),))
+
+    def with_bitflip(self, member: int, table: int, row: int, bit: int,
+                     when: int, sticky: bool = True, *,
+                     target: str = "table") -> "FaultPlan":
+        """Flip ONE bit of a device-resident embedding row — the silent
+        corruption the background scrubber must detect, quarantine, and
+        repair (DESIGN.md §12).  ``table``/``row`` are ORIGINAL-space;
+        ``bit`` indexes into the row's wire bytes; ``target`` picks the
+        resident table row (``"table"``) or its hot-cache copy
+        (``"cache"``).  ``sticky`` triggers at the first flush >= when
+        (the default — a flip does not miss its window because a replay
+        renumbered the schedule); non-sticky fires only at exactly
+        ``when``.  Each entry fires ONCE."""
+        if target not in ("table", "cache"):
+            raise ValueError(
+                f"bitflip target must be 'table' or 'cache', got {target!r}")
+        if bit < 0:
+            raise ValueError(f"bit must be >= 0, got {bit}")
+        return dataclasses.replace(
+            self, bitflip=self.bitflip
+            + ((int(member), int(table), int(row), int(bit), int(when),
+                bool(sticky), str(target)),))
+
+    def with_wire_corruption(self, src: int, dst: int, when: int
+                             ) -> "FaultPlan":
+        """Corrupt the fused serving payload on the directed link
+        ``src → dst`` at flush ``when``: one byte of the slot's first
+        non-checksum field XORs AFTER the source stamped its segment
+        checksum, so the destination's end-to-end verify must reject the
+        segment (zeroing its contribution) and the riders re-ship.
+        Repeated entries on the same link model a persistently corrupt
+        path — the case that escalates confirm → degrade → evict."""
+        return dataclasses.replace(
+            self, wire_corrupt=self.wire_corrupt
+            + ((int(src), int(dst), int(when)),))
 
     def with_skew_shift(self, at_step: int) -> "FaultPlan":
         """A traffic-skew phase shift: from ``at_step`` on, the drifting
@@ -438,6 +480,33 @@ class FaultInjector:
         for m, n in self.plan.delta_corrupt_at(step):
             if m in self.live:
                 out.append((self.live.index(m), n))
+        return out
+
+    def bitflips(self, step: int) -> list:
+        """[(current_pos, table, row, bit, target)] bit flips due at
+        flush ``step``.  Fire-once per plan entry (a sticky flip lands at
+        the first flush >= its step and never again — re-flipping would
+        UN-corrupt); crashed members' entries drop out with them."""
+        out = []
+        for i, (m, t, r, b, w, sticky, tgt) in \
+                enumerate(self.plan.bitflip):
+            key = ("bf", i)
+            if key in self.fired or m not in self.live:
+                continue
+            due = step >= w if sticky else step == w
+            if due:
+                self.fired.add(key)
+                out.append((self.live.index(m), t, r, b, tgt))
+        return out
+
+    def wire_corruptions(self, step: int) -> set:
+        """{(src_pos, dst_pos)} directed links whose serving payload is
+        corrupted at flush ``step`` (plan ranks mapped to CURRENT mesh
+        positions; links touching crashed members drop out)."""
+        out = set()
+        for s, d, w in self.plan.wire_corrupt:
+            if w == step and s in self.live and d in self.live:
+                out.add((self.live.index(s), self.live.index(d)))
         return out
 
     def stalled_positions(self, step: int) -> set:

@@ -67,31 +67,12 @@ def _scatter_rows(tables, tab, row, upd):
     note in ``FreshnessManager.apply``)."""
     return tables.at[tab, row].set(upd.astype(tables.dtype), mode="drop")
 
-_CS_GID = np.uint64(2654435761)      # Knuth multiplicative constants: mix
-_CS_VER = np.uint64(2654435789)      # identity into the byte sum
-_CS_MASK = np.uint64(0xFFFFFFFF)
-
-
-def row_checksum(vec, gid, ver):
-    """Per-row uint32 checksum over the row's WIRE BYTES plus its identity
-    (gid, version).
-
-    ``vec``: (..., s) array of any fixed-width dtype; ``gid``/``ver``
-    broadcast against the leading shape.  The byte sum is position-
-    weighted (weight (i mod 251) + 1, all nonzero), so any single-byte
-    flip changes the sum by a nonzero amount < 2^16 — detected exactly
-    under the 2^32 mask — and byte swaps change it too.  Identity mixing
-    means a row delivered to the wrong (gid, version) slot also rejects.
-    Pure numpy: both the source stamp and the receiver verify run on
-    host, over the exact bytes the bitcast wire round-trips."""
-    v = np.ascontiguousarray(vec)
-    u8 = v.view(np.uint8).reshape(v.shape[:-1] + (-1,)).astype(np.uint64)
-    w = (np.arange(u8.shape[-1], dtype=np.uint64) % np.uint64(251)
-         + np.uint64(1))
-    s = (u8 * w).sum(axis=-1)
-    s = s + _CS_GID * np.asarray(gid, np.uint64) \
-        + _CS_VER * np.asarray(ver, np.uint64)
-    return (s & _CS_MASK).astype(np.uint32)
+# the checksum fold moved to core/integrity.py (DESIGN.md §12) so the
+# delta (dcs), migration (mcs) and scrub/repair paths share ONE pinned
+# implementation; re-exported here because the wire stamp predates the
+# move and downstream callers import it from this module
+from repro.core.integrity import (_CS_GID, _CS_MASK, _CS_VER,  # noqa: F401
+                                  row_checksum)
 
 
 @dataclasses.dataclass
@@ -330,8 +311,11 @@ class FreshnessManager:
             for m in range(p_dst):
                 for j in range(mb):
                     for q in range(p_src):
-                        c = int(dd["dcnt"][m, j, q, 0])
-                        if c == 0:
+                        # clamp: a wire-corrupted slice can carry a
+                        # garbage count; never index past the cap
+                        c = min(int(dd["dcnt"][m, j, q, 0]),
+                                dd["dgid"].shape[3])
+                        if c <= 0:
                             continue
                         v = int(dd["dver"][m, j, q, 0])
                         rem = self._remaining.get(v, set())
@@ -446,6 +430,15 @@ class FreshnessManager:
             dt = np.dtype(prev_tables.dtype)
             for k, g in enumerate(gids):
                 resh.note_applied(int(g), vecs[k], dt)
+        # scrub interop: the mirror and the block ledger must track every
+        # AUTHORIZED write, or the next audit of these rows would flag a
+        # legitimate delta as corruption (and a repair could resurrect
+        # the pre-delta bytes)
+        scrub = getattr(engine, "scrub", None)
+        if scrub is not None:
+            dt = np.dtype(prev_tables.dtype)
+            for k, g in enumerate(gids):
+                scrub.note_applied(int(g), vecs[k], dt)
         self._apply_buf = hold
         for v, g in ready:
             rem = self._remaining.get(v)

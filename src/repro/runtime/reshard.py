@@ -41,7 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.runtime.freshness import row_checksum
+from repro.core.integrity import row_checksum
 
 
 @jax.jit
@@ -212,8 +212,11 @@ class ReshardExecutor:
             for m in range(p_dst):
                 for j in range(mb):
                     for q in range(p_src):
-                        c = int(dd["mcnt"][m, j, q, 0])
-                        if c == 0:
+                        # clamp: a wire-corrupted slice can carry a
+                        # garbage count; never index past the cap
+                        c = min(int(dd["mcnt"][m, j, q, 0]),
+                                dd["mgid"].shape[3])
+                        if c <= 0:
                             continue
                         ep = int(dd["mepoch"][m, j, q, 0])
                         if ep != self.epoch:

@@ -1,0 +1,580 @@
+"""Silent-data-corruption self-healing: background integrity scrubbing,
+quarantine, and repair over the fused BLS wire (DESIGN.md §12).
+
+An inference pod serves from embedding tables that nothing re-reads end
+to end: a bit flipped by faulty HBM, a DMA error, or a kernel bug is
+served FOREVER — silently — because serving never re-derives what it
+loaded.  This module closes that loop with three cooperating parts:
+
+  * A **background scrubber** audits a bounded ``budget`` of row blocks
+    per flush against :class:`~repro.core.integrity.IntegrityLedger` —
+    expected per-(table, row-block) checksums established at load and
+    re-folded in O(1) on every authorized write (freshness apply, scrub
+    repair).  The clean path is one vectorized device fold fetching
+    ``(budget,)`` uint32 words, never rows; only a mismatching block
+    pays a per-row bisect.  The ledger lives in ORIGINAL table space, so
+    a reshard cutover is a ledger no-op: the audit translates original →
+    physical through the live placement at gather time.
+  * **Quarantine**: a corrupt row's gid joins a bounded replicated
+    vector that rides the jitted step as a dynamic argument (no
+    retrace); the forward pass masks the row out and affected bags take
+    the degraded zero fallback — approximate, never poisoned.
+  * **Repair**: the host-side authoritative mirror re-ships corrupt
+    rows as a third rider ("xrep") on the fused single-buffer exchange
+    — zero extra collectives, same deferred-harvest discipline as the
+    delta and migration riders (ship → bank unread → verify → apply
+    atomically between flushes).  A repair row is verified against the
+    CURRENT mirror at bank time AND at apply time, so a repair can never
+    resurrect a value a fresher delta has since overwritten.
+
+With ``mirror=False`` the scrubber still detects at row granularity (a
+per-row checksum shadow costs 4 bytes/row, not a full row copy) and
+still quarantines, but it cannot repair: quarantined rows serve the
+degraded fallback until an online delta happens to overwrite them.
+That honesty gap is deliberate — repair requires an authoritative byte
+source, and DESIGN.md §12 spells out the trade.
+
+The engine separately verifies the serving payload itself: every fused
+wire slot carries a per-destination segment checksum ("wcs", stamped
+after fuse with the stamp's own bytes zero-weighted), verified at
+consume in both the mono and ring paths.  A rejected segment's
+embedding contribution is zeroed (and its ragged counts sanitized, so
+garbage slot ids cannot scatter cross-source), the riders re-ship next
+flush, and a persistently corrupt source escalates through the
+straggler ladder (confirm → degrade → evict) in
+``DLRMEngine._note_wire``.  No request is ever lost to a reject.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import integrity as integ
+from repro.core.integrity import row_checksum
+from repro.runtime.freshness import _scatter_rows
+from repro.serving import hot_cache as hc_mod
+
+
+class Scrubber:
+    """Host half of the scrub/quarantine/repair subsystem.
+
+    ``budget``: row BLOCKS audited per flush (plus the same number of
+    hot-cache slots); ``block_rows`` the ledger's block granularity;
+    ``slice_cap`` the repair sub-wire's per-slice row capacity;
+    ``quarantine_cap`` the quarantine vector's static length (overflow
+    is a loud error — a pod corrupting faster than it repairs is not a
+    pod to keep serving quietly); ``mirror`` keeps the full host byte
+    mirror (repair enabled) vs only the checksum shadow (detect-only).
+
+    Repair lifecycle of one row, mirroring ``FreshnessManager``:
+    ``_repairq`` (quarantined, waiting for wire room) → ``_inflight``
+    (on the wire this flush) → ``_banked``/``_held`` (harvested,
+    unverified — the staged device leaves are NOT read until the next
+    flush is dispatched) → ``_apply_buf`` (verified == current mirror)
+    → committed (scattered + cache-refreshed + unquarantined between
+    flushes).  ``on_evict`` collapses every un-committed state back to
+    ``_repairq``."""
+
+    def __init__(self, engine, *, budget: int, block_rows: int = 32,
+                 slice_cap: int = 8, quarantine_cap: int = 64,
+                 mirror: bool = True):
+        if budget < 1:
+            raise ValueError(f"scrub budget must be >= 1, got {budget}")
+        if block_rows < 1:
+            raise ValueError(
+                f"scrub block_rows must be >= 1, got {block_rows}")
+        if slice_cap < 1:
+            raise ValueError(f"rep_slice_cap must be >= 1, got {slice_cap}")
+        if quarantine_cap < 1:
+            raise ValueError(
+                f"quarantine_cap must be >= 1, got {quarantine_cap}")
+        self.budget = int(budget)
+        self.block_rows = int(block_rows)
+        self.slice_cap = int(slice_cap)
+        self.quarantine_cap = int(quarantine_cap)
+        # snapshot the loaded tables in ORIGINAL order — at construction
+        # the engine is on the identity boot layout, but translate
+        # defensively in case a placement was adopted first
+        tables = np.asarray(jax.device_get(engine.params["tables"]))
+        inv = self._inv_of(engine)
+        if inv is not None:
+            tables = tables[inv]
+        t_pad, r = tables.shape[:2]
+        gids = np.arange(t_pad)[:, None] * r + np.arange(r)[None, :]
+        self.row_cs = row_checksum(tables, gids, 0)       # (t_pad, R)
+        self.ledger = integ.IntegrityLedger(
+            block_rows=self.block_rows, n_rows=r,
+            block_cs=np.stack([
+                integ._host_block_sums(self.row_cs[t], self.block_rows)
+                for t in range(t_pad)]))
+        self.mirror = tables.copy() if mirror else None
+        self.quarantined: set = set()    # original gids masked from serving
+        self._cursor = 0                 # block-audit round-robin position
+        self._slot_cursor = 0            # cache-slot audit position
+        self._repairq: list = []         # gids waiting for wire room
+        self._inflight: list = []        # gids on the wire this flush
+        self._banked: list = []          # gids harvested, unverified
+        self._apply_buf: list = []       # [(gid, vec)] verified == mirror
+        self._held = None                # staged device leaves, unread
+        self._audit_held = None          # dispatched block fold, unread
+        self._slot_held = None           # dispatched cache fold, unread
+        # -- exact counters (mirrored into ServeStats per flush) -----------
+        self.blocks_scrubbed = 0
+        self.detections = 0              # newly corrupt rows/slots found
+        self.repaired_rows = 0
+        self.repair_rejects = 0          # failed verify (re-queued)
+        self.reships = 0                 # in-flight rows re-shipped
+        self.cache_invalidations = 0     # corrupt cached copies dropped
+
+    # -- geometry ----------------------------------------------------------
+
+    def _geometry(self, engine):
+        p, t_pad, _, _ = engine._exchange_geometry()
+        r = engine.params["tables"].shape[1]
+        return p, t_pad // p, r
+
+    @staticmethod
+    def _inv_of(engine):
+        pm = getattr(engine, "pmap", None)
+        if pm is None or pm.is_identity:
+            return None
+        return pm.inv_array()
+
+    @staticmethod
+    def _perm_of(engine):
+        pm = getattr(engine, "pmap", None)
+        if pm is None or pm.is_identity:
+            return None
+        return pm.perm_array()
+
+    # -- checksum-shadow bookkeeping ---------------------------------------
+
+    def _note_row(self, gid: int, new_cs: int) -> None:
+        """O(1) refold of the shadow + ledger for one overwritten row."""
+        r = self.ledger.n_rows
+        t, row = divmod(int(gid), r)
+        b = row // self.block_rows
+        cur = int(self.ledger.block_cs[t, b])
+        old = int(self.row_cs[t, row])
+        self.ledger.block_cs[t, b] = np.uint32(
+            (cur - old + int(new_cs)) % integ._CS_MOD)
+        self.row_cs[t, row] = np.uint32(new_cs)
+
+    def note_applied(self, gid: int, vec, dtype) -> None:
+        """An AUTHORIZED write landed on ``gid`` (freshness apply): track
+        it in the mirror and the expected checksums, or the next audit
+        would flag a legitimate delta as corruption — and a stale repair
+        could resurrect the pre-delta bytes.  A delta overwriting a
+        quarantined row IS the repair: the corruption is gone, so the
+        row unquarantines and any pending repair for it is dropped."""
+        gid = int(gid)
+        v = np.ascontiguousarray(np.asarray(vec, dtype))
+        self._note_row(gid, int(row_checksum(v, gid, 0)))
+        if self.mirror is not None:
+            r = self.ledger.n_rows
+            self.mirror[gid // r, gid % r] = v.astype(self.mirror.dtype)
+        if gid in self.quarantined:
+            self.quarantined.discard(gid)
+            self._drop_pending(gid)
+
+    def _drop_pending(self, gid: int) -> None:
+        self._repairq = [g for g in self._repairq if g != gid]
+        self._inflight = [g for g in self._inflight if g != gid]
+        self._banked = [g for g in self._banked if g != gid]
+        self._apply_buf = [(g, v) for g, v in self._apply_buf if g != gid]
+
+    # -- audit (the scrub loop's detection half) ---------------------------
+
+    def audit(self, engine, step: int) -> list:
+        """Audit ``budget`` row blocks (and as many hot-cache slots)
+        against the ledger, with a one-flush harvest defer: each call
+        HARVESTS the fold dispatched LAST flush (already materialized —
+        the device_get does not stall on device compute) and DISPATCHES
+        the next one, so the audit overlaps serving instead of adding a
+        synchronous device round trip to every flush.  Detection lag
+        grows by exactly one flush; the serving thread never waits.
+
+        Returns the list of NEWLY detected original gids — the engine
+        keys detection-lag accounting off it.  Corrupt resident rows
+        quarantine (and queue for repair when the mirror is on); a
+        corrupt CACHED copy is simply invalidated — the base row is
+        still authoritative, and the slot re-warms from it (or from its
+        eventual repair)."""
+        newly = self._harvest_blocks(engine)
+        newly.extend(self._harvest_cache(engine))
+        self._dispatch_blocks(engine)
+        self._dispatch_cache(engine)
+        return newly
+
+    def _dispatch_blocks(self, engine) -> None:
+        """Select the next ``budget`` blocks round-robin and dispatch
+        their per-row fold on device — NO device_get here.  A block
+        checksum is the sum of its row checksums, so folding rows costs
+        the same device work as folding blocks and the harvest gets row
+        granularity for free (a few KB back to host, no bisection round
+        trip)."""
+        p, t_loc, r = self._geometry(engine)
+        t_pad = t_loc * p
+        inv = self._inv_of(engine)
+        nb = self.ledger.n_blocks
+        total = t_pad * nb
+        n = min(self.budget, total)
+        ks = (self._cursor + np.arange(n)) % total
+        self._cursor = int((self._cursor + n) % total)
+        orig_t = (ks // nb).astype(np.int32)
+        blk = (ks % nb).astype(np.int32)
+        phys_t = inv[orig_t].astype(np.int32) if inv is not None else orig_t
+        offs = (blk[:, None] * self.block_rows
+                + np.arange(self.block_rows)[None, :]).astype(np.int32)
+        dev = integ.fold_rows(engine.params["tables"], phys_t, offs,
+                              orig_t)
+        # snapshot the expected row checksums AT DISPATCH: the fold
+        # samples the tables as of this flush, and legitimate writes
+        # (freshness apply, repair commit) may refold the shadow before
+        # the harvest — comparing against harvest-time state would flag
+        # every fresh delta as corruption
+        snap = np.where(offs < r,
+                        self.row_cs[orig_t[:, None], np.clip(offs, 0,
+                                                             r - 1)],
+                        np.uint32(0))
+        # quarantine membership AT DISPATCH: a row quarantined now may be
+        # repaired before the harvest — its (stale) fold still shows the
+        # corruption, and without this the harvest would re-quarantine a
+        # row that was just fixed
+        qsnap = set(self.quarantined)
+        self._audit_held = (orig_t, offs, snap, qsnap, r, dev)
+
+    def _harvest_blocks(self, engine) -> list:
+        held, self._audit_held = self._audit_held, None
+        if held is None:
+            return []
+        orig_t, offs, snap, qsnap, r_then, dev = held
+        if r_then != engine.params["tables"].shape[1]:
+            return []                    # geometry changed under the fold
+        got = np.asarray(jax.device_get(dev))        # (n, bk), no stall
+        self.blocks_scrubbed += len(orig_t)
+        newly: list = []
+        for k, ri in zip(*np.nonzero(got != snap)):
+            t0, row = int(orig_t[k]), int(offs[k, ri])
+            if row >= r_then:
+                continue                 # padding folds to 0 on device
+            if int(self.row_cs[t0, row]) != int(snap[k, ri]):
+                continue   # a legit write landed between dispatch and
+                           # harvest; the next sweep re-audits the row
+            g = t0 * r_then + row
+            if g in self.quarantined or g in qsnap:
+                continue                 # known — already masked/queued
+            self.quarantined.add(g)
+            self.detections += 1
+            newly.append(g)
+            if self.mirror is not None:
+                self._repairq.append(g)
+        return newly
+
+    def _dispatch_cache(self, engine) -> None:
+        """Select the next ``budget`` hot-cache slots round-robin and
+        dispatch their compare-fold on device — NO device_get here."""
+        cache = engine.cache
+        if cache is None or cache.cache_rows == 0 or cache.hot_ids is None:
+            return
+        t_all, c_all = cache.hot_ids.shape
+        total = t_all * c_all
+        n = min(self.budget, total)
+        ks = (self._slot_cursor + np.arange(n)) % total
+        self._slot_cursor = int((self._slot_cursor + n) % total)
+        t_sel = (ks // c_all).astype(np.int32)
+        c_sel = (ks % c_all).astype(np.int32)
+        ids, ok = integ.fold_cache_slots(
+            cache.hot_rows, cache.hot_ids, engine.params["tables"],
+            t_sel, c_sel)
+        self._slot_held = (t_sel, cache, ids, ok)
+
+    def _harvest_cache(self, engine) -> list:
+        """Harvest last flush's cache-slot fold: a cached copy whose
+        bytes drifted from its base row is dropped (one reference swap;
+        the base tables are untouched).  Every legitimate cache change
+        (refresh, invalidate, cutover permute, evict re-fit) builds a
+        NEW HotCache object, so an identity mismatch means the dispatch
+        is stale — drop it, the next sweep re-covers those slots."""
+        held, self._slot_held = self._slot_held, None
+        if held is None:
+            return []
+        t_sel, cache_then, ids, ok = held
+        cache = engine.cache
+        if cache is not cache_then:
+            return []
+        r = int(engine.params["tables"].shape[1])
+        okh = np.asarray(jax.device_get(ok))
+        bad = np.nonzero(~okh)[0]
+        if not bad.size:
+            return []
+        ids = np.asarray(jax.device_get(ids))
+        tabs, rows = t_sel[bad], ids[bad]
+        new_cache, ninv = hc_mod.invalidate(cache, tabs, rows)
+        engine.cache = new_cache
+        engine._staged_plan = None
+        self.cache_invalidations += int(ninv)
+        perm = self._perm_of(engine)
+        newly = []
+        for tb, rw in zip(tabs, rows):
+            t0 = int(perm[tb]) if perm is not None else int(tb)
+            self.detections += 1
+            newly.append(t0 * r + int(rw))
+        return newly
+
+    # -- quarantine (serving-side mask + accounting) -----------------------
+
+    def quarantine_phys(self, engine) -> np.ndarray:
+        """The (quarantine_cap,) int32 PHYSICAL flat-gid vector the step
+        masks against, −1 padded.  Overflow is a refusal, not a silent
+        truncation: an unmasked corrupt row is a poisoned answer."""
+        if len(self.quarantined) > self.quarantine_cap:
+            raise RuntimeError(
+                f"quarantine overflow: {len(self.quarantined)} corrupt rows "
+                f"exceed quarantine_cap={self.quarantine_cap} — raise the "
+                f"cap or investigate the corruption source")
+        _, _, r = self._geometry(engine)
+        inv = self._inv_of(engine)
+        q = np.full(self.quarantine_cap, -1, np.int32)
+        for i, g in enumerate(sorted(self.quarantined)):
+            tab, row = divmod(g, r)
+            phys = int(inv[tab]) if inv is not None else tab
+            q[i] = phys * r + row
+        return q
+
+    def count_quarantined_served(self, engine, idx, mask) -> int:
+        """Exact count of (sample, table) bags in this flush that touched
+        a quarantined row — bags served on the degraded zero fallback."""
+        if not self.quarantined:
+            return 0
+        _, _, r = self._geometry(engine)
+        idx = np.asarray(idx)
+        mask = np.asarray(mask)
+        perm = self._perm_of(engine)
+        if perm is not None:
+            t = perm.astype(np.int64)[None, :, None]
+        else:
+            t = np.arange(idx.shape[1], dtype=np.int64)[None, :, None]
+        gids_b = t * r + idx.astype(np.int64)
+        pend = np.fromiter(self.quarantined, np.int64,
+                           len(self.quarantined))
+        hit = np.isin(gids_b, pend) & (mask > 0)
+        return int(hit.any(axis=-1).sum())
+
+    # -- ship (mirror -> wire) ---------------------------------------------
+
+    def next_wire(self, engine, step: int) -> dict:
+        """Build this flush's repair wire slices: numpy leaves keyed
+        ``rcnt/rcs/rgid/rvec`` shaped (P, microbatches, ...), each row
+        stamped with its transport checksum from the mirror bytes.  The
+        in-step pack routes every row to its owner under the CURRENT
+        placement — the host fills slices round-robin and never needs to
+        know who owns what."""
+        p, t_loc, r = self._geometry(engine)
+        mb = engine.microbatches
+        s = engine.params["tables"].shape[2]
+        emb_dt = np.dtype(engine.params["tables"].dtype)
+        cap = self.slice_cap
+        if self._inflight:
+            # the previous flush died between ship and ingest: re-ship
+            self.reships += len(self._inflight)
+            self._repairq = sorted(set(self._repairq) | set(self._inflight))
+            self._inflight = []
+        rvec = np.zeros((p, mb, cap, s), emb_dt)
+        rgid = np.zeros((p, mb, cap), np.int32)
+        rcs = np.zeros((p, mb, cap), np.uint32)
+        rcnt = np.zeros((p, mb, 1), np.int32)
+        if self.mirror is not None and self._repairq:
+            queue = sorted(set(self._repairq))
+            slices = [(m, j) for m in range(p) for j in range(mb)]
+            si = 0
+            while queue and si < len(slices):
+                take, queue = queue[:cap], queue[cap:]
+                m, j = slices[si]
+                si += 1
+                for i, g in enumerate(take):
+                    rvec[m, j, i] = self.mirror[g // r, g % r]
+                    rgid[m, j, i] = g
+                k = len(take)
+                rcnt[m, j, 0] = k
+                rcs[m, j, :k] = row_checksum(rvec[m, j, :k],
+                                             rgid[m, j, :k], 0)
+                self._inflight.extend(take)
+            self._repairq = queue        # overflow waits its turn
+        return {"rcnt": rcnt, "rcs": rcs, "rgid": rgid, "rvec": rvec}
+
+    # -- harvest (wire -> apply buffer) ------------------------------------
+
+    def ingest(self, staged, engine, step: int) -> None:
+        """Bank this flush's harvested repair leaves WITHOUT reading them
+        (same host/device-overlap argument as the delta path) and verify
+        the PREVIOUS flush's bank while this one's step runs."""
+        self._process_held(engine)
+        self._held = staged
+        self._banked = self._inflight
+        self._inflight = []
+
+    def _process_held(self, engine) -> None:
+        if self._held is None:
+            return
+        staged, self._held = self._held, None
+        dd = {k: np.asarray(v) for k, v in jax.device_get(staged).items()}
+        p_dst, mb, p_src = dd["rgid"].shape[:3]
+        cap = dd["rgid"].shape[3]
+        _, _, r = self._geometry(engine)
+        seen: set = set()
+        if dd["rcnt"].any():
+            for m in range(p_dst):
+                for j in range(mb):
+                    for q in range(p_src):
+                        # clamp: a wire-corrupted slice can carry a
+                        # garbage count; never index past the cap
+                        c = min(int(dd["rcnt"][m, j, q, 0]), cap)
+                        if c <= 0:
+                            continue
+                        gids = dd["rgid"][m, j, q, :c].astype(np.int64)
+                        got = np.asarray(row_checksum(
+                            dd["rvec"][m, j, q, :c], gids, 0), np.uint32)
+                        ok = got == dd["rcs"][m, j, q, :c]
+                        for i, g in enumerate(int(x) for x in gids):
+                            seen.add(g)
+                            if g not in self.quarantined:
+                                continue    # a delta fixed it meanwhile
+                            vec = np.ascontiguousarray(
+                                dd["rvec"][m, j, q, i])
+                            # transport checksum AND current-mirror byte
+                            # equality: a repair is the mirror's bytes
+                            # or it is nothing
+                            cur = None if self.mirror is None else \
+                                np.ascontiguousarray(
+                                    self.mirror[g // r, g % r])
+                            if ok[i] and cur is not None and \
+                                    vec.tobytes() == cur.tobytes():
+                                self._apply_buf.append((g, vec))
+                            else:
+                                self.repair_rejects += 1
+                                self._repairq.append(g)
+        # banked rows the harvest never surfaced (dropped wire segment,
+        # rejected destination) re-queue — a lost repair is a retried one
+        lost = [g for g in self._banked
+                if g not in seen and g in self.quarantined]
+        self._banked = []
+        self._repairq = sorted(set(self._repairq) | set(lost))
+
+    # -- atomic apply (between flushes) ------------------------------------
+
+    def apply(self, engine, step: int) -> None:
+        """Commit verified repairs atomically: scatter into a staging
+        copy of the tables, refresh the cached copies, swap both
+        references, unquarantine.  Runs AFTER the freshness apply in the
+        same between-flush window, and re-checks each row against the
+        mirror at the last moment — if a delta moved the mirror since
+        verify, the stale repair re-queues instead of committing."""
+        if not self._apply_buf:
+            return
+        _, _, r = self._geometry(engine)
+        inv = self._inv_of(engine)
+        buf, self._apply_buf = self._apply_buf, []
+        best: dict = {}
+        for g, vec in buf:
+            best[g] = vec
+        ready = []
+        for g in sorted(best):
+            if g not in self.quarantined:
+                continue
+            cur = np.ascontiguousarray(self.mirror[g // r, g % r])
+            if best[g].tobytes() != cur.tobytes():
+                self._repairq.append(g)
+                continue
+            ready.append((g, best[g]))
+        if not ready:
+            return
+        gids = np.array([g for g, _ in ready], np.int64)
+        vecs = np.stack([v for _, v in ready])
+        tab = gids // r
+        if inv is not None:
+            tab = inv[tab].astype(np.int64)
+        row = gids % r
+        prev_tables = engine.params["tables"]
+        prev_cache = engine.cache
+        # same power-of-two bucket as the delta apply: padding rows carry
+        # an OOB-high table id and drop out of the scatter and the cache
+        # refresh alike
+        bucket = max(64, 1 << (len(gids) - 1).bit_length())
+        if bucket > len(gids):
+            pad = bucket - len(gids)
+            tab = np.concatenate([tab, np.full(pad, prev_tables.shape[0],
+                                               tab.dtype)])
+            row = np.concatenate([row, np.zeros(pad, row.dtype)])
+            vecs = np.concatenate(
+                [vecs, np.zeros((pad,) + vecs.shape[1:], vecs.dtype)])
+        upd = jnp.asarray(vecs).astype(prev_tables.dtype)
+        staged_tables = _scatter_rows(prev_tables, tab, row, upd)
+        staged_cache = prev_cache
+        if prev_cache is not None and prev_cache.cache_rows > 0:
+            staged_cache, _ = hc_mod.refresh_rows(prev_cache, tab, row, upd)
+        # the commit: two reference swaps, then the quarantine lifts —
+        # the next flush's quarantine vector no longer carries these gids
+        engine.params["tables"] = staged_tables
+        engine.cache = staged_cache
+        engine._staged_plan = None
+        resh = getattr(engine, "reshard", None)
+        if resh is not None and resh.active:
+            dt = np.dtype(prev_tables.dtype)
+            for k, g in enumerate(gids):
+                resh.note_applied(int(g), vecs[k], dt)
+        for g, _ in ready:
+            self.quarantined.discard(g)
+        self.repaired_rows += len(ready)
+
+    # -- recovery ----------------------------------------------------------
+
+    def on_evict(self, engine) -> None:
+        """Post-eviction refit (called by ``DLRMEngine.evict`` after the
+        new mesh is installed).  The mirror and checksum shadow refit
+        host-side — they are NOT re-snapshotted from the device, which
+        may still hold un-repaired quarantined corruption that a
+        re-snapshot would bless as expected.  Every un-committed repair
+        state collapses back to the queue; quarantines outside the new
+        geometry drop with their tables."""
+        p, t_loc, r = self._geometry(engine)
+        t_pad = t_loc * p
+        old = self.row_cs.shape[0]
+        if self.mirror is not None:
+            if t_pad <= old:
+                self.mirror = self.mirror[:t_pad].copy()
+            else:
+                z = np.zeros((t_pad - old,) + self.mirror.shape[1:],
+                             self.mirror.dtype)
+                self.mirror = np.concatenate([self.mirror, z], axis=0)
+        if t_pad <= old:
+            self.row_cs = self.row_cs[:t_pad].copy()
+        else:
+            s = engine.params["tables"].shape[2]
+            dt = np.dtype(engine.params["tables"].dtype)
+            gids = (np.arange(old, t_pad)[:, None] * r
+                    + np.arange(r)[None, :])
+            zcs = row_checksum(np.zeros((t_pad - old, r, s), dt), gids, 0)
+            self.row_cs = np.concatenate([self.row_cs, zcs], axis=0)
+        self.ledger = integ.IntegrityLedger(
+            block_rows=self.block_rows, n_rows=r,
+            block_cs=np.stack([
+                integ._host_block_sums(self.row_cs[t], self.block_rows)
+                for t in range(t_pad)]))
+        pend = (set(self._repairq) | set(self._inflight)
+                | set(self._banked) | {g for g, _ in self._apply_buf})
+        self._inflight, self._banked, self._apply_buf = [], [], []
+        self._held = None
+        self._audit_held = None          # folds of a dead geometry
+        self._slot_held = None
+        self.quarantined = {g for g in self.quarantined if g // r < t_pad}
+        self._repairq = sorted(g for g in pend
+                               if g in self.quarantined)
+        self._cursor = 0
+        self._slot_cursor = 0
+
+    @property
+    def fully_repaired(self) -> bool:
+        return not (self.quarantined or self._repairq or self._inflight
+                    or self._banked or self._apply_buf)

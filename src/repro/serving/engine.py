@@ -33,6 +33,10 @@ from repro.train import steps as steps_mod
 # the dict order FreshnessManager.next_wire emits)
 DELTA_KEYS = ("dcnt", "dcs", "dgid", "dvec", "dver")
 
+# host <-> step argument order of the integrity-repair wire leaves
+# (sorted, matching the dict order Scrubber.next_wire emits)
+REP_KEYS = ("rcnt", "rcs", "rgid", "rvec")
+
 
 @dataclasses.dataclass
 class ServeStats:
@@ -60,6 +64,13 @@ class ServeStats:
     migrated_rows: int = 0      # embedding rows moved by committed cutovers
     imbalance_ratio: float = 1.0   # max/mean per-member pooled-row load
     flush_time_ratio: float = 1.0  # max/mean per-member flush-time estimate
+    # -- scrub ledger (silent-corruption self-healing, DESIGN.md §12) ------
+    blocks_scrubbed: int = 0    # table blocks audited on device
+    detections: int = 0         # rows (or cache slots) caught corrupt
+    repaired_rows: int = 0      # quarantined rows restored from the mirror
+    quarantined_served: int = 0  # bags that touched a quarantined row
+    wire_rejects: int = 0       # (dst, microbatch, src) segments rejected
+    detection_lag_flushes: int = 0  # worst inject -> detect lag observed
     # per-member exchange telemetry (EWMA pooled rows / exchanged bytes,
     # dispatch_stats-sourced) — lists so the JSON view keeps the member axis
     member_rows: list = dataclasses.field(default_factory=list)
@@ -166,7 +177,12 @@ class DLRMEngine:
                  rebalance: bool = False,
                  rebalance_threshold: float = 1.25,
                  rebalance_patience: int = 8,
-                 mig_slice_cap: int = 8):
+                 mig_slice_cap: int = 8,
+                 scrub_budget: int = 0,
+                 scrub_block_rows: int = 32,
+                 rep_slice_cap: int = 8,
+                 quarantine_cap: int = 64,
+                 scrub_mirror: bool = True):
         self.params, self.cfg = params, cfg
         self.batch_size = batch_size
         self.bound, self.microbatches = bound, microbatches
@@ -209,6 +225,12 @@ class DLRMEngine:
                 "online resharding migrates rows through the synchronous "
                 "flush path; plan_pipeline's deferred harvest would tear "
                 "the cutover boundary — rebalance without plan_pipeline")
+        if scrub_budget and plan_pipeline:
+            raise ValueError(
+                "integrity scrubbing audits and repairs through the "
+                "synchronous flush path; plan_pipeline's deferred harvest "
+                "would tear the quarantine/repair boundary — scrub "
+                "without plan_pipeline")
         self.deadline_s = deadline_s
         self.on_deadline = on_deadline
         self.faults = faults
@@ -248,6 +270,18 @@ class DLRMEngine:
         # bumped on every layout change (cutover AND eviction): the
         # frontend's flush-EWMA keys off it to recalibrate
         self.layout_version = 0
+        # -- integrity scrubbing (DESIGN.md §12) ---------------------------
+        self.scrub = None
+        self._held_wbad = None         # previous flush's corrupt-src flags
+        self._wire_streak: dict = {}   # per-src consecutive-corrupt flushes
+        self._flip_log: dict = {}      # injected-flip gid -> flush, for lag
+        if scrub_budget:
+            from repro.runtime.scrub import Scrubber
+            self.scrub = Scrubber(self, budget=int(scrub_budget),
+                                  block_rows=int(scrub_block_rows),
+                                  slice_cap=int(rep_slice_cap),
+                                  quarantine_cap=int(quarantine_cap),
+                                  mirror=bool(scrub_mirror))
         self._rebuild_step()
 
     def calibrate_cache(self, idx: np.ndarray, mask: np.ndarray,
@@ -282,21 +316,26 @@ class DLRMEngine:
         return self._pmap
 
     def _step_flags(self):
-        """(with_mig, with_inv): whether the step signature carries the
-        migration wire leaves and/or the placement inverse permutation.
-        The inv rides whenever a migration is live (so the cutover is an
-        ARRAY swap, not a signature change) or the map is non-identity."""
+        """(with_mig, with_inv, with_scrub): whether the step signature
+        carries the migration wire leaves, the placement inverse
+        permutation, and/or the scrub group (repair wire leaves +
+        quarantine gids + wire-flip hook + wire checksums).  The inv
+        rides whenever a migration is live (so the cutover is an ARRAY
+        swap, not a signature change) or the map is non-identity.  The
+        scrub flag is constant over the engine's life (scrub_budget is
+        an __init__ knob), so it never forces a mid-serve retrace."""
         with_mig = self.reshard is not None and self.reshard.active
         with_inv = with_mig or (self._pmap is not None
                                 and not self._pmap.is_identity)
-        return with_mig, with_inv
+        with_scrub = self.scrub is not None
+        return with_mig, with_inv, with_scrub
 
     def _rebuild_step(self):
-        with_mig, with_inv = self._step_flags()
-        self._step_key = (with_mig, with_inv)
+        with_mig, with_inv, with_scrub = self._step_flags()
+        self._step_key = (with_mig, with_inv, with_scrub)
         self._step = jax.jit(self._make_step(
             self.bound, self.microbatches,
-            with_mig=with_mig, with_inv=with_inv))
+            with_mig=with_mig, with_inv=with_inv, with_scrub=with_scrub))
 
     def _ensure_step(self):
         """Re-jit only when the step's SIGNATURE flags drifted from the
@@ -306,7 +345,7 @@ class DLRMEngine:
             self._rebuild_step()
 
     def _make_step(self, bound, microbatches, *, with_mig=False,
-                   with_inv=False):
+                   with_inv=False, with_scrub=False):
         cfg, wire = self.cfg, self.wire_dtype
         ex, cap = self.exchange, self.ragged_cap
         pipe = self.exchange_pipeline
@@ -345,11 +384,19 @@ class DLRMEngine:
         def forward(params, dense, idx, mask, cache, plan, *xargs):
             # xargs tail, in order: delta wire leaves (DELTA_KEYS,
             # freshness serving), migration wire leaves (MIG_KEYS, live
-            # resharding), then the placement inverse permutation.
-            # Presence of each group is a trace-time constant baked into
-            # this step variant, so the split below is static
+            # resharding), repair wire leaves (REP_KEYS, scrub repair),
+            # quarantine gids + wire-flip hook (scrub), then the
+            # placement inverse permutation.  Presence of each group is a
+            # trace-time constant baked into this step variant, so the
+            # split below is static
             rest = list(xargs)
             table_inv = rest.pop() if with_inv else None
+            repair = quarantine = wire_flip = None
+            if with_scrub:
+                wire_flip = rest.pop()
+                quarantine = rest.pop()
+                repair = dict(zip(REP_KEYS, rest[-len(REP_KEYS):]))
+                del rest[-len(REP_KEYS):]
             migration = None
             if with_mig:
                 migration = dict(zip(MIG_KEYS, rest[-len(MIG_KEYS):]))
@@ -361,10 +408,13 @@ class DLRMEngine:
                 cache=cache, wire_dtype=wire,
                 exchange=ex, ragged_cap=cap, exchange_pipeline=pipe,
                 row_block=rblk, pool_mode=pool, plan=plan, deltas=deltas,
-                migration=migration, table_inv=table_inv,
+                migration=migration, repair=repair, quarantine=quarantine,
+                wire_flip=wire_flip, wire_check=with_scrub,
+                table_inv=table_inv,
                 degraded_members=deg, degraded_fallback=fb,
                 return_diag=diag_on)
-            n_staged = int(deltas is not None) + int(migration is not None)
+            n_staged = (int(deltas is not None) + int(migration is not None)
+                        + int(repair is not None) + int(with_scrub))
             if n_staged:
                 core, staged = res[:-n_staged], res[-n_staged:]
                 return _finish(core[0] if len(core) == 1
@@ -622,6 +672,22 @@ class DLRMEngine:
                     # harvested last flush commit (or roll back) before
                     # this flush's batch is dispatched
                     self.freshness.apply(self, step_no)
+                if self.scrub is not None:
+                    # repair rows share the freshness apply window (and
+                    # run AFTER it, so a delta that already overwrote the
+                    # corruption wins); injected faults land before the
+                    # audit so the scrubber is exercised, not informed
+                    self.scrub.apply(self, step_no)
+                    if self.faults is not None:
+                        for (_, t, r, b, tgt) in \
+                                self.faults.bitflips(step_no):
+                            self._inject_bitflip(t, r, b, tgt, step_no)
+                    for g in self.scrub.audit(self, step_no):
+                        fs = self._flip_log.pop(g, None)
+                        if fs is not None:
+                            self.stats.detection_lag_flushes = max(
+                                self.stats.detection_lag_flushes,
+                                step_no - fs)
                 # the cutover window sits between flushes too: once every
                 # migrated row is banked and verified, the atomic swap
                 # happens here, BEFORE this flush's batch is dispatched
@@ -643,12 +709,29 @@ class DLRMEngine:
                     mw = self.reshard.next_wire(self, step_no)
                     args = args + tuple(jnp.asarray(mw[k])
                                         for k in MIG_KEYS)
+                if self.scrub is not None:
+                    rw = self.scrub.next_wire(self, step_no)
+                    args = args + tuple(jnp.asarray(rw[k])
+                                        for k in REP_KEYS)
+                    args = args + (jnp.asarray(
+                        self.scrub.quarantine_phys(self), jnp.int32),)
+                    args = args + (self._wire_flip_arg(step_no),)
                 if self._step_key[1]:        # with_inv
                     args = args + (jnp.asarray(self.pmap.inv_array()),)
                 with self._mesh_ctx():
                     out, *diag = self._step(*args)
+                held_wbad = None
+                if self.scrub is not None:
+                    # wire flags + repair harvest ride LAST; the flags
+                    # bank one flush unread (same deferred-harvest
+                    # discipline as the riders: never sync the step we
+                    # just dispatched).  Processing is deferred to the
+                    # END of the flush — _note_wire may evict, and the
+                    # accounting below must see this batch's geometry
+                    held_wbad, self._held_wbad = \
+                        self._held_wbad, diag.pop()
+                    self.scrub.ingest(diag.pop(), self, step_no)
                 if mig_live:
-                    # migration harvest rides LAST in the step output
                     self.reshard.ingest(diag.pop(), self, step_no)
                 if self.freshness is not None:
                     staged = diag.pop()
@@ -660,7 +743,16 @@ class DLRMEngine:
                     self.stats.delta_rejects = fr.delta_rejects
                     self.stats.apply_rollbacks = fr.rollbacks
                     self.stats.versions_behind = fr.ledger.versions_behind
+                if self.scrub is not None:
+                    sc = self.scrub
+                    self.stats.blocks_scrubbed = sc.blocks_scrubbed
+                    self.stats.detections = sc.detections
+                    self.stats.repaired_rows = sc.repaired_rows
+                    self.stats.quarantined_served += \
+                        sc.count_quarantined_served(self, fi, fm)
                 self._observe_load(fm, step_no)
+                if held_wbad is not None:
+                    self._note_wire(held_wbad, step_no)
                 return out, diag
             except NodeFailure as e:
                 if attempt >= self.max_retries:
@@ -670,6 +762,86 @@ class DLRMEngine:
                 self.evict(e.surviving_devices)
                 self.stats.replays += 1
         raise AssertionError("unreachable")
+
+    # -- silent-corruption self-healing (DESIGN.md §12) --------------------
+
+    def _wire_flip_arg(self, step_no):
+        """The (P_src, P_dst) uint8 XOR hook the step applies to the
+        first payload byte of each fused slot.  All-zeros (XOR identity)
+        on a healthy pod — the clean path stays bit-exact with the hook
+        armed; the fault injector's scheduled wire corruptions set a
+        single byte, which the per-destination checksum is guaranteed to
+        catch (every byte carries a non-zero fold weight)."""
+        p, _, _, _ = self._exchange_geometry()
+        flip = np.zeros((p, p), np.uint8)
+        if self.faults is not None:
+            for (s, q) in self.faults.wire_corruptions(step_no):
+                if s < p and q < p:
+                    flip[s, q] = 1
+        return jnp.asarray(flip)
+
+    def _note_wire(self, wb, step_no):
+        """Process one BANKED flush's wire-verification flags: ledger the
+        rejects and escalate persistently corrupt SOURCES through the
+        straggler ladder (streak >= confirm_after degrades the member,
+        >= 2x evicts it).  A rejected segment's rows were zeroed at
+        consume and the riders re-ship next flush, so escalation is about
+        the link's health, never about request loss."""
+        p, _, _, _ = self._exchange_geometry()
+        arr = np.asarray(wb).reshape(-1)
+        if arr.size % p:
+            return                       # geometry changed under the bank
+        per_src = arr.reshape(-1, p).sum(axis=0)
+        self.stats.wire_rejects += int(per_src.sum())
+        for q in range(p):
+            if per_src[q]:
+                s = self._wire_streak.get(q, 0) + 1
+                self._wire_streak[q] = s
+                if s >= 2 * self.confirm_after:
+                    self._wire_streak.pop(q, None)
+                    self.evict_member(q)
+                    return               # positions renumbered: stop here
+                if s >= self.confirm_after and \
+                        q not in self.degraded_members:
+                    self.degrade(tuple(set(self.degraded_members) | {q}))
+            else:
+                self._wire_streak.pop(q, None)
+
+    def _inject_bitflip(self, table, row, bit, target, step_no):
+        """Flip ONE bit of a resident table row (``target='table'``) or
+        its hot-cache copy (``target='cache'``) in device memory — the
+        §8 fault-plan hook the scrub tests drive.  ``table``/``row`` are
+        ORIGINAL-space; the live placement translates to the physical
+        column so flips land correctly mid-reshard."""
+        pm = self._pmap
+        phys_t = int(pm.inv_array()[table]) if pm is not None \
+            and not pm.is_identity else int(table)
+        byte, bi = divmod(int(bit), 8)
+        if target == "cache":
+            if self.cache is None:
+                return
+            slot = int(np.asarray(self.cache.slot_of[phys_t, row]))
+            if slot < 0:
+                return                   # row not cached: nothing to flip
+            vec = np.asarray(self.cache.hot_rows[phys_t, slot])
+            u8 = np.frombuffer(vec.tobytes(), np.uint8).copy()
+            u8[byte % u8.size] ^= np.uint8(1 << bi)
+            new = np.frombuffer(u8.tobytes(), vec.dtype).reshape(vec.shape)
+            from repro.serving.hot_cache import HotCache
+            self.cache = HotCache(
+                hot_ids=self.cache.hot_ids,
+                hot_rows=self.cache.hot_rows.at[phys_t, slot].set(
+                    jnp.asarray(new)),
+                slot_of=self.cache.slot_of)
+        else:
+            vec = np.asarray(self.params["tables"][phys_t, row])
+            u8 = np.frombuffer(vec.tobytes(), np.uint8).copy()
+            u8[byte % u8.size] ^= np.uint8(1 << bi)
+            new = np.frombuffer(u8.tobytes(), vec.dtype).reshape(vec.shape)
+            self.params["tables"] = \
+                self.params["tables"].at[phys_t, row].set(jnp.asarray(new))
+        r_all = int(self.params["tables"].shape[1])
+        self._flip_log[int(table) * r_all + int(row)] = step_no
 
     # -- skew-aware placement: telemetry, policy, online resharding --------
 
@@ -1011,6 +1183,12 @@ class DLRMEngine:
             # un-committed delta rows re-queue; ownership is recomputed
             # from the new geometry at the next ship
             self.freshness.on_evict(self)
+        if self.scrub is not None:
+            # in-flight repairs re-queue against the refit mirror; banked
+            # wire flags describe the OLD geometry and are dropped
+            self.scrub.on_evict(self)
+            self._held_wbad = None
+            self._wire_streak.clear()
         self.stats.evictions += 1
         self.stats.recovery_s += time.perf_counter() - t_rec
 
@@ -1083,11 +1261,17 @@ class DLRMEngine:
             mig_bytes = a2a_mod.mig_wire_layout(
                 p, self.reshard.slice_cap, s,
                 self.params["tables"].dtype).slot_bytes
+        rep_bytes = 0
+        if self.scrub is not None:
+            rep_bytes = a2a_mod.rep_wire_layout(
+                p, self.scrub.slice_cap, s,
+                self.params["tables"].dtype).slot_bytes
         layout = a2a_mod.exchange_wire_layout(
             ragged=use_ragged, n_dest=p, cap=cap, bs=bs, t_loc=t_pad // p,
             embed_dim=s, wire_dtype=self.wire_dtype,
             emb_dtype=self.params["tables"].dtype,
-            delta_bytes=delta_bytes, mig_bytes=mig_bytes)
+            delta_bytes=delta_bytes, mig_bytes=mig_bytes,
+            rep_bytes=rep_bytes, wire_check=self.scrub is not None)
         recv = {"buf": jax.ShapeDtypeStruct((p, layout.slot_bytes),
                                             jnp.uint8)}
         side = [jax.ShapeDtypeStruct((bs, s), jnp.dtype(cfg.dtype))]

@@ -142,12 +142,19 @@ def invalidate(cache: HotCache, tab, row):
     c = cache.cache_rows
     if c == 0 or tab.shape[0] == 0:
         return cache, 0
-    slots = cache.slot_of[tab, row]
-    hit = slots >= 0
-    t_all = cache.hot_rows.shape[0]
+    # same guard as refresh_rows: out-of-range (tab, row) entries — the
+    # scatter paths pad their batches with OOB-high sentinels — would
+    # WRAP under jnp gather indexing and read (then clobber) some other
+    # row's slot
+    t_all, r_all = cache.slot_of.shape
+    in_range = (tab >= 0) & (tab < t_all) & (row >= 0) & (row < r_all)
+    slots = cache.slot_of[jnp.clip(tab, 0, t_all - 1),
+                          jnp.clip(row, 0, r_all - 1)]
+    hit = in_range & (slots >= 0)
     tgt_t = jnp.where(hit, tab, t_all)                  # miss -> dropped
     slot_c = jnp.clip(slots, 0, c - 1)
-    new_slot = cache.slot_of.at[tgt_t, row].set(-1, mode="drop")
+    row_c = jnp.clip(row, 0, r_all - 1)
+    new_slot = cache.slot_of.at[tgt_t, row_c].set(-1, mode="drop")
     new_rows = cache.hot_rows.at[tgt_t, slot_c].set(0.0, mode="drop")
     new_ids = cache.hot_ids
     if new_ids is not None:

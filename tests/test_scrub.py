@@ -1,0 +1,604 @@
+"""Silent-data-corruption self-healing (DESIGN.md §12): background
+integrity scrubbing, end-to-end wire verification, and
+quarantine-and-repair over the fused wire.
+
+The invariants under test:
+  * **One fold** — host ``row_checksum`` and device
+    ``row_checksum_device`` agree bit for bit over every wire dtype, and
+    the fold itself is PINNED (hard-coded expected words): on-wire
+    checksums must survive refactors, because stamps of old payloads in
+    flight verify against new code during a rolling upgrade;
+  * **Detection within the scrub window** — an injected bit flip in a
+    resident row, a hot-cache copy, or a wire segment is detected within
+    ``ceil(total_blocks / budget)`` flushes, on both exchange pipelines;
+  * **Bit-exact repair** — repaired tables equal the uncorrupted oracle
+    engine's byte for byte, with zero requests lost, and a repair never
+    resurrects a value a fresher delta overwrote;
+  * **Zero extra collectives** — the repair rider and the wire checksum
+    ride the SAME fused buffer: one all_to_all (mono) / P−1 ppermutes
+    (ring) in the jaxpr, scrub or no scrub;
+  * **Honesty with the mirror off** — detection and quarantine still
+    work (checksum shadow), repair does not: quarantined rows serve the
+    degraded fallback until a delta overwrites them.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+
+from repro.core.integrity import (IntegrityLedger, row_checksum,
+                                  row_checksum_device, wire_stamp,
+                                  wire_verify)
+from repro.serving.hot_cache import HotCache, build, invalidate
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+# ---------------------------------------------------------------------------
+# One fold: host/device equivalence + pinned values (satellite: dedup)
+# ---------------------------------------------------------------------------
+
+
+class TestFoldEquivalence:
+    def test_host_equals_device_across_dtypes(self):
+        """The deduplicated fold: freshness (dcs), reshard (mcs) and
+        scrub/repair (rcs) all stamp with row_checksum and verify with
+        either side — host and device must agree over every dtype the
+        wire carries."""
+        import jax.numpy as jnp
+        rng = np.random.default_rng(7)
+        for dt in (jnp.float32, jnp.bfloat16, jnp.float16):
+            vecs = jnp.asarray(
+                rng.standard_normal((6, 8)), jnp.float32).astype(dt)
+            gids = np.arange(6) * 13 + 2
+            host = row_checksum(np.asarray(vecs), gids, 3)
+            dev = np.asarray(jax.device_get(row_checksum_device(
+                vecs, jnp.asarray(gids, jnp.int32), jnp.int32(3))))
+            assert np.array_equal(host, dev), dt
+
+    def test_fold_is_pinned(self):
+        """Hard-coded expected words: changing the weight schedule, the
+        mixing constants, or the wrap silently breaks every stamp already
+        on the wire — this test makes that loud."""
+        vec = np.arange(8, dtype=np.float32)
+        assert int(row_checksum(vec, 0, 0)) == 29048
+        assert int(row_checksum(vec, 123, 7)) == 1479294494
+        z = np.zeros(4, np.float32)
+        assert int(row_checksum(z, 1, 0)) == 2654435761
+
+    def test_freshness_and_reshard_reexports_are_the_same_function(self):
+        from repro.core import integrity
+        from repro.runtime import freshness
+        assert freshness.row_checksum is integrity.row_checksum
+
+
+# ---------------------------------------------------------------------------
+# IntegrityLedger: blocked sums + O(1) incremental refold
+# ---------------------------------------------------------------------------
+
+
+class TestIntegrityLedger:
+    def test_note_update_matches_full_recompute(self):
+        rng = np.random.default_rng(3)
+        tables = rng.standard_normal((4, 20, 8)).astype(np.float32)
+        led = IntegrityLedger.from_tables(tables, block_rows=8)
+        # overwrite a handful of rows, refolding incrementally
+        for gid in (0, 19, 21, 45, 79):
+            t, r = divmod(gid, 20)
+            new = rng.standard_normal(8).astype(np.float32)
+            led.note_update(gid, tables[t, r], new)
+            tables[t, r] = new
+        want = IntegrityLedger.from_tables(tables, block_rows=8)
+        assert np.array_equal(led.block_cs, want.block_cs)
+
+    def test_single_bit_flip_moves_exactly_one_block(self):
+        rng = np.random.default_rng(4)
+        tables = rng.standard_normal((2, 16, 4)).astype(np.float32)
+        led = IntegrityLedger.from_tables(tables, block_rows=4)
+        mut = tables.copy()
+        mut[1, 9].view(np.uint8)[2] ^= 0x10
+        got = IntegrityLedger.from_tables(mut, block_rows=4)
+        diff = led.block_cs != got.block_cs
+        assert diff.sum() == 1 and diff[1, 9 // 4]
+
+    def test_padding_rows_fold_to_zero(self):
+        """Blocks past R must not contribute: a ledger over (t_pad, R)
+        with R not a block multiple still matches a device fold whose
+        padding offsets are masked."""
+        tables = np.ones((1, 10, 4), np.float32)
+        led = IntegrityLedger.from_tables(tables, block_rows=4)
+        assert led.n_blocks == 3
+        # last block covers rows 8..9 only
+        rcs = row_checksum(tables[0, 8:10],
+                           np.arange(8, 10), 0).astype(np.uint64)
+        assert int(led.block_cs[0, 2]) == int(rcs.sum() % (1 << 32))
+
+
+# ---------------------------------------------------------------------------
+# Wire stamp/verify: the end-to-end serving-payload checksum
+# ---------------------------------------------------------------------------
+
+
+class TestWireStampVerify:
+    def _layout(self):
+        import jax.numpy as jnp
+        from repro.core.alltoallv import wire_layout
+        return wire_layout(3, {"emb": ((24,), jnp.uint8),
+                               "wcs": ((1,), jnp.uint32)})
+
+    def test_stamp_then_verify_and_any_flip_rejects(self):
+        import jax.numpy as jnp
+        layout = self._layout()
+        rng = np.random.default_rng(5)
+        buf = jnp.asarray(rng.integers(0, 256, (3, layout.slot_bytes)),
+                          jnp.uint8)
+        stamped = wire_stamp(buf, layout)
+        assert bool(np.all(np.asarray(wire_verify(stamped, layout))))
+        f = layout.field("wcs")
+        payload = [i for i in range(layout.slot_bytes)
+                   if not (f.offset <= i < f.offset + 4)]
+        for i in payload:
+            mut = stamped.at[1, i].set(stamped[1, i] ^ 1)
+            ok = np.asarray(wire_verify(mut, layout))
+            assert not ok[1] and ok[0] and ok[2], i
+
+    def test_stamp_does_not_perturb_what_it_protects(self):
+        """Stamping twice is a fixpoint: the wcs bytes are zero-weighted,
+        so writing the stamp does not change the fold it records."""
+        import jax.numpy as jnp
+        layout = self._layout()
+        buf = jnp.asarray(np.arange(3 * layout.slot_bytes).reshape(3, -1)
+                          % 251, jnp.uint8)
+        once = wire_stamp(buf, layout)
+        twice = wire_stamp(once, layout)
+        assert np.array_equal(np.asarray(once), np.asarray(twice))
+
+
+# ---------------------------------------------------------------------------
+# Hot-cache invalidate: range guard + parity vs rebuild (satellite fix)
+# ---------------------------------------------------------------------------
+
+
+class TestInvalidateRangeGuard:
+    def _cache(self):
+        import jax.numpy as jnp
+        rng = np.random.default_rng(6)
+        tables = jnp.asarray(rng.standard_normal((3, 12, 4)), jnp.float32)
+        counts = rng.integers(0, 50, (3, 12))
+        return tables, build(tables, counts, 4)
+
+    def test_oob_entries_are_dropped_not_wrapped(self):
+        """The bug this pins: an OOB-high (bucket-padding sentinel) or
+        negative (tab, row) used to WRAP under jnp gather indexing, read
+        some other row's slot, and clobber it."""
+        tables, cache = self._cache()
+        t_all, r_all = cache.slot_of.shape
+        tab = np.array([t_all, -1, 0, t_all + 5], np.int32)
+        row = np.array([0, 3, r_all + 2, -7], np.int32)
+        out, n = invalidate(cache, tab, row)
+        assert n == 0
+        assert np.array_equal(np.asarray(out.slot_of),
+                              np.asarray(cache.slot_of))
+        assert np.array_equal(np.asarray(out.hot_rows),
+                              np.asarray(cache.hot_rows))
+        assert np.array_equal(np.asarray(out.hot_ids),
+                              np.asarray(cache.hot_ids))
+
+    def test_parity_with_full_rebuild(self):
+        """Invalidating rows one by one must leave exactly the slots a
+        from-scratch build WITHOUT those rows would leave live (bit
+        parity on the surviving cached vectors, mirroring the
+        refresh_rows parity test of PR 8)."""
+        tables, cache = self._cache()
+        kill = [(0, int(np.asarray(cache.hot_ids)[0, 1])),
+                (2, int(np.asarray(cache.hot_ids)[2, 0]))]
+        tab = np.array([t for t, _ in kill], np.int32)
+        row = np.array([r for _, r in kill], np.int32)
+        out, n = invalidate(cache, tab, row)
+        assert n == 2
+        slot_of = np.asarray(out.slot_of)
+        ids = np.asarray(out.hot_ids)
+        rows = np.asarray(out.hot_rows)
+        th = np.asarray(tables)
+        for t, r in kill:
+            assert slot_of[t, r] == -1
+        for t in range(slot_of.shape[0]):
+            for r in range(slot_of.shape[1]):
+                s = slot_of[t, r]
+                if s >= 0:
+                    assert ids[t, s] == r
+                    assert np.array_equal(rows[t, s], th[t, r])
+
+
+# ---------------------------------------------------------------------------
+# ServeStats: JSON round-trip of the full ledger (satellite: coverage)
+# ---------------------------------------------------------------------------
+
+
+class TestServeStatsRoundTrip:
+    def test_to_dict_json_roundtrips_every_counter(self):
+        from repro.serving.engine import ServeStats
+        st = ServeStats()
+        st.requests = 7
+        st.blocks_scrubbed = 40
+        st.detections = 3
+        st.repaired_rows = 2
+        st.quarantined_served = 5
+        st.wire_rejects = 1
+        st.detection_lag_flushes = 4
+        d = st.to_dict()
+        for k in ("requests", "batches", "replays", "evictions",
+                  "recovery_s", "approx_rows", "rows_applied",
+                  "delta_rejects", "apply_rollbacks", "versions_behind",
+                  "rows_stale_served", "reshards", "migrated_rows",
+                  "blocks_scrubbed", "detections", "repaired_rows",
+                  "quarantined_served", "wire_rejects",
+                  "detection_lag_flushes"):
+            assert k in d, k
+        back = json.loads(json.dumps(d))
+        assert back["blocks_scrubbed"] == 40
+        assert back["detections"] == 3
+        assert back["repaired_rows"] == 2
+        assert back["quarantined_served"] == 5
+        assert back["wire_rejects"] == 1
+        assert back["detection_lag_flushes"] == 4
+        assert back == json.loads(json.dumps(st.to_dict()))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: the serving engine under injected corruption
+# ---------------------------------------------------------------------------
+
+
+_PREAMBLE = """
+import itertools
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import DLRMConfig
+from repro.models import dlrm as D
+from repro.sharding import partition
+from repro.data import synthetic as S
+from repro.runtime import elastic
+from repro.runtime.faults import FaultPlan, FaultInjector
+from repro.serving.engine import DLRMEngine
+
+cfg = DLRMConfig('t', table_sizes=(40, 60, 30, 50, 20, 70), embed_dim=8,
+                 n_dense_features=4, bottom_mlp=(16, 8), top_mlp=(16, 1),
+                 sparse_backend='ref')
+P, B = 4, 48
+mesh = elastic.make_mesh_from(jax.devices()[:P], model=P)
+params = D.init_dlrm(jax.random.PRNGKey(0), cfg, n_shards=P)
+t_pad = D.padded_tables(cfg, P)
+batches = [S.make_batch(cfg, B, mode='powerlaw', t_pad=t_pad, seed=9,
+                        step=s) for s in range(12)]
+oracle = np.array(jax.device_get(params['tables']))
+
+
+def run_serve(faults=None, n_flushes=14, calibrate=False, **eng_kw):
+    eng = DLRMEngine(params, cfg, batch_size=B, bound=1, microbatches=2,
+                     exchange='dense', faults=faults, retry_backoff_s=0.0,
+                     scrub_budget=eng_kw.pop('scrub_budget', 8), **eng_kw)
+    outs = []
+    with partition.axis_rules(mesh):
+        if calibrate:
+            b0 = batches[0]
+            eng.calibrate_cache(b0.idx, b0.mask, cache_rows=8)
+        for s in range(n_flushes):
+            b = batches[s % len(batches)]
+            for r in range(B):
+                o = eng.submit(b.dense[r], b.idx[r], b.mask[r])
+                if o is not None:
+                    outs.append(np.asarray(o))
+    return eng, outs
+
+
+def check_tables(eng):
+    # per-table compare: survives post-evict geometry (t_pad shrinks)
+    got = np.array(jax.device_get(eng.params['tables']))
+    for t, size in enumerate(cfg.table_sizes):
+        assert np.array_equal(oracle[t, :size], got[t, :size]), \\
+            f'table {t} diverged from oracle'
+"""
+
+
+def test_clean_path_bit_exact_with_scrub_armed():
+    """Scrub on, no faults: identical CTRs to a no-scrub engine, blocks
+    audited every flush, zero detections, zero wire rejects — the whole
+    verification apparatus is value-neutral when nothing is wrong."""
+    run_sub(_PREAMBLE + """
+eng0 = DLRMEngine(params, cfg, batch_size=B, bound=1, microbatches=2,
+                  exchange='dense')
+eng, outs = run_serve(n_flushes=6)
+outs0 = []
+with partition.axis_rules(mesh):
+    for s in range(6):
+        b = batches[s % len(batches)]
+        for r in range(B):
+            o = eng0.submit(b.dense[r], b.idx[r], b.mask[r])
+            if o is not None:
+                outs0.append(np.asarray(o))
+for a, b_ in zip(outs0, outs):
+    assert np.array_equal(a, b_)
+st = eng.stats
+assert st.blocks_scrubbed > 0
+assert st.detections == 0 and st.wire_rejects == 0
+assert st.repaired_rows == 0 and st.quarantined_served == 0
+check_tables(eng)
+print('ok')
+""")
+
+
+def test_bitflip_grid_detected_and_repaired_bit_exact():
+    """The acceptance grid: a resident-row flip and a hot-cache flip, on
+    both exchange pipelines, under f32 and bf16 wire dtypes — each
+    detected within the scrub window, resident flips repaired bit-exact
+    vs the uncorrupted oracle, zero requests lost."""
+    run_sub(_PREAMBLE + """
+from repro.serving import hot_cache as HC
+# the cache leg must flip a row that IS cached: precompute the cache the
+# engine will calibrate (deterministic from tables + batch 0)
+pre = HC.build_from_batch(params['tables'], batches[0].idx,
+                          batches[0].mask, 8)
+crow = int(np.asarray(pre.hot_ids)[2, 0])
+for pipe in ('mono', 'ring'):
+    for wire in ('f32', 'bf16'):
+        for target in ('table', 'cache'):
+            row = 7 if target == 'table' else crow
+            plan = FaultPlan.none(P, 40).with_bitflip(
+                1, 2, row, 5, when=2, target=target)
+            eng, outs = run_serve(faults=FaultInjector(plan),
+                                  exchange_pipeline=pipe, wire_dtype=wire,
+                                  calibrate=(target == 'cache'),
+                                  n_flushes=14)
+            st = eng.stats
+            tag = (pipe, wire, target)
+            assert len(outs) == 14, (tag, len(outs))      # zero lost
+            assert st.detections >= 1, tag
+            # scrub window with budget 8: blocks = 8 tables x 3 blocks
+            # -> 3 flushes; cache slots = 8 x 8 -> 8 flushes
+            lim = 4 if target == 'table' else 9
+            assert st.detection_lag_flushes <= lim, (tag, st)
+            if target == 'table':
+                assert st.repaired_rows >= 1, tag
+                assert eng.scrub.fully_repaired, tag
+                check_tables(eng)
+            else:
+                # a corrupt CACHED copy invalidates (base row was never
+                # wrong): tables still pristine, slot now a miss
+                check_tables(eng)
+                assert eng.scrub.cache_invalidations >= 1, tag
+                sl = np.asarray(jax.device_get(eng.cache.slot_of))
+                assert sl[2, crow] == -1, tag
+print('ok')
+""")
+
+
+def test_wire_corruption_rejected_and_reshipped_zero_lost():
+    """A corrupted serving segment is detected at consume on BOTH
+    pipelines: the segment's contribution zeroes (finite outputs, no
+    poisoned unpack), wire_rejects ledgers it, and serving + repair
+    continue to bit-exact convergence."""
+    run_sub(_PREAMBLE + """
+for pipe in ('mono', 'ring'):
+    plan = (FaultPlan.none(P, 40)
+            .with_wire_corruption(2, 0, when=3)
+            .with_bitflip(1, 2, 7, 5, when=2))
+    eng, outs = run_serve(faults=FaultInjector(plan),
+                          exchange_pipeline=pipe, n_flushes=14)
+    st = eng.stats
+    assert len(outs) == 14, (pipe, len(outs))
+    assert st.wire_rejects >= 1, pipe
+    assert all(np.isfinite(o).all() for o in outs), pipe
+    assert st.repaired_rows >= 1, pipe
+    check_tables(eng)
+print('ok')
+""")
+
+
+def test_persistent_wire_corruption_escalates_degrade_then_evict():
+    """One link corrupting EVERY flush walks the ladder: streak >=
+    confirm_after degrades the source, >= 2x evicts it — and every
+    request is still answered (the reject path zeroes, never drops)."""
+    run_sub(_PREAMBLE + """
+plan = FaultPlan.none(P, 60)
+for s in range(2, 30):
+    plan = plan.with_wire_corruption(2, 0, when=s)
+eng, outs = run_serve(faults=FaultInjector(plan), n_flushes=16,
+                      confirm_after=2)
+st = eng.stats
+assert len(outs) == 16
+assert st.wire_rejects >= 4
+assert st.evictions >= 1, st.evictions      # ladder completed
+assert all(np.isfinite(o).all() for o in outs)
+print('ok')
+""")
+
+
+def test_mirror_disabled_detects_and_quarantines_but_cannot_repair():
+    """The honesty gap, asserted: with scrub_mirror=False the checksum
+    shadow still detects at row granularity and quarantines (corrupt
+    rows serve the degraded zero fallback, ledgered in
+    quarantined_served), but repaired_rows stays 0 and the corruption
+    persists until an authorized delta overwrites it."""
+    run_sub(_PREAMBLE + """
+# flip a row every batch actually touches so quarantined_served counts
+hot = None
+for t in range(6):
+    for r0 in range(cfg.table_sizes[t]):
+        if all(((b.idx[:, t] == r0) & (b.mask[:, t] > 0)).any()
+               for b in batches[:6]):
+            hot = (t, r0)
+            break
+    if hot:
+        break
+assert hot is not None
+plan = FaultPlan.none(P, 40).with_bitflip(0, hot[0], hot[1], 3, when=2)
+eng, outs = run_serve(faults=FaultInjector(plan), scrub_mirror=False,
+                      n_flushes=12)
+st = eng.stats
+assert len(outs) == 12
+assert st.detections >= 1
+assert st.repaired_rows == 0                   # cannot repair
+assert len(eng.scrub.quarantined) == 1         # still quarantined
+assert st.quarantined_served > 0               # served degraded, visibly
+assert all(np.isfinite(o).all() for o in outs)
+got = np.array(jax.device_get(eng.params['tables']))
+t0 = hot[0]
+assert not np.array_equal(got[t0, :cfg.table_sizes[t0]],
+                          oracle[t0, :cfg.table_sizes[t0]])  # persists
+print('ok')
+""")
+
+
+def test_repair_never_resurrects_a_fresher_delta():
+    """Interop with PR 8: a row is flipped AND later overwritten by an
+    online delta.  The delta must win — the final bytes are the delta's,
+    not the pre-flip mirror's — and the quarantine lifts without a
+    repair ever landing on that row."""
+    run_sub(_PREAMBLE + """
+from repro.runtime.freshness import FreshnessManager, oracle_tables
+N_VER = 4
+delta_batches = [S.make_delta_batch(cfg, v, rows_per_version=6, seed=3)
+                 for v in range(1, N_VER + 1)]
+src = itertools.islice(S.delta_stream(cfg, rows_per_version=6, seed=3),
+                       N_VER)
+# flip a row that version 2 of the stream will overwrite
+tgt = (int(delta_batches[1].tab[0]), int(delta_batches[1].row[0]))
+plan = FaultPlan.none(P, 40).with_bitflip(0, tgt[0], tgt[1], 9, when=1)
+fm = FreshnessManager(src, k_fresh=2, slice_cap=4, versions_per_flush=1)
+eng, outs = run_serve(faults=FaultInjector(plan), freshness=fm,
+                      n_flushes=16)
+assert fm.fully_committed
+assert eng.scrub.fully_repaired
+want = np.array(jax.device_get(
+    oracle_tables(params['tables'], delta_batches)))
+got = np.array(jax.device_get(eng.params['tables']))
+for t, size in enumerate(cfg.table_sizes):
+    assert np.array_equal(want[t, :size], got[t, :size]), t
+print('ok')
+""")
+
+
+def test_scrub_riders_add_zero_collectives_in_jaxpr():
+    """The wire contract, asserted from the jaxpr: WITH the repair rider
+    ("xrep"), the wire checksum ("wcs"), the quarantine mask and the
+    flip hook all aboard, a mono step still lowers to exactly one
+    all_to_all and a ring step to exactly P−1 ppermutes."""
+    run_sub("""
+import collections
+import jax, jax.numpy as jnp, numpy as np
+from repro import compat
+from repro.configs.base import DLRMConfig
+from repro.models import dlrm as D
+from repro.data import synthetic as S
+from repro.sharding import partition
+
+def count_collectives(closed):
+    c = collections.Counter()
+    def walk(jx):
+        for eqn in jx.eqns:
+            c[eqn.primitive.name] += 1
+            for v in eqn.params.values():
+                for sub in (v if isinstance(v, (tuple, list)) else [v]):
+                    if hasattr(sub, "jaxpr"):
+                        walk(sub.jaxpr)
+                    elif hasattr(sub, "eqns"):
+                        walk(sub)
+    walk(closed.jaxpr)
+    return c
+
+cfg = DLRMConfig(name='t', table_sizes=(100, 50, 80, 60, 90, 40),
+                 embed_dim=16, bottom_mlp=(32, 16), top_mlp=(32, 1),
+                 max_hot=4)
+mesh = compat.make_mesh((2, 4), ("data", "model"))
+params = D.init_dlrm(jax.random.PRNGKey(0), cfg, n_shards=4)
+b = S.make_batch(cfg, 64, mode='hetero', t_pad=D.padded_tables(cfg, 4),
+                 seed=1)
+dense, idx, mask = map(jnp.asarray, (b.dense, b.idx, b.mask))
+P, mb, rcap, s = 4, 2, 4, 16
+repair = {
+    'rcnt': jnp.zeros((P, mb, 1), jnp.int32),
+    'rcs': jnp.zeros((P, mb, rcap), jnp.uint32),
+    'rgid': jnp.zeros((P, mb, rcap), jnp.int32),
+    'rvec': jnp.zeros((P, mb, rcap, s), jnp.float32),
+}
+quar = jnp.full((16,), -1, jnp.int32)
+flip = jnp.zeros((P, P), jnp.uint8)
+with partition.axis_rules(mesh):
+    for pipe, want in [('mono', (1, 0)), ('ring', (0, 3))]:
+        for armed in (False, True):
+            kw = dict(repair=repair, quarantine=quar, wire_flip=flip,
+                      wire_check=True) if armed else {}
+            jx = jax.make_jaxpr(
+                lambda p, d, i, m, pipe=pipe, kw=kw:
+                D.forward_distributed(p, cfg, d, i, m, microbatches=mb,
+                                      exchange='dense',
+                                      exchange_pipeline=pipe, **kw)
+                )(params, dense, idx, mask)
+            c = count_collectives(jx)
+            got = (c['all_to_all'], c['ppermute'])
+            assert got == want, (pipe, armed, dict(c))
+print('ok')
+""")
+
+
+def test_repaired_base_row_leaves_no_stale_cache_copy():
+    """Satellite-3 coherence, end to end: corrupt the BASE copy of a row
+    whose clean copy sits in the hot cache.  Whatever order the block
+    audit and the cache audit find it in, after repair there is no
+    window where a lookup could see stale bytes: the slot either still
+    holds a copy bit-equal to the repaired base (refreshed in the SAME
+    commit) or was invalidated to a miss (base authoritative)."""
+    run_sub(_PREAMBLE + """
+from repro.serving import hot_cache as HC
+pre = HC.build_from_batch(params['tables'], batches[0].idx,
+                          batches[0].mask, 8)
+crow = int(np.asarray(pre.hot_ids)[2, 0])
+plan = FaultPlan.none(P, 40).with_bitflip(1, 2, crow, 5, when=2,
+                                          target='table')
+eng, outs = run_serve(faults=FaultInjector(plan), calibrate=True,
+                      n_flushes=14)
+st = eng.stats
+assert len(outs) == 14
+assert st.repaired_rows >= 1 and eng.scrub.fully_repaired
+check_tables(eng)
+sl = np.asarray(jax.device_get(eng.cache.slot_of))
+slot = int(sl[2, crow])
+if slot >= 0:
+    cc = np.asarray(jax.device_get(eng.cache.hot_rows))[2, slot]
+    base = np.asarray(jax.device_get(eng.params['tables']))[2, crow]
+    assert np.array_equal(cc, base), 'stale cached copy after repair'
+print('ok')
+""")
+
+
+def test_scrub_survives_eviction_and_keeps_repairing():
+    """Crash recovery interop (PR 6): a member dies mid-serve while a
+    flip is still unrepaired.  The scrubber refits to the shrunken
+    geometry WITHOUT re-blessing the on-device corruption, re-queues the
+    repair, and converges bit-exact on the survivors."""
+    run_sub(_PREAMBLE + """
+plan = (FaultPlan.none(P, 40)
+        .with_bitflip(1, 2, 7, 5, when=2)
+        .with_crash(3, 4))
+eng, outs = run_serve(faults=FaultInjector(plan), n_flushes=14)
+st = eng.stats
+assert st.evictions == 1
+assert len(outs) == 14                      # zero lost through the crash
+assert st.repaired_rows >= 1
+assert eng.scrub.fully_repaired
+check_tables(eng)
+print('ok')
+""")
